@@ -1,0 +1,70 @@
+"""Shared benchmark utilities: wall-clock timing, compiled-artifact
+accounting (the CPU-container analogue of the paper's CUDA-event timing +
+allocator deltas).
+
+Two measurement channels, mirroring the paper's methodology (App. D):
+
+  - **wall**: median of N jitted calls (block_until_ready), warmup
+    excluded — meaningful for *relative* comparisons on this CPU.
+  - **compiled**: HLO-level flops / bytes-accessed / temp-allocation from
+    ``.lower().compile()`` — hardware-independent, the number that
+    transfers to TPU. Memory deltas (Tables 1/7) use
+    ``memory_analysis().temp_size_in_bytes`` as the allocator-peak
+    analogue.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+
+import jax
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
+
+
+def time_fn(fn, *args, repeats: int = 20, warmup: int = 3) -> dict:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return {
+        "median_s": statistics.median(times),
+        "mean_s": statistics.fmean(times),
+        "min_s": min(times),
+        "repeats": repeats,
+    }
+
+
+def compiled_stats(fn, *args) -> dict:
+    lowered = jax.jit(fn).lower(*args)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "temp_bytes": mem.temp_size_in_bytes,
+        "peak_bytes": mem.peak_memory_in_bytes,
+        "argument_bytes": mem.argument_size_in_bytes,
+    }
+
+
+def save(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def fmt_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"

@@ -1,0 +1,67 @@
+"""Dense-BA position benchmark — paper §5.3 / Figure 5.
+
+Places the "obvious fix" (dense B@A, no identity matrix) inside the
+PEFT -> factored gap: position = (t_peft - t_dense) / (t_peft - t_factored),
+0% = no better than PEFT, 100% = as good as factored. The paper's finding
+is that dense-BA's position is inconsistent across hardware (sometimes
+negative); the factored norm is the robust fix. We measure the position on
+this host at module level across the paper's shape grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import save, time_fn
+from repro.core import factored_norm as N
+
+# Wall-clock grid (executed, not just compiled — the MoE 8192x28672 shape
+# stays in norm_memory where it is compile-only; its 3.3 GB eye would take
+# minutes per trial on one CPU core).
+GRID = [(2048, 2048, 384), (4096, 4096, 384), (4096, 11008, 384)]
+S = 2.0
+
+
+def run(dtype=jnp.float32, verbose: bool = True) -> list[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for d_out, d_in, r in GRID:
+        kw, ka, kb = jax.random.split(jax.random.fold_in(key, d_out * d_in),
+                                      3)
+        W = jax.random.normal(kw, (d_out, d_in), dtype)
+        A = jax.random.normal(ka, (r, d_in), dtype) * 0.02
+        B = jax.random.normal(kb, (d_out, r), dtype) * 0.02
+        times = {}
+        for name, fn in {
+            "peft_eye": functools.partial(N.norm_peft_eye, s=S),
+            "dense_ba": functools.partial(N.norm_dense_ba, s=S),
+            "factored": functools.partial(N.factored_norm, s=S,
+                                          chunk_mb=256),
+        }.items():
+            times[name] = time_fn(jax.jit(fn), W, A, B,
+                                  repeats=3, warmup=1)["median_s"]
+        gap = times["peft_eye"] - times["factored"]
+        pos = ((times["peft_eye"] - times["dense_ba"]) / gap
+               if abs(gap) > 1e-12 else 0.0)
+        row = {"shape": f"{d_out}x{d_in}", "rank": r, **times,
+               "dense_ba_position": pos}
+        rows.append(row)
+        if verbose:
+            print(f"  {row['shape']:>12}: peft {times['peft_eye']*1e3:7.1f}ms"
+                  f"  dense {times['dense_ba']*1e3:7.1f}ms  factored "
+                  f"{times['factored']*1e3:7.1f}ms  -> position "
+                  f"{100 * pos:5.1f}%")
+    save("dense_ba", rows)
+    return rows
+
+
+def main() -> None:
+    print("# Dense-BA position in the PEFT->factored gap (paper Fig 5), "
+          "fp32")
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Norm memory benchmark — paper Tables 1 & 7 / Figure 9.
+
+Compares the three norm implementations (PEFT identity-matrix, dense B@A,
+factored) on the paper's shape grid: theoretical persistent working set,
+compiled temp-allocation delta (the allocator-peak analogue), and HLO
+bytes-accessed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import compiled_stats, fmt_bytes, save
+from repro.core import factored_norm as N
+
+# Paper Table 7 grid: (d_out, d_in, rank).
+GRID = [
+    (4096, 4096, 64),
+    (4096, 4096, 384),
+    (4096, 4096, 512),
+    (8192, 8192, 384),
+    (8192, 8192, 512),
+    (8192, 8192, 768),
+    (4096, 11008, 384),
+    (8192, 28672, 384),   # the MoE shape: paper's 11x measured win
+]
+S = 2.0
+
+
+def theory_bytes(d_out, d_in, r, dtype_bytes=4):
+    """Persistent working set (paper Table 1): PEFT = eye + dense product;
+    factored = U + G."""
+    peft = (d_in * d_in + d_out * d_in) * dtype_bytes
+    dense = d_out * d_in * dtype_bytes
+    factored = (d_out * r + r * r) * dtype_bytes
+    return peft, dense, factored
+
+
+def run(dtype=jnp.float32, verbose: bool = True) -> list[dict]:
+    rows = []
+    for d_out, d_in, r in GRID:
+        W = jax.ShapeDtypeStruct((d_out, d_in), dtype)
+        A = jax.ShapeDtypeStruct((r, d_in), dtype)
+        B = jax.ShapeDtypeStruct((d_out, r), dtype)
+
+        impls = {
+            "peft_eye": functools.partial(N.norm_peft_eye, s=S),
+            "dense_ba": functools.partial(N.norm_dense_ba, s=S),
+            "factored": functools.partial(N.factored_norm, s=S,
+                                          chunk_mb=256),
+        }
+        stats = {k: compiled_stats(fn, W, A, B) for k, fn in impls.items()}
+        t_peft, t_dense, t_fact = theory_bytes(d_out, d_in, r)
+        row = {
+            "shape": f"{d_out}x{d_in}", "rank": r,
+            "theory": {"peft": t_peft, "dense_ba": t_dense,
+                       "factored": t_fact,
+                       "reduction": t_peft / t_fact},
+            "measured_temp": {k: v["temp_bytes"] for k, v in stats.items()},
+            "bytes_accessed": {k: v["bytes_accessed"]
+                               for k, v in stats.items()},
+            "measured_reduction": (stats["peft_eye"]["temp_bytes"]
+                                   / max(stats["factored"]["temp_bytes"],
+                                         1)),
+        }
+        rows.append(row)
+        if verbose:
+            print(f"  {row['shape']:>12} r={r:<4} "
+                  f"theory {fmt_bytes(t_peft):>8} -> "
+                  f"{fmt_bytes(t_fact):>8} ({row['theory']['reduction']:5.1f}x) | "
+                  f"temp {fmt_bytes(row['measured_temp']['peft_eye']):>8} -> "
+                  f"{fmt_bytes(row['measured_temp']['factored']):>8} "
+                  f"({row['measured_reduction']:4.1f}x)")
+    save("norm_memory", rows)
+    return rows
+
+
+def main() -> None:
+    print("# Norm memory (paper Tables 1/7): PEFT-eye vs dense-BA vs "
+          "factored, fp32")
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Roofline table aggregator — reads results/dryrun/*.json (written by
+``python -m repro.launch.dryrun``) and renders the per-(arch x shape)
+roofline table for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import save
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def load(mesh: str = "16x16") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") == mesh:
+            rows.append(rec)
+    return rows
+
+
+def render_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful (6ND/HLO) | peak GiB | fits |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        t = r["roofline"]
+        mem = r["memory"]
+        uf = r.get("useful_fraction")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+            f"{t['dominant']} | "
+            f"{uf if uf is None else round(uf, 3)} | "
+            f"{(mem['peak_bytes'] + mem['argument_bytes'] - mem.get('alias_bytes', 0)) / 2**30:.2f} | "
+            f"{'Y' if mem['fits_16g'] else 'N'} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    rows = load("16x16")
+    if not rows:
+        print(f"# Roofline: no dry-run records in {DRYRUN_DIR} — run "
+              "`python -m repro.launch.dryrun` first")
+        return
+    print(f"# Roofline baseline ({len(rows)} single-pod cells)")
+    print(render_markdown(rows))
+    mp = load("2x16x16")
+    print(f"\n# Multi-pod cells compiled: {len(mp)}")
+    save("roofline_table", {"single_pod": rows, "multi_pod": mp})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--skip NAME]
+
+Table map (paper -> module):
+    Table 1/7, Fig 9   norm_memory     norm working-set / allocator deltas
+    Fig 1              stability       stable vs naive compose error
+    Table 9, Fig 6/7   compose_bench   fused-compose traffic + wall
+    Table 6, Fig 10    rank_scaling    norm cost vs rank
+    Table 4/5/8        model_level     model-level train/infer configs
+    Fig 5              dense_ba        dense-BA position in the gap
+    (ours) §Roofline   roofline_run    dry-run roofline aggregation
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (compose_bench, dense_ba, model_level, norm_memory,
+                        rank_scaling, roofline_run, stability)
+
+SUITES = [
+    ("norm_memory", norm_memory.main),
+    ("stability", stability.main),
+    ("compose_bench", compose_bench.main),
+    ("rank_scaling", rank_scaling.main),
+    ("model_level", model_level.main),
+    ("dense_ba", dense_ba.main),
+    ("roofline_run", roofline_run.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip", action="append", default=[])
+    args = ap.parse_args()
+
+    failures = []
+    for name, fn in SUITES:
+        if args.only and name != args.only:
+            continue
+        if name in args.skip:
+            continue
+        print(f"\n=== {name} " + "=" * (60 - len(name)))
+        t0 = time.time()
+        try:
+            fn()
+            print(f"=== {name} done in {time.time() - t0:.1f}s")
+        except Exception:  # noqa: BLE001 — benchmark isolation
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED suites: {failures}")
+        sys.exit(1)
+    print("\nall benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

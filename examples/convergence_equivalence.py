@@ -1,0 +1,81 @@
+"""Convergence equivalence — paper §5.9 / Table 10, CPU-scale analogue.
+
+Trains the same DoRA fine-tune twice per seed — once with the eager
+(Tier-3) compose path, once with the fused Pallas kernels (interpret mode
+executes the identical kernel arithmetic on CPU) — and reports per-step
+loss deltas. The paper's claim: the fused kernels do not change training
+dynamics (grand mean per-step |Δ| = 7.1e-4 over 2000 steps at bf16; we run
+a reduced setting and expect deltas at the fp32 tolerance floor, since
+interpret mode executes the same fp32 accumulation as the kernel).
+
+    PYTHONPATH=src python examples/convergence_equivalence.py [--steps 60]
+"""
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import DoRAConfig                          # noqa: E402
+from repro.data import DataConfig, SyntheticLMDataset      # noqa: E402
+from repro.launch.steps import StepConfig, make_train_step  # noqa: E402
+from repro.models import init_adapters, init_params        # noqa: E402
+from repro.models.config import ModelConfig                # noqa: E402
+from repro.optim import OptimizerConfig, adamw_init        # noqa: E402
+
+MCFG = ModelConfig(
+    name="conv-check", family="dense",
+    num_layers=2, d_model=256, num_heads=4, num_kv_heads=2,
+    d_ff=512, vocab_size=2048, dtype=jnp.float32, remat="none")
+
+
+def run_one(mode: str, seed: int, steps: int, ds, dcfg_kw) -> list[float]:
+    dcfg = DoRAConfig(rank=16, alpha=32.0, mode=mode, **dcfg_kw)
+    scfg = StepConfig(dora=dcfg, optim=OptimizerConfig(
+        lr=1e-3, warmup_steps=5, total_steps=steps))
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key, MCFG)
+    adapters = init_adapters(jax.random.fold_in(key, 1), MCFG, params, dcfg)
+    opt = adamw_init(adapters)
+    step_fn = jax.jit(make_train_step(MCFG, scfg, None, batch=4, seq=64))
+    losses = []
+    for i in range(steps):
+        b = ds.host_batch_np(i)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        adapters, opt, m = step_fn(params, adapters, opt, batch)
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--seeds", type=int, default=3)
+    args = ap.parse_args()
+
+    ds = SyntheticLMDataset(DataConfig(
+        vocab_size=MCFG.vocab_size, seq_len=64, global_batch=4, seed=99))
+
+    print(f"# eager vs fused(interpret) x {args.seeds} seeds x "
+          f"{args.steps} steps ({MCFG.name})")
+    all_means = []
+    for seed in range(args.seeds):
+        eager = run_one("eager", seed, args.steps, ds, {})
+        fused = run_one("interpret", seed, args.steps, ds, {})
+        d = np.abs(np.asarray(eager) - np.asarray(fused))
+        all_means.append(d.mean())
+        print(f"  seed {seed}: mean|Δ|={d.mean():.2e}  max|Δ|={d.max():.2e}"
+              f"  final eager {eager[-1]:.4f} fused {fused[-1]:.4f} "
+              f"(|Δ|={abs(eager[-1]-fused[-1]):.2e})")
+    grand = float(np.mean(all_means))
+    print(f"grand mean per-step |Δ| = {grand:.2e} "
+          f"(paper Table 10 analogue: 7.1e-4 at bf16/2000 steps)")
+    assert grand < 5e-3, "fused/eager training curves diverged"
+    print("OK: fused kernels do not change training dynamics")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Quickstart: adapt one linear layer with high-rank DoRA.
+
+Shows the public API end to end on one weight matrix:
+  1. init DoRA params (A, B, magnitude m = ||W||_row),
+  2. the factored norm == the dense-materialization norm (but without the
+     [d_out, d_in] product),
+  3. a DoRA forward + a few gradient steps on a toy regression,
+  4. the three-tier dispatch in action.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (DoRAConfig, dora_linear, init_dora_params,
+                        norm_dense_ba)
+from repro.core.factored_norm import factored_norm
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    d_out, d_in, rank = 1024, 2048, 64
+
+    cfg = DoRAConfig(rank=rank, alpha=128.0, mode="eager")
+    W = jax.random.normal(key, (d_out, d_in), jnp.float32) * 0.02
+    adapter = init_dora_params(jax.random.fold_in(key, 1), W, cfg)
+    print(f"DoRA r={rank}: A {adapter['A'].shape}, B {adapter['B'].shape}, "
+          f"m {adapter['m'].shape}, s={cfg.scaling:.3f} (rsLoRA)")
+
+    # --- 2. factored norm vs dense reference --------------------------------
+    # Perturb B so the norm is non-trivial (B=0 at init).
+    adapter["B"] = 0.02 * jax.random.normal(jax.random.fold_in(key, 2),
+                                            adapter["B"].shape)
+    n_f = factored_norm(W, adapter["A"], adapter["B"], cfg.scaling)
+    n_d = norm_dense_ba(W, adapter["A"], adapter["B"], cfg.scaling)
+    print(f"factored vs dense norm: max |Δ| = "
+          f"{float(jnp.max(jnp.abs(n_f - n_d))):.2e}  "
+          f"(no [d_out, d_in] product materialized)")
+
+    # --- 3. fit a toy target ------------------------------------------------
+    x = jax.random.normal(jax.random.fold_in(key, 3), (256, d_in))
+    y_target = jax.random.normal(jax.random.fold_in(key, 4), (256, d_out))
+
+    @jax.jit
+    def loss_fn(ad):
+        y = dora_linear(x, W, ad, cfg, training=True)
+        return jnp.mean((y - y_target) ** 2)
+
+    lr = 1e-2
+    ad = adapter
+    for step in range(20):
+        loss, g = jax.value_and_grad(loss_fn)(ad)
+        ad = jax.tree.map(lambda p, gi: p - lr * gi, ad, g)
+        if step % 5 == 0 or step == 19:
+            print(f"  step {step:2d}  loss {float(loss):.4f}")
+
+    # --- 4. dispatch tiers ---------------------------------------------------
+    from repro.core import Tier, select_tier
+    for rows, d in [(8192, 4096), (64, 512)]:
+        t = select_tier(DoRAConfig(mode="auto"), training=True,
+                        rows=rows, d_out=d)
+        print(f"dispatch(rows={rows}, d_out={d}, backend="
+              f"{jax.default_backend()}): {t.name}")
+    print("on TPU the first shape takes FUSED_BWD (above the paper's "
+          "crossover); on CPU everything falls back to EAGER")
+
+
+if __name__ == "__main__":
+    main()

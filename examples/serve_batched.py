@@ -1,0 +1,62 @@
+"""Batched serving example: prefill + decode with a DoRA-adapted model.
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+Serves a batch of 4 requests against the smoke-scale qwen2-7b family
+config: one jitted prefill builds the KV cache for all requests at once,
+then the decode step is reused per generated token (cache donated =
+in-place). This is the serving shape the ``decode_32k`` / ``long_500k``
+dry-run cells lower at production scale.
+"""
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config                      # noqa: E402
+from repro.core import DoRAConfig                         # noqa: E402
+from repro.launch.serve import generate                   # noqa: E402
+from repro.launch.steps import StepConfig                 # noqa: E402
+from repro.launch.train import build_state                # noqa: E402
+
+
+def main() -> None:
+    mcfg = get_config("qwen2-7b", smoke=True)
+    dcfg = DoRAConfig(rank=8, alpha=16.0, mode="auto")
+    scfg = StepConfig(dora=dcfg)
+    params, adapters, _ = build_state(mcfg, dcfg, seed=0)
+
+    batch, prompt_len, gen_len = 4, 24, 12
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, mcfg.vocab_size, (batch, prompt_len),
+                           dtype=np.int32)
+
+    t0 = time.time()
+    toks = generate(mcfg, params, adapters, scfg, prompts,
+                    gen_len=gen_len, max_len=prompt_len + gen_len,
+                    temperature=0.8, seed=42)
+    dt = time.time() - t0
+    toks = np.asarray(toks)
+    print(f"served {batch} requests x {gen_len} new tokens in {dt:.1f}s")
+    for b in range(batch):
+        gen = toks[b, prompt_len:].tolist()
+        print(f"  req{b}: prompt[-3:]={toks[b, prompt_len-3:prompt_len]"
+              f".tolist()} -> generated {gen}")
+    assert toks.shape == (batch, prompt_len + gen_len)
+    # greedy decode twice == deterministic
+    toks2 = np.asarray(generate(mcfg, params, adapters, scfg, prompts,
+                                gen_len=gen_len,
+                                max_len=prompt_len + gen_len,
+                                temperature=0.0))
+    toks3 = np.asarray(generate(mcfg, params, adapters, scfg, prompts,
+                                gen_len=gen_len,
+                                max_len=prompt_len + gen_len,
+                                temperature=0.0))
+    assert np.array_equal(toks2, toks3), "greedy decode must be deterministic"
+    print("greedy decode deterministic: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end driver: DoRA-fine-tune a ~100M-param transformer for a few
+hundred steps on the synthetic pipeline, with checkpointing + resume.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+
+This is the deliverable-(b) end-to-end example: real model (~100M params:
+12L x d512, GQA, SwiGLU), real data pipeline, AdamW over adapters only,
+cosine schedule, checkpoint every 50 steps, auto-resume if re-launched.
+The loss falling well below the unigram entropy of the synthetic stream
+demonstrates the adapters are learning the stream's bigram structure
+through frozen base weights.
+"""
+import argparse
+import sys
+
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import train  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+import repro.configs as configs  # noqa: E402
+
+# ~100M params: 12 x (4*512^2 + 3*512*1408) + 2*32768*512 ≈ 0.07B weights
+M100 = ModelConfig(
+    name="repro-100m", family="dense",
+    num_layers=12, d_model=512, num_heads=8, num_kv_heads=4,
+    d_ff=1408, vocab_size=32768, dtype=jnp.float32, remat="none")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--rank", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args_in = ap.parse_args()
+
+    # Register the 100M config under a temporary id so the standard driver
+    # (the same one the TPU launch uses) can run it.
+    import types
+    mod = types.ModuleType("repro.configs._train100m")
+    mod.CONFIG = M100
+    mod.SMOKE = M100
+    sys.modules["repro.configs._train100m"] = mod
+    configs._MODULES["repro-100m"] = "_train100m"
+
+    n = M100.count_params()
+    print(f"model: {M100.name} ({n/1e6:.0f}M params), "
+          f"steps={args_in.steps}, batch={args_in.batch}, "
+          f"seq={args_in.seq}, rank={args_in.rank}")
+
+    ns = argparse.Namespace(
+        arch="repro-100m", smoke=False, steps=args_in.steps,
+        batch=args_in.batch, seq=args_in.seq, rank=args_in.rank,
+        alpha=2.0 * args_in.rank, dora_mode="auto", norm_impl="factored",
+        lr=3e-3, warmup=20, clip_norm=1.0, loss_tokens=None, grad_accum=1,
+        seed=0, data_seed=1234, ckpt_dir=args_in.ckpt_dir, ckpt_every=50,
+        ckpt_keep=2, resume=True, heartbeat_dir="", log_every=10)
+    out = train(ns)
+    first, last = out["losses"][0], out["final_loss"]
+    assert last < first, "loss did not decrease"
+    print(f"OK: loss {first:.3f} -> {last:.3f} over {out['steps']} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Inject the final roofline table into EXPERIMENTS.md (replaces the
+<!-- ROOFLINE_TABLE --> marker with the rendered table from
+results/dryrun/*.json)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.roofline_run import load, render_markdown  # noqa: E402
+
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def main() -> None:
+    rows = load("16x16")
+    mp = load("2x16x16")
+    table = render_markdown(rows)
+    block = (f"{len(rows)} single-pod cells (+ {len(mp)} multi-pod "
+             f"compiles):\n\n" + table + "\n")
+    path = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    if MARK in text:
+        text = text.replace(MARK, block)
+    else:
+        # replace the previously injected table: regenerate whole file is
+        # overkill; append an updated section instead
+        text += "\n### Updated roofline table\n\n" + block
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"injected {len(rows)} single-pod rows, {len(mp)} multi-pod")
+
+
+if __name__ == "__main__":
+    main()

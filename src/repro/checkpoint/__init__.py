@@ -1,0 +1,15 @@
+"""Checkpoint + fault-tolerance substrate: atomic npz shards, manifest with
+content hashes, keep-k GC, latest-resume, preemption handling, heartbeats."""
+from repro.checkpoint.store import (
+    CheckpointConfig, save_checkpoint, restore_checkpoint, latest_step,
+    garbage_collect,
+)
+from repro.checkpoint.fault import (
+    PreemptionHandler, Heartbeat, StragglerMonitor,
+)
+
+__all__ = [
+    "CheckpointConfig", "save_checkpoint", "restore_checkpoint",
+    "latest_step", "garbage_collect", "PreemptionHandler", "Heartbeat",
+    "StragglerMonitor",
+]

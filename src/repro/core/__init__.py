@@ -1,0 +1,24 @@
+"""Core DoRA library — the paper's contribution as composable JAX modules."""
+from repro.core.config import DoRAConfig
+from repro.core.adapter import (
+    dora_linear, dora_linear_stacked, init_dora_params,
+    compute_weight_norm, compose_delta,
+)
+# NOTE: the factored_norm *function* is deliberately not re-exported at
+# package level — it would shadow the repro.core.factored_norm submodule.
+from repro.core.factored_norm import (
+    factored_norm_terms, factored_norm_sharded,
+    assemble_norm, norm_peft_eye, norm_dense_ba, dtype_eps,
+)
+from repro.core.compose import (
+    compose_stable, compose_naive, magnitude_scale,
+)
+from repro.core.dispatch import Tier, select_tier
+
+__all__ = [
+    "DoRAConfig", "dora_linear", "dora_linear_stacked", "init_dora_params",
+    "compute_weight_norm", "compose_delta",
+    "factored_norm_terms", "factored_norm_sharded", "assemble_norm",
+    "norm_peft_eye", "norm_dense_ba", "dtype_eps", "compose_stable",
+    "compose_naive", "magnitude_scale", "Tier", "select_tier",
+]

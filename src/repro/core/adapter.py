@@ -1,0 +1,175 @@
+"""DoRA adapter: parameter init + the adapted linear application.
+
+Forward contract (paper App. A):
+
+    ΔY = g ⊙ (s · X·Aᵀ·Bᵀ) + (g − 1) ⊙ Y_base,   Y = Y_base + ΔY
+    g  = m / max(w_norm, ε)            (fp32, outside the no-grad context)
+    w_norm = ||W + s·B·A||_row         (fp32, detached, recomputed per step)
+
+Bias is subtracted before the compose and re-added after (i.e. the compose
+operates on the bias-free Y_base); the norm is recomputed every forward and
+never cached across steps. Weights follow the paper's [d_out, d_in]
+convention with per-output-row norms.
+
+``dora_linear`` is the single integration point the models use; it routes
+through the three-tier dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compose as _compose
+from repro.core import dispatch as _dispatch
+from repro.core import factored_norm as _norm
+from repro.core.config import DoRAConfig
+
+_F32 = jnp.float32
+
+
+def init_dora_params(key, W, cfg: DoRAConfig, *, m_dtype=jnp.float32):
+    """Init A ~ U(-1/√d_in, 1/√d_in) (PEFT's LoRA-A default), B = 0,
+    m = ||W||_row (DoRA init). Supports stacked weights [..., d_out, d_in]
+    (layer stacks / experts) by vmapping over leading dims."""
+    if W.ndim > 2:
+        keys = jax.random.split(key, W.shape[0])
+        return jax.vmap(
+            lambda k, w: init_dora_params(k, w, cfg, m_dtype=m_dtype)
+        )(keys, W)
+    d_out, d_in = W.shape
+    bound = 1.0 / (d_in ** 0.5)
+    A = jax.random.uniform(key, (cfg.rank, d_in), W.dtype, -bound, bound)
+    B = jnp.zeros((d_out, cfg.rank), W.dtype)
+    # At init B = 0 so ||W + sBA|| = ||W||: reuse the factored base term.
+    base_sq, _, _ = _norm.factored_norm_terms(W, A, B, compute_cross=False)
+    m = jnp.sqrt(jnp.maximum(base_sq, 0.0)).astype(m_dtype)
+    out = {"A": A, "B": B, "m": m}
+    if cfg.cache_base_norm:
+        # Paper §2.3 future work, implemented (H3.2): W is frozen, so
+        # ||W||²_row is precomputed once into a [d_out] fp32 buffer and
+        # carried in the adapter tree — the per-step norm never re-reads
+        # W for the base term.
+        out["base_sq"] = base_sq
+    return out
+
+
+def compute_weight_norm(W, A, B, cfg: DoRAConfig, *, axis_name=None,
+                        base_sq_cache=None, interpret: bool | None = None):
+    """Detached fp32 [d_out] row norm of the composed weight, routed through
+    the configured implementation."""
+    impl = cfg.norm_impl
+    if axis_name is not None:
+        # Sharded accumulation (beyond-paper, DESIGN.md §5): only the
+        # factored algebra distributes; the baselines would all-gather.
+        return _norm.factored_norm_sharded(
+            W, A, B, cfg.scaling, axis_name=axis_name,
+            chunk_mb=cfg.resolve_chunk_mb(),
+            base_sq_cache=base_sq_cache)
+    if impl == "peft_eye":
+        return _norm.norm_peft_eye(W, A, B, cfg.scaling)
+    if impl == "dense_ba":
+        return _norm.norm_dense_ba(W, A, B, cfg.scaling)
+    mode = cfg.resolve_mode()
+    if mode in ("fused", "interpret"):
+        from repro.kernels import ops as _kops
+        return _kops.fused_norm(
+            W, A, B, cfg.scaling,
+            block_rows=cfg.norm_block_rows, block_k=cfg.norm_block_k,
+            interpret=(mode == "interpret" if interpret is None
+                       else interpret),
+            base_sq_cache=base_sq_cache)
+    if mode == "auto" and _dispatch._platform() == "tpu" \
+            and _dispatch.shape_supported(W.shape[0]):
+        from repro.kernels import ops as _kops
+        return _kops.fused_norm(
+            W, A, B, cfg.scaling,
+            block_rows=cfg.norm_block_rows, block_k=cfg.norm_block_k,
+            interpret=False, base_sq_cache=base_sq_cache)
+    return _norm.factored_norm(W, A, B, cfg.scaling,
+                               chunk_mb=cfg.resolve_chunk_mb(),
+                               base_sq_cache=base_sq_cache)
+
+
+def compose_delta(y_base, y_lora, g, cfg: DoRAConfig, *, training: bool):
+    """Route the compose through the three-tier dispatch."""
+    _compose.check_broadcast(g, y_base)
+    rows = 1
+    for d in y_base.shape[:-1]:
+        rows *= d
+    tier = _dispatch.select_tier(cfg, training=training, rows=rows,
+                                 d_out=y_base.shape[-1])
+    if tier is _dispatch.Tier.EAGER:
+        return _compose.compose_stable(y_base, y_lora, g, cfg.scaling)
+    from repro.kernels import ops as _kops
+    interpret = _dispatch.use_interpret(cfg)
+    if tier is _dispatch.Tier.FUSED_FWD:
+        g = jax.lax.stop_gradient(g)
+        return _kops.fused_compose(
+            y_base, y_lora, g, cfg.scaling, save_inner=False,
+            mag_grad=False, block_m=cfg.block_rows, block_n=cfg.block_cols,
+            interpret=interpret)
+    return _kops.fused_compose(
+        y_base, y_lora, g, cfg.scaling,
+        save_inner=cfg.save_inner and cfg.magnitude_trainable,
+        mag_grad=cfg.magnitude_trainable,
+        block_m=cfg.block_rows, block_n=cfg.block_cols,
+        interpret=interpret)
+
+
+def dora_linear(x, W, adapter: dict[str, Any], cfg: DoRAConfig, *,
+                bias=None, training: bool = True, axis_name=None,
+                base_sq_cache=None, constrain=None):
+    """Adapted linear: x [..., d_in] → y [..., d_out].
+
+    W: frozen [d_out, d_in]; adapter: {"A": [r, d_in], "B": [d_out, r],
+    "m": [d_out]}. ``axis_name``: if W/A are d_in-sharded inside shard_map,
+    the norm partials psum over this axis. ``constrain``: optional
+    sharding-constraint fn applied to y_base / y_lora — row-parallel call
+    sites pin the sequence-parallel sharding here so the partial sums
+    lower to reduce-scatter and the compose runs seq-sharded
+    (EXPERIMENTS.md §Perf H1.4).
+    """
+    A, B, m = adapter["A"], adapter["B"], adapter["m"]
+    if base_sq_cache is None and "base_sq" in adapter:
+        base_sq_cache = adapter["base_sq"]
+    if base_sq_cache is not None:
+        base_sq_cache = jax.lax.stop_gradient(base_sq_cache)
+    if not cfg.magnitude_trainable:
+        m = jax.lax.stop_gradient(m)
+    w_norm = compute_weight_norm(W, A, B, cfg, axis_name=axis_name,
+                                 base_sq_cache=base_sq_cache)
+    eps = _norm.dtype_eps(x.dtype)
+    g = _compose.magnitude_scale(m, w_norm, eps)
+
+    W = jax.lax.stop_gradient(W)
+    y_base = x @ W.T
+    y_lora = (x @ A.T) @ B.T
+    if constrain is not None:
+        y_base = constrain(y_base)
+        y_lora = constrain(y_lora)
+    delta = compose_delta(y_base, y_lora, g, cfg, training=training)
+    y = y_base + delta
+    if bias is not None:
+        y = y + bias  # bias re-added after the compose (paper App. A)
+    return y
+
+
+def dora_linear_stacked(x, W, adapter, cfg: DoRAConfig, *, training=True):
+    """vmap over a leading stack dim (e.g. experts): x [E, ..., d_in],
+    W [E, d_out, d_in], adapter leaves stacked on dim 0."""
+    return jax.vmap(
+        lambda xe, we, ad: dora_linear(xe, we, ad, cfg, training=training)
+    )(x, W, adapter)
+
+
+@dataclasses.dataclass(frozen=True)
+class DoRAParamSpec:
+    """Bookkeeping for one adapted weight: used by optimizer masking and
+    sharding-rule generation."""
+    path: str
+    d_out: int
+    d_in: int
+    rank: int

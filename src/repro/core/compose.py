@@ -1,0 +1,75 @@
+"""DoRA composition in the numerically stable form (paper §3.1).
+
+    delta = (g - 1) ⊙ base + g ⊙ s ⊙ lora,      g = m / max(w_norm, eps)
+
+The algebraically equivalent ``g ⊙ (s*lora + base) - base`` suffers
+catastrophic cancellation when g ≈ 1 — and g concentrates tightly around
+unity in practice (DoRA initializes m = ||W||_row; the paper measures 100 %
+of g values inside the bf16 collapse zone). The stable form keeps the small
+correction (g - 1) explicit and computes it in fp32.
+
+Canonical evaluation order (paper §3.1): ``s * lora`` first, then ``g·(·)``,
+so every eager path produces bitwise-identical outputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_F32 = jnp.float32
+
+
+def magnitude_scale(m, w_norm, eps: float):
+    """g = m / max(w_norm, eps), fp32 (paper Eq. 6).
+
+    Always computed *outside* the kernels so the Pallas and eager tiers share
+    one precision context (paper §2.2, §4). w_norm is already detached; m
+    carries the gradient.
+    """
+    return m.astype(_F32) / jnp.maximum(w_norm.astype(_F32), eps)
+
+
+def check_broadcast(g, base):
+    """Magnitude broadcast shape guard (paper App. B): g must broadcast
+    exclusively along the last dimension of the activation."""
+    if g.ndim != 1 or base.shape[-1] != g.shape[0]:
+        raise ValueError(
+            f"magnitude scale of shape {g.shape} does not broadcast along the "
+            f"last dim of activations with shape {base.shape}; this shape "
+            f"routes to the eager fallback in the paper and is unsupported "
+            f"here")
+
+
+def compose_stable(base, lora, g, s: float):
+    """Eager (Tier-3) stable compose; fp32 intermediates, input-dtype output."""
+    check_broadcast(g, base)
+    g32 = g.astype(_F32)
+    t = jnp.asarray(float(s), _F32) * lora.astype(_F32)   # s*lora first
+    delta = (g32 - 1.0) * base.astype(_F32) + g32 * t
+    return delta.astype(base.dtype)
+
+
+def compose_naive(base, lora, g, s: float):
+    """The cancellation-prone form, evaluated in the input dtype.
+
+    Only used by the numerical-stability benchmark (paper Fig. 1); never
+    dispatched.
+    """
+    dt = base.dtype
+    inner = jnp.asarray(s, dt) * lora + base
+    return g.astype(dt) * inner - base
+
+
+def compose_reference_fp64(base, lora, g, s: float):
+    """fp64 oracle for stability tests (paper Fig. 1 reference)."""
+    b = base.astype(jnp.float64)
+    l = lora.astype(jnp.float64)
+    g64 = g.astype(jnp.float64)
+    return (g64 - 1.0) * b + g64 * (float(s) * l)
+
+
+def compose_inner(base, lora, s: float):
+    """inner = s*lora + base — the saved tensor for the magnitude gradient
+    (paper §4 Tier 1): d_mag = rowsum(dY ⊙ inner) / w_norm."""
+    return (base.astype(_F32) + jnp.asarray(float(s), _F32)
+            * lora.astype(_F32)).astype(base.dtype)

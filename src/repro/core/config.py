@@ -1,0 +1,95 @@
+"""DoRA adapter configuration (paper §1, §4, App. B).
+
+The config mirrors the paper's runtime knobs:
+  - rank / alpha / rsLoRA scaling (``s`` appears in all three factored-norm
+    terms, paper §7),
+  - three-tier dispatch controls (mode, crossover thresholds),
+  - norm implementation selector (factored vs. the two baselines the paper
+    benchmarks against: dense ``B@A`` and PEFT's identity-matrix pattern),
+  - chunk budget for the fp32 norm accumulation (paper default 256 MB),
+  - ``save_inner`` — Tier-1 dual-output that saves ``inner = s*lora + base``
+    for the magnitude gradient (skipped when the magnitude is frozen).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+
+
+def _env_flag(name: str) -> str | None:
+    v = os.environ.get(name)
+    return v if v not in (None, "") else None
+
+
+@dataclasses.dataclass(frozen=True)
+class DoRAConfig:
+    """Configuration for DoRA adaptation of a linear layer family."""
+
+    rank: int = 384
+    alpha: float = 192.0
+    rslora: bool = True
+
+    # --- dispatch (paper §4, Table 2) ---
+    # "auto": pallas on TPU above crossover, eager otherwise.
+    # "fused": force pallas kernels (compiled for TPU).
+    # "interpret": force pallas kernels in interpret mode (CPU validation).
+    # "eager": force the pure-jnp Tier-3 path.
+    mode: str = "auto"
+    # Crossover below which launch latency dominates (paper §4: d_out >= 2048
+    # and rows * d_out >= 2048 * 6144).
+    min_fused_dout: int = 2048
+    min_fused_elems: int = 2048 * 6144
+
+    # --- norm (paper §2) ---
+    # "factored" (ours) | "dense_ba" | "peft_eye" (baselines, §5.3 / §1).
+    norm_impl: str = "factored"
+    norm_chunk_mb: int | None = 256
+    # Beyond-paper: precompute ||W||^2_row once (paper §2.3 "future work").
+    cache_base_norm: bool = False
+
+    # --- compose (paper §3) ---
+    save_inner: bool = True
+    magnitude_trainable: bool = True
+    dropout: float = 0.0
+
+    # --- kernel block shapes (perf-tunable; see EXPERIMENTS.md §Perf) ---
+    block_rows: int = 256
+    block_cols: int = 1024
+    norm_block_rows: int = 256
+    norm_block_k: int = 512
+
+    def __post_init__(self):
+        if self.rank <= 0:
+            raise ValueError(f"rank must be positive, got {self.rank}")
+        if self.mode not in ("auto", "fused", "interpret", "eager"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        if self.norm_impl not in ("factored", "dense_ba", "peft_eye"):
+            raise ValueError(f"unknown norm_impl {self.norm_impl!r}")
+        if self.dropout != 0.0:
+            raise NotImplementedError(
+                "dropout routes to the chunked eager path (paper App. B); "
+                "only p=0 is wired in this repro")
+
+    @property
+    def scaling(self) -> float:
+        """LoRA scaling s: alpha/rank, or alpha/sqrt(rank) under rsLoRA."""
+        if self.rslora:
+            return self.alpha / math.sqrt(self.rank)
+        return self.alpha / self.rank
+
+    def resolve_mode(self) -> str:
+        """Apply the paper's env-var overrides (App. B)."""
+        if _env_flag("REPRO_DORA_FUSED") == "0":
+            return "eager"
+        forced = _env_flag("REPRO_DORA_MODE")
+        if forced is not None:
+            return forced
+        return self.mode
+
+    def resolve_chunk_mb(self) -> int | None:
+        env = _env_flag("REPRO_DORA_NORM_CHUNK_MB")
+        if env is not None:
+            v = int(env)
+            return None if v <= 0 else v
+        return self.norm_chunk_mb

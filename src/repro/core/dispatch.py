@@ -1,0 +1,66 @@
+"""Three-tier runtime dispatch (paper §4, Fig. 2, Table 2).
+
+Tier 1 — fused backward: training + accelerator + above crossover. The
+         custom-vjp fused op saves ``inner`` for the magnitude gradient.
+Tier 2 — fused forward: inference + accelerator. Forward-only kernel, no
+         residuals.
+Tier 3 — eager fallback: CPU / forced-off / sub-crossover shapes / unmet
+         shape constraints (d_out % 128 != 0, bad magnitude broadcast).
+
+On TPU the "Triton available" predicate becomes "backend is tpu" (Pallas
+compiles) — or ``mode='interpret'`` for CPU validation, where the kernels run
+through the Pallas interpreter. Shapes are static under jit, so tier
+selection happens at trace time, exactly like the paper's Python-level
+``_compose_with_dispatch``.
+"""
+from __future__ import annotations
+
+import enum
+
+import jax
+
+from repro.core.config import DoRAConfig
+
+
+class Tier(enum.Enum):
+    FUSED_BWD = 1
+    FUSED_FWD = 2
+    EAGER = 3
+
+
+def _platform() -> str:
+    return jax.default_backend()
+
+
+def above_crossover(rows: int, d_out: int, cfg: DoRAConfig) -> bool:
+    """Paper §4: d_out >= 2048 and rows*d_out >= 2048*6144; below this,
+    launch latency dominates (KV projections with d_out as low as 512 fall
+    through to Tier 3)."""
+    return (d_out >= cfg.min_fused_dout
+            and rows * d_out >= cfg.min_fused_elems)
+
+
+def shape_supported(d_out: int) -> bool:
+    """Paper App. C: d_out must divide the 128-lane block."""
+    return d_out % 128 == 0
+
+
+def select_tier(cfg: DoRAConfig, *, training: bool, rows: int,
+                d_out: int) -> Tier:
+    mode = cfg.resolve_mode()
+    if mode == "eager":
+        return Tier.EAGER
+    if not shape_supported(d_out):
+        return Tier.EAGER
+    if mode in ("fused", "interpret"):
+        return Tier.FUSED_BWD if training else Tier.FUSED_FWD
+    # mode == "auto"
+    if _platform() != "tpu":
+        return Tier.EAGER
+    if not above_crossover(rows, d_out, cfg):
+        return Tier.EAGER
+    return Tier.FUSED_BWD if training else Tier.FUSED_FWD
+
+
+def use_interpret(cfg: DoRAConfig) -> bool:
+    return cfg.resolve_mode() == "interpret" or _platform() != "tpu"

@@ -1,0 +1,198 @@
+"""Factored row-wise norm computation (paper §2, Algorithm 1).
+
+Decomposes the row-wise squared norm of the composed DoRA weight
+
+    ||W + s*B*A||^2_row = ||W||^2_row  +  2s * <W, BA>_row  +  s^2 * ||BA||^2_row
+                          `-- base --'    `---- cross ----'     `--- ba_sq ---'
+
+into three terms computable through O(d_out*r + r^2) intermediates:
+
+    cross_j = rowsum(B ⊙ U)_j,   U = W @ A^T          [d_out, r]
+    ba_j    = rowsum((B @ G) ⊙ B)_j,  G = A @ A^T     [r, r]
+
+so the dense [d_out, d_in] product B@A is never materialized. All
+accumulation is fp32 (paper §2.2); the result is detached (DoRA §4.3 treats
+the norm as a constant w.r.t. gradients) and assembled as
+
+    w_norm = sqrt(max(base + 2s*cross + s^2*ba, 0)).
+
+This module is the *eager* (Tier-3) implementation plus the two baselines the
+paper benchmarks against (PEFT's identity-matrix pattern, dense B@A) and the
+sharded variant (explicit psum of the three per-row partials over the weight's
+d_in-sharding axis) that extends the paper beyond its FSDP2 limitation (§6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_F32 = jnp.float32
+
+
+def dtype_eps(dtype) -> float:
+    """Dtype-aware epsilon for the magnitude division (paper App. B)."""
+    dtype = jnp.dtype(dtype)
+    if dtype in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
+        return 1e-6
+    return 1e-12
+
+
+def chunk_size(d_out: int, d_in: int, budget_mb: int | None) -> int:
+    """cs = min(d_in, floor(budget / (d_out * 4))), aligned to 64 (Alg. 1)."""
+    if budget_mb is None:
+        return d_in
+    cs = max(1, (budget_mb * (1 << 20)) // (d_out * 4))
+    cs = min(d_in, cs)
+    if cs >= 64:
+        cs = (cs // 64) * 64
+    return cs
+
+
+def factored_norm_terms(W, A, B, *, chunk_mb: int | None = None,
+                        compute_cross: bool = True):
+    """Return (base_sq, cross, ba_sq), all fp32 [d_out].
+
+    ``compute_cross=False`` is the s=0 fast path (paper App. B): cross/ba_sq
+    are skipped and U/G never allocated.
+    """
+    d_out, d_in = W.shape
+    if not compute_cross:
+        zeros = jnp.zeros((d_out,), _F32)
+        if chunk_mb is None:
+            w32 = W.astype(_F32)
+            return jnp.sum(w32 * w32, axis=1), zeros, zeros
+        base_sq = jnp.zeros((d_out,), _F32)
+        cs = chunk_size(d_out, d_in, chunk_mb)
+        for c in range(0, d_in, cs):
+            wc = W[:, c:c + cs].astype(_F32)
+            base_sq = base_sq + jnp.sum(wc * wc, axis=1)
+        return base_sq, zeros, zeros
+
+    r = A.shape[0]
+    B32 = B.astype(_F32)
+    cs = chunk_size(d_out, d_in, chunk_mb)
+    if cs >= d_in:
+        W32 = W.astype(_F32)
+        A32 = A.astype(_F32)
+        base_sq = jnp.sum(W32 * W32, axis=1)
+        G = A32 @ A32.T                        # [r, r]
+        U = W32 @ A32.T                        # [d_out, r]
+        cross = jnp.sum(B32 * U, axis=1)
+    else:
+        base_sq = jnp.zeros((d_out,), _F32)
+        cross = jnp.zeros((d_out,), _F32)
+        G = jnp.zeros((r, r), _F32)
+        for c in range(0, d_in, cs):
+            wc = W[:, c:c + cs].astype(_F32)   # [d_out, cs]
+            ac = A[:, c:c + cs].astype(_F32)   # [r, cs]
+            base_sq = base_sq + jnp.sum(wc * wc, axis=1)
+            G = G + ac @ ac.T
+            uc = wc @ ac.T                     # [d_out, r] — not retained
+            cross = cross + jnp.sum(B32 * uc, axis=1)
+    ba_sq = jnp.sum((B32 @ G) * B32, axis=1)
+    return base_sq, cross, ba_sq
+
+
+def assemble_norm(base_sq, cross, ba_sq, s: float):
+    """w_norm = sqrt(max(base + 2s*cross + s^2*ba, 0))  (paper Eq. 5).
+
+    The clamp uses max(), which — like torch.clamp_min — propagates NaNs
+    (paper App. C) rather than collapsing them to zero.
+    """
+    two_s = jnp.asarray(2.0 * float(s), _F32)
+    s2 = jnp.asarray(float(s) * float(s), _F32)
+    wn2 = base_sq + two_s * cross + s2 * ba_sq
+    return jnp.sqrt(jnp.maximum(wn2, 0.0))
+
+
+def factored_norm(W, A, B, s: float, *, chunk_mb: int | None = None,
+                  base_sq_cache=None):
+    """Detached fp32 row-wise norm of W + s*B*A via the factored terms.
+
+    ``base_sq_cache``: beyond-paper option (paper §2.3 leaves it as future
+    work) — since W is frozen, ||W||^2_row can be precomputed once into a
+    [d_out] fp32 buffer, eliminating the rank-independent base transient.
+    """
+    if s == 0.0 and base_sq_cache is not None:
+        return jax.lax.stop_gradient(jnp.sqrt(jnp.maximum(base_sq_cache, 0.0)))
+    if base_sq_cache is not None:
+        _, cross, ba_sq = factored_norm_terms(
+            jax.lax.stop_gradient(W), A, B, chunk_mb=chunk_mb)
+        base_sq = base_sq_cache
+    else:
+        base_sq, cross, ba_sq = factored_norm_terms(
+            jax.lax.stop_gradient(W), A, B,
+            chunk_mb=chunk_mb, compute_cross=(s != 0.0))
+    out = assemble_norm(base_sq, cross, ba_sq, s)
+    return jax.lax.stop_gradient(out)
+
+
+def factored_norm_sharded(W, A, B, s: float, *, axis_name,
+                          chunk_mb: int | None = None,
+                          base_sq_cache=None):
+    """Factored norm with W (and A) sharded along d_in over ``axis_name``.
+
+    This is the distributed accumulation the paper describes as future work
+    for FSDP2 (§6): each shard computes local partials of base_sq, cross and
+    G; three small psums ([d_out], [d_out], [r, r]) replace an all-gather of
+    the weight shard. B and the output are replicated (d_out-sized vectors
+    are "small enough to replicate", paper §6). Call inside shard_map.
+
+    ``base_sq_cache``: the ALREADY-REDUCED ||W||²_row (H3.2) — skips both
+    the local W² pass and its psum.
+    """
+    d_out, _ = W.shape
+    r = A.shape[0]
+    W = jax.lax.stop_gradient(W)
+    if s == 0.0:
+        if base_sq_cache is not None:
+            return jax.lax.stop_gradient(
+                jnp.sqrt(jnp.maximum(base_sq_cache, 0.0)))
+        base_l, _, _ = factored_norm_terms(W, A, B, chunk_mb=chunk_mb,
+                                           compute_cross=False)
+        base_sq = jax.lax.psum(base_l, axis_name)
+        return jax.lax.stop_gradient(jnp.sqrt(jnp.maximum(base_sq, 0.0)))
+    A32 = A.astype(_F32)
+    B32 = B.astype(_F32)
+    G_l = A32 @ A32.T
+    U_l = W.astype(_F32) @ A32.T
+    cross_l = jnp.sum(B32 * U_l, axis=1)
+    # rowsum(B ⊙ ΣU_s) = Σ rowsum(B ⊙ U_s): cross partials sum linearly.
+    if base_sq_cache is not None:
+        base_sq = base_sq_cache
+    else:
+        W32 = W.astype(_F32)
+        base_sq = jax.lax.psum(jnp.sum(W32 * W32, axis=1), axis_name)
+    cross = jax.lax.psum(cross_l, axis_name)
+    G = jax.lax.psum(G_l, axis_name)
+    ba_sq = jnp.sum((B32 @ G) * B32, axis=1)
+    return jax.lax.stop_gradient(assemble_norm(base_sq, cross, ba_sq, s))
+
+
+# ---------------------------------------------------------------------------
+# Baselines the paper compares against (§1 code listing, §5.3).
+# ---------------------------------------------------------------------------
+
+def norm_peft_eye(W, A, B, s: float):
+    """HF PEFT's identity-matrix pattern (paper §1): materializes a
+    [d_in, d_in] identity *and* the dense B@A product."""
+    d_in = W.shape[1]
+    x_eye = jnp.eye(d_in, dtype=A.dtype)
+    lora_weight = ((x_eye @ A.T) @ B.T).T          # [d_out, d_in]
+    composed = W.astype(_F32) + float(s) * lora_weight.astype(_F32)
+    return jax.lax.stop_gradient(jnp.linalg.norm(composed, axis=1))
+
+
+def norm_dense_ba(W, A, B, s: float):
+    """Direct dense product (paper §5.3 "Dense (B@A)"): avoids the identity
+    matrix but still materializes the full [d_out, d_in] product."""
+    ba = B.astype(_F32) @ A.astype(_F32)
+    composed = W.astype(_F32) + float(s) * ba
+    return jax.lax.stop_gradient(jnp.linalg.norm(composed, axis=1))
+
+
+def norm_reference_fp64(W, A, B, s: float):
+    """fp64 oracle for tests/benchmarks."""
+    W64 = W.astype(jnp.float64)
+    ba = B.astype(jnp.float64) @ A.astype(jnp.float64)
+    return jnp.sqrt(jnp.sum((W64 + float(s) * ba) ** 2, axis=1))

@@ -1,0 +1,9 @@
+"""Data pipeline: deterministic synthetic token streams, per-host sharding,
+double-buffered prefetch."""
+from repro.data.pipeline import (
+    DataConfig, SyntheticLMDataset, make_train_iterator, prefetch,
+    host_shard_slice,
+)
+
+__all__ = ["DataConfig", "SyntheticLMDataset", "make_train_iterator",
+           "prefetch", "host_shard_slice"]

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the DoRA hot spots (compose fwd/bwd, factored
+norm, norm assembly) with jit wrappers (ops) and pure-jnp oracles (ref)."""
+from repro.kernels.ops import fused_compose, fused_norm
+
+__all__ = ["fused_compose", "fused_norm"]

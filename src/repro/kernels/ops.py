@@ -1,0 +1,180 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+  - ``fused_compose``: custom_vjp op — forward = fused compose kernel
+    (optionally dual-output saving ``inner``), backward = fused backward
+    kernel + deterministic jnp reduction for d_mag (paper §3.2).
+  - ``fused_norm``: factored-norm terms kernel + jnp Gram term + assembly
+    kernel; detached end-to-end (DoRA §4.3).
+
+Both wrappers do the shape plumbing the paper's dispatch layer does on CUDA:
+flatten leading dims, pad rows to the block shape, enforce the
+d_out % 128 == 0 constraint (paper App. C), and accept an ``interpret`` flag
+so the same kernels run on CPU for validation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dora_compose as _ck
+from repro.kernels import factored_norm as _nk
+from repro.kernels import norm_assembly as _ak
+
+_F32 = jnp.float32
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pick_block_n(n: int, cap: int) -> int:
+    """Largest multiple of 128 that divides n, at most cap."""
+    if n % 128 != 0:
+        raise ValueError(f"feature dim {n} not divisible by 128 "
+                         "(paper App. C shape constraint)")
+    for t in range(max(1, cap // 128), 0, -1):
+        if n % (128 * t) == 0:
+            return 128 * t
+    return 128
+
+
+def _pad_rows(x, bm: int):
+    m = x.shape[0]
+    pm = _round_up(m, bm)
+    if pm == m:
+        return x, m
+    return jnp.pad(x, ((0, pm - m), (0, 0))), m
+
+
+# ---------------------------------------------------------------------------
+# Fused compose with custom VJP.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _make_compose(s: float, save_inner: bool, mag_grad: bool,
+                  block_m: int, block_n: int, interpret: bool):
+    def _prep(base, g):
+        n = base.shape[-1]
+        bn = pick_block_n(n, block_n)
+        g32 = g.astype(_F32)
+        gm1 = (g32 - 1.0).reshape(1, n)
+        return bn, gm1, g32
+
+    def _flatten(x):
+        return x.reshape(-1, x.shape[-1])
+
+    @jax.custom_vjp
+    def compose(base, lora, g):
+        out, _ = _fwd(base, lora, g)
+        return out
+
+    def _fwd(base, lora, g):
+        shape = base.shape
+        bn, gm1, g32 = _prep(base, g)
+        b2, m = _pad_rows(_flatten(base), block_m)
+        l2, _ = _pad_rows(_flatten(lora), block_m)
+        bm = min(block_m, b2.shape[0])
+        if save_inner and mag_grad:
+            delta, inner = _ck.compose_fwd_pallas(
+                b2, l2, gm1, s, save_inner=True,
+                block_m=bm, block_n=bn, interpret=interpret)
+            delta = delta[:m].reshape(shape)
+            inner = inner[:m].reshape(shape)
+            res = (g32, inner, None, None)
+        else:
+            delta = _ck.compose_fwd_pallas(
+                b2, l2, gm1, s, save_inner=False,
+                block_m=bm, block_n=bn, interpret=interpret)
+            delta = delta[:m].reshape(shape)
+            res = ((g32, None, base, lora) if mag_grad
+                   else (g32, None, None, None))
+        return delta, res
+
+    def _bwd(res, dy):
+        g32, inner, base, lora = res
+        shape = dy.shape
+        n = shape[-1]
+        bn = pick_block_n(n, block_n)
+        gm1 = (g32 - 1.0).reshape(1, n)
+        gs = (g32 * s).reshape(1, n)
+        dy2, m = _pad_rows(_flatten(dy), block_m)
+        bm = min(block_m, dy2.shape[0])
+        d_base, d_lora = _ck.compose_bwd_pallas(
+            dy2, gm1, gs, block_m=bm, block_n=bn, interpret=interpret)
+        d_base = d_base[:m].reshape(shape)
+        d_lora = d_lora[:m].reshape(shape)
+        if not mag_grad:
+            d_g = jnp.zeros_like(g32)
+        else:
+            # d_g = Σ_rows dY ⊙ inner — separate deterministic reduction
+            # (paper §3.2: .sum() instead of tl.atomic_add).
+            if inner is None:
+                inner32 = base.astype(_F32) + s * lora.astype(_F32)
+            else:
+                inner32 = inner.astype(_F32)
+            d_g = jnp.sum(dy.astype(_F32) * inner32,
+                          axis=tuple(range(dy.ndim - 1)))
+        return d_base, d_lora, d_g
+
+    def fwd(base, lora, g):
+        return _fwd(base, lora, g)
+
+    compose.defvjp(fwd, _bwd)
+    return compose
+
+
+def fused_compose(base, lora, g, s: float, *,
+                  save_inner: bool = True,
+                  mag_grad: bool = True,
+                  block_m: int = 256, block_n: int = 1024,
+                  interpret: bool = False):
+    """delta = (g-1)⊙base + g⊙s⊙lora via the fused Pallas kernels.
+
+    base/lora: [..., d_out] (input dtype); g: fp32 [d_out] (differentiable —
+    carries the magnitude gradient unless ``mag_grad=False``, the paper's
+    frozen-magnitude fast path that skips the ``inner`` save entirely).
+    """
+    fn = _make_compose(float(s), bool(save_inner), bool(mag_grad),
+                       int(block_m), int(block_n), bool(interpret))
+    return fn(base, lora, g)
+
+
+# ---------------------------------------------------------------------------
+# Fused factored norm.
+# ---------------------------------------------------------------------------
+
+def fused_norm(W, A, B, s: float, *,
+               block_rows: int = 256, block_k: int = 512,
+               interpret: bool = False, base_sq_cache=None):
+    """Detached fp32 row-wise norm of W + s·B·A via the Pallas kernels."""
+    W = jax.lax.stop_gradient(W)
+    A = jax.lax.stop_gradient(A)
+    B = jax.lax.stop_gradient(B)
+    d_out, d_in = W.shape
+    r = A.shape[0]
+    br = pick_block_n(d_out, block_rows)  # d_out blocks: multiples of 128
+    bk = min(block_k, _round_up(d_in, 128))
+    # Zero-pad d_in to the chunk grid and r to the sublane size: zeros do not
+    # perturb any of the accumulated terms.
+    pk = _round_up(d_in, bk)
+    pr = _round_up(r, 8)
+    Wp = jnp.pad(W, ((0, 0), (0, pk - d_in))) if pk != d_in else W
+    Ap = jnp.pad(A, ((0, pr - r), (0, pk - d_in)))
+    Bp = jnp.pad(B, ((0, 0), (0, pr - r))) if pr != r else B
+    if s == 0.0:
+        if base_sq_cache is not None:
+            return jnp.sqrt(jnp.maximum(base_sq_cache, 0.0))
+        w32 = W.astype(_F32)
+        return jnp.sqrt(jnp.maximum(jnp.sum(w32 * w32, axis=1), 0.0))
+    base_sq, cross = _nk.norm_terms_pallas(
+        Wp, Ap, Bp, block_rows=br, block_k=bk, interpret=interpret)
+    if base_sq_cache is not None:
+        base_sq = base_sq_cache
+    A32 = A.astype(_F32)
+    B32 = B.astype(_F32)
+    G = A32 @ A32.T
+    ba_sq = jnp.sum((B32 @ G) * B32, axis=1)
+    return _ak.assemble_norm_pallas(base_sq, cross, ba_sq, s,
+                                    interpret=interpret)

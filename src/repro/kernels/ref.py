@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are *independent* dense implementations (no factored algebra, no
+chunking, no tiling) used by the allclose test sweeps and benchmarks:
+
+  - ``ref_norm_terms`` / ``ref_norm``: dense fp32 row-norm of W + s·B·A.
+  - ``ref_compose`` / ``ref_compose_dual``: fp32 stable compose.
+  - ``ref_compose_bwd``: analytic cotangents of the compose.
+  - ``ref_assemble``: Eq. 5 in fp32.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_F32 = jnp.float32
+
+
+def ref_norm_terms(W, A, B):
+    """Dense (base_sq, cross) fp32 [d_out] — oracle for norm_terms_pallas."""
+    W32 = W.astype(_F32)
+    BA = B.astype(_F32) @ A.astype(_F32)
+    base_sq = jnp.sum(W32 * W32, axis=1)
+    cross = jnp.sum(W32 * BA, axis=1)
+    return base_sq, cross
+
+
+def ref_norm(W, A, B, s: float):
+    """Dense fp32 row-wise norm of W + s·B·A."""
+    W32 = W.astype(_F32)
+    BA = B.astype(_F32) @ A.astype(_F32)
+    return jnp.linalg.norm(W32 + float(s) * BA, axis=1)
+
+
+def ref_assemble(base_sq, cross, ba_sq, s: float):
+    s = float(s)
+    return jnp.sqrt(jnp.maximum(
+        base_sq.astype(_F32) + (2.0 * s) * cross.astype(_F32)
+        + (s * s) * ba_sq.astype(_F32), 0.0))
+
+
+def ref_compose(base, lora, g, s: float):
+    """Stable compose, fp32 intermediates, input-dtype output."""
+    g32 = g.astype(_F32)
+    t = jnp.asarray(float(s), _F32) * lora.astype(_F32)
+    return ((g32 - 1.0) * base.astype(_F32) + g32 * t).astype(base.dtype)
+
+
+def ref_compose_dual(base, lora, g, s: float):
+    delta = ref_compose(base, lora, g, s)
+    inner = (base.astype(_F32)
+             + jnp.asarray(float(s), _F32) * lora.astype(_F32))
+    return delta, inner.astype(base.dtype)
+
+
+def ref_compose_bwd(dy, base, lora, g, s: float):
+    """Analytic cotangents: d_base = (g-1)·dY, d_lora = g·s·dY,
+    d_g = Σ_rows dY ⊙ (s·lora + base)."""
+    g32 = g.astype(_F32)
+    dy32 = dy.astype(_F32)
+    d_base = ((g32 - 1.0) * dy32).astype(dy.dtype)
+    d_lora = ((g32 * float(s)) * dy32).astype(dy.dtype)
+    inner = base.astype(_F32) + float(s) * lora.astype(_F32)
+    d_g = jnp.sum(dy32 * inner, axis=tuple(range(dy.ndim - 1)))
+    return d_base, d_lora, d_g

@@ -1,0 +1,2 @@
+"""Distribution layer: production mesh, sharding rules, train/serve steps,
+multi-pod dry-run."""

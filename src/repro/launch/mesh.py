@@ -1,0 +1,55 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init; smoke tests and benchmarks see the real single device.
+
+Mesh layout: ``model`` (16) is the innermost axis — it stays inside one ICI
+torus slice of a v5e pod; ``data`` (16) spans the pod; ``pod`` (2) crosses
+pods over DCN. Batch shards over (pod, data); weights TP-shard over model and
+FSDP-shard over (pod, data).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 1
+    for s in shape:
+        ndev *= s
+    devices = jax.devices()[:ndev]  # single-pod = first 256 of the 512
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for mesh {shape}, have {len(devices)} — "
+            f"the dry-run must set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            f"any jax import")
+    from jax.sharding import AxisType
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes),
+                         devices=devices)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests (uses however many devices exist)."""
+    from jax.sharding import AxisType
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The batch/FSDP axes present in this mesh ((pod, data) or (data,))."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def axis_size(mesh, *names) -> int:
+    s = 1
+    for n in names:
+        if n in mesh.axis_names:
+            s *= mesh.shape[n]
+    return s

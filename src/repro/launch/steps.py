@@ -1,0 +1,253 @@
+"""Step functions (train / prefill / decode) + dry-run input specs.
+
+``make_train_step`` / ``make_prefill_step`` / ``make_decode_step`` build
+jit-able pure functions over (params, adapters, ...) with the sharding
+rules from :mod:`repro.launch.sharding` attached via in/out_shardings.
+``input_specs`` produces ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, no device allocation) — the dry-run lowers
+against these.
+
+Under pjit, the gradient all-reduce over (pod, data), the factored-norm
+partial-sum psums over the weight shard axis, and the sequence-parallel
+collectives are all derived by the SPMD partitioner from the sharding
+rules — the dry-run's compiled HLO is where we verify they are the ones
+we designed for (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, SMOKE_SHAPES, get_config
+from repro.core import DoRAConfig
+from repro.models import (adapter_shapes, cache_shapes, forward,
+                          param_shapes)
+from repro.models.config import ModelConfig
+from repro.launch import sharding as S
+from repro.optim import OptimizerConfig, adamw_update
+
+_F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    """Everything the step builders need beyond the model config."""
+    dora: DoRAConfig = DoRAConfig(rank=384, alpha=192.0, mode="auto")
+    optim: OptimizerConfig = OptimizerConfig()
+    # paper §5.1: partial-sequence loss (1024 tokens) matches production
+    # RLHF memory profiles and avoids the full-seq logit spike.
+    loss_tokens: int | None = None
+    grad_accum: int = 1
+
+
+# ---------------------------------------------------------------------------
+# Loss.
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels):
+    """Mean token NLL; fp32 logsumexp (V may be sharded — SPMD reduces)."""
+    logits32 = logits.astype(_F32)
+    lse = jax.scipy.special.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+# ---------------------------------------------------------------------------
+# Steps.
+# ---------------------------------------------------------------------------
+
+def make_train_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
+                    batch: int, seq: int):
+    """(params, adapters, opt_state, batch) -> (adapters', opt_state',
+    metrics). Frozen base params receive no gradient and no optimizer
+    state."""
+    constraint = (S.make_boundary_constraint(mesh, batch=batch, seq=seq)
+                  if mesh is not None else None)
+    lt = scfg.loss_tokens
+
+    def loss_fn(adapters, params, tokens_or_embeds, labels, is_embeds):
+        kw = ({"embeds": tokens_or_embeds} if is_embeds
+              else {"tokens": tokens_or_embeds})
+        logits, _, aux = forward(
+            mcfg, params, adapters, scfg.dora, training=True,
+            boundary_constraint=constraint, loss_slice=lt, **kw)
+        lbl = labels if lt is None or lt >= labels.shape[1] \
+            else labels[:, -lt:]
+        return cross_entropy(logits, lbl) + aux
+
+    def train_step(params, adapters, opt_state, batch):
+        is_embeds = "embeds" in batch
+        x = batch["embeds"] if is_embeds else batch["tokens"]
+        labels = batch["labels"]
+        ga = scfg.grad_accum
+        if ga <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(
+                adapters, params, x, labels, is_embeds)
+        else:
+            # Gradient accumulation: scan over microbatches along batch
+            # (paper model benches use ga=8). Keeps activation memory at
+            # 1/ga with identical math.
+            b = x.shape[0]
+            assert b % ga == 0, (b, ga)
+            xm = x.reshape((ga, b // ga) + x.shape[1:])
+            lm_ = labels.reshape((ga, b // ga) + labels.shape[1:])
+
+            def micro(carry, inp):
+                xi, li = inp
+                l, g = jax.value_and_grad(loss_fn)(
+                    adapters, params, xi, li, is_embeds)
+                loss_acc, g_acc = carry
+                return (loss_acc + l,
+                        jax.tree.map(jnp.add, g_acc, g)), None
+
+            zeros = jax.tree.map(lambda a: jnp.zeros(a.shape, _F32),
+                                 adapters)
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros((), _F32), zeros), (xm, lm_))
+            loss = loss / ga
+            grads = jax.tree.map(lambda g: g / ga, grads)
+
+        new_adapters, new_opt, stats = adamw_update(
+            grads, opt_state, adapters, scfg.optim)
+        metrics = {"loss": loss, **stats}
+        return new_adapters, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
+                      batch: int, seq: int):
+    """(params, adapters, batch) -> (last_logits [B, V], cache).
+
+    Processes the full prompt and materializes the KV/SSM cache sized to
+    ``seq`` (the serving runtime hands it to the decode step)."""
+    constraint = (S.make_boundary_constraint(mesh, batch=batch, seq=seq)
+                  if mesh is not None else None)
+
+    def prefill_step(params, adapters, batch_in):
+        is_embeds = "embeds" in batch_in
+        kw = ({"embeds": batch_in["embeds"]} if is_embeds
+              else {"tokens": batch_in["tokens"]})
+        from repro.models import init_cache
+        cache = init_cache(mcfg, batch, seq)
+        logits, new_cache, _ = forward(
+            mcfg, params, adapters, scfg.dora, cache=cache, training=False,
+            boundary_constraint=constraint, loss_slice=1, **kw)
+        return logits[:, -1], new_cache
+
+    return prefill_step
+
+
+def make_decode_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
+                     batch: int):
+    """(params, adapters, cache, tokens [B,1]) -> (logits [B,V], cache').
+
+    One new token against a pre-filled cache (the ``decode_*`` /
+    ``long_*`` shapes lower THIS, not train_step)."""
+
+    def decode_step(params, adapters, cache, batch_in):
+        is_embeds = "embeds" in batch_in
+        kw = ({"embeds": batch_in["embeds"]} if is_embeds
+              else {"tokens": batch_in["tokens"]})
+        logits, new_cache, _ = forward(
+            mcfg, params, adapters, scfg.dora, cache=cache,
+            training=False, **kw)
+        return logits[:, -1], new_cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStructs; nothing allocated).
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(mcfg: ModelConfig, *, batch: int, seq: int, kind: str):
+    """Model-input ShapeDtypeStructs for one (arch, shape) cell.
+
+    ``[vlm]``/``[audio]`` archs take precomputed patch/frame embeddings
+    from the (stubbed) modality frontend; LM archs take token ids."""
+    if kind == "decode":
+        seq_in = 1
+    else:
+        seq_in = seq
+    if mcfg.frontend:
+        b = {"embeds": _sds((batch, seq_in, mcfg.d_model), mcfg.dtype)}
+    else:
+        b = {"tokens": _sds((batch, seq_in), jnp.int32)}
+    if kind == "train":
+        b["labels"] = _sds((batch, seq), jnp.int32)
+    return b
+
+
+def cell_specs(arch: str, shape_name: str, mesh, *, smoke: bool = False,
+               scfg: StepConfig | None = None):
+    """Everything the dry-run needs for one (arch × shape) cell:
+    (step_fn, example_args, in_shardings, out_shardings placeholders).
+
+    Returns a dict with keys: step, args, in_shardings, kind, mcfg.
+    """
+    mcfg = get_config(arch, smoke=smoke)
+    shape = (SMOKE_SHAPES if smoke else SHAPES)[shape_name]
+    scfg = scfg or StepConfig()
+    B, T = shape.global_batch, shape.seq_len
+    kind = shape.kind
+
+    # NOTE (H2.4, refuted): chunk-local MoE dispatch (moe_seq_chunks=tp)
+    # was measured to INCREASE collective time under GSPMD — the merged
+    # (data x model) token dim is not localized by the partitioner and
+    # the capacity buffers reshard anyway (EXPERIMENTS.md §Perf cell 2).
+    # The mechanism stays available on ModelConfig for the shard_map
+    # expert-parallel path; default off.
+
+    p_sh = S.param_sharding(mcfg, mesh)
+    a_sh = S.adapter_sharding(mcfg, scfg.dora, mesh)
+    p_sds = param_shapes(mcfg)
+    a_sds = adapter_shapes(mcfg, scfg.dora)
+    b_sds = batch_specs(mcfg, batch=B, seq=T, kind=kind)
+    b_sh = {k: (S.batch_sharding(mesh, batch=B) if v.ndim == 2
+                else NamedSharding(mesh, S.activation_spec(
+                    mesh, batch=B, seq=v.shape[1])))
+            for k, v in b_sds.items()}
+
+    if kind == "train":
+        opt_sds = {
+            "mu": jax.tree.map(
+                lambda s: _sds(s.shape, _F32), a_sds),
+            "nu": jax.tree.map(
+                lambda s: _sds(s.shape, _F32), a_sds),
+            "count": _sds((), jnp.int32),
+        }
+        opt_sh = S.opt_state_sharding(a_sh, mesh, a_sds)
+        step = make_train_step(mcfg, scfg, mesh, batch=B, seq=T)
+        args = (p_sds, a_sds, opt_sds, b_sds)
+        in_sh = (p_sh, a_sh, opt_sh, b_sh)
+        out_sh = (a_sh, opt_sh, None)
+        donate = (1, 2)   # adapters, opt_state update in place
+    elif kind == "prefill":
+        step = make_prefill_step(mcfg, scfg, mesh, batch=B, seq=T)
+        args = (p_sds, a_sds, b_sds)
+        in_sh = (p_sh, a_sh, b_sh)
+        c_sh = S.cache_sharding(mcfg, mesh, batch=B)
+        out_sh = (None, c_sh)
+        donate = ()
+    else:  # decode
+        c_sds = cache_shapes(mcfg, B, T)
+        # the pre-filled cache: len == T - 1, one slot free for the token
+        c_sh = S.cache_sharding(mcfg, mesh, batch=B)
+        step = make_decode_step(mcfg, scfg, mesh, batch=B)
+        args = (p_sds, a_sds, c_sds, b_sds)
+        in_sh = (p_sh, a_sh, c_sh, b_sh)
+        out_sh = (None, c_sh)
+        donate = (2,)     # cache updated in place (as the serve loop does)
+    return {"step": step, "args": args, "in_shardings": in_sh,
+            "out_shardings": out_sh, "kind": kind, "mcfg": mcfg,
+            "shape": shape, "donate": donate}

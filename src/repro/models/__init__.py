@@ -1,0 +1,13 @@
+"""Model zoo: dense/GQA, MoE, Mamba-1 SSM, hybrid stacks and modality
+frontend stubs — every linear projection optionally DoRA-adapted."""
+from repro.models.config import ModelConfig
+from repro.models.lm import (
+    forward, param_shapes, init_params, adapter_shapes, init_adapters,
+    cache_shapes, init_cache, adapter_param_count, DEFAULT_DORA_TARGETS,
+)
+
+__all__ = [
+    "ModelConfig", "forward", "param_shapes", "init_params",
+    "adapter_shapes", "init_adapters", "cache_shapes", "init_cache",
+    "adapter_param_count", "DEFAULT_DORA_TARGETS",
+]

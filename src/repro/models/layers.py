@@ -1,0 +1,289 @@
+"""Shared NN layers: RMSNorm, RoPE variants, attention (GQA / qk-norm /
+QKV-bias / M-RoPE / partial-rotary), SwiGLU MLP — with first-class DoRA
+adaptation of every linear via ``maybe_dora``.
+
+Weight convention follows the paper: [d_out, d_in], y = x @ Wᵀ, so the DoRA
+row-norm is over dim 1.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DoRAConfig
+from repro.core.adapter import dora_linear
+
+_F32 = jnp.float32
+
+
+def linear(x, w, bias=None):
+    y = x @ w.T
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def maybe_dora(x, w, dora: dict | None, cfg: DoRAConfig | None, *,
+               bias=None, training: bool = True, constrain=None,
+               base_sq_cache=None):
+    """Adapted linear if a DoRA adapter is present, frozen linear otherwise.
+
+    Base weights are *always* stop-gradiented here: in this framework the
+    base model is frozen and only adapters train (PEFT semantics).
+    ``constrain``: sharding constraint for row-parallel outputs (H1.4).
+    ``base_sq_cache``: precomputed ||W||²_row (paper §2.3 future work —
+    implemented here; see H3.2): skips the rank-independent base-norm
+    term, the only part of the norm that re-reads W.
+    """
+    if dora is None:
+        y = linear(x, jax.lax.stop_gradient(w), bias)
+        return constrain(y) if constrain is not None else y
+    return dora_linear(x, w, dora, cfg, bias=bias, training=training,
+                       constrain=constrain, base_sq_cache=base_sq_cache)
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    x32 = x.astype(_F32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(_F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard / partial / M-RoPE) + sinusoidal.
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=_F32) / dim))
+
+
+def rope_cos_sin(positions, dim: int, theta: float):
+    """positions [..., S] int → cos/sin [..., S, dim//2] fp32."""
+    freqs = _rope_freqs(dim, theta)
+    angles = positions.astype(_F32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, H, hd]; cos/sin [..., S, hd//2] (broadcast over heads).
+    Rotates interleaved pairs (x_even, x_odd)."""
+    x32 = x.astype(_F32)
+    x1 = x32[..., 0::2]
+    x2 = x32[..., 1::2]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    o1 = x1 * c - x2 * s
+    o2 = x2 * c + x1 * s
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def apply_rope_partial(x, cos, sin, rotary_dim: int):
+    """ChatGLM-style 2D/partial RoPE: rotate only the first ``rotary_dim``
+    channels of each head; pass the rest through."""
+    rot, rest = x[..., :rotary_dim], x[..., rotary_dim:]
+    rot = apply_rope(rot, cos, sin)
+    return jnp.concatenate([rot, rest], axis=-1)
+
+
+def mrope_cos_sin(positions3, dim: int, theta: float,
+                  sections: tuple[int, int, int]):
+    """M-RoPE (Qwen2-VL): three position streams (t, h, w) each rotating a
+    section of the head-dim pairs. positions3: [3, B, S].
+
+    For pure-text (and our stub frontends) the three streams coincide and
+    M-RoPE degenerates to standard RoPE — but the section plumbing is real.
+    """
+    assert sum(sections) == dim // 2, (sections, dim)
+    cos_t, sin_t = rope_cos_sin(positions3[0], dim, theta)
+    cos_h, sin_h = rope_cos_sin(positions3[1], dim, theta)
+    cos_w, sin_w = rope_cos_sin(positions3[2], dim, theta)
+    s0, s1, _ = sections
+    pick = lambda t, h, w: jnp.concatenate(
+        [t[..., :s0], h[..., s0:s0 + s1], w[..., s0 + s1:]], axis=-1)
+    return pick(cos_t, cos_h, cos_w), pick(sin_t, sin_h, sin_w)
+
+
+def sinusoidal_embedding(positions, dim: int):
+    """MusicGen-style fixed sinusoidal embeddings added to the input."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=_F32) / half)
+    angles = positions.astype(_F32)[..., None] * freqs
+    return jnp.concatenate([jnp.cos(angles), jnp.sin(angles)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA) with optional qk-norm, bias, rope variants and KV cache.
+# ---------------------------------------------------------------------------
+
+def _causal_mask_bias(q_len: int, kv_len: int, offset, dtype):
+    """Causal mask as an additive fp32 bias; ``offset`` = absolute position
+    of the first query row (0 for training, cache length for decode)."""
+    q_pos = offset + jnp.arange(q_len)
+    k_pos = jnp.arange(kv_len)
+    ok = k_pos[None, :] <= q_pos[:, None]
+    return jnp.where(ok, 0.0, -1e30).astype(_F32)
+
+
+def attention_core(q, k, v, *, offset=0, chunk: int | None = None):
+    """Grouped-query attention core. q: [B,S,Hq,hd]; k/v: [B,T,Hkv,hd].
+    KV heads are never materialized repeated: queries are reshaped to
+    [B,S,Hkv,group,hd] and contracted against the shared KV head.
+
+    ``chunk``: online-softmax over KV chunks (memory-efficient attention)
+    for long sequences — the S×T score matrix is never materialized whole.
+    """
+    b, s, hq, hd = q.shape
+    _, t, hkv, _ = k.shape
+    group = hq // hkv
+    # Mixed-precision attention (H3.2 cell 3): tensors stay in the input
+    # dtype (bf16); every contraction accumulates in fp32
+    # (preferred_element_type) and the softmax statistics are fp32 — the
+    # flash-attention precision discipline. Materializing K/V/probs in
+    # fp32 doubled the dominant HBM + all-to-all traffic of long-seq
+    # cells.
+    qg = q.reshape(b, s, hkv, group, hd)
+    scale = 1.0 / math.sqrt(hd)
+
+    if chunk is None or t <= chunk:
+        scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                            preferred_element_type=_F32) * scale
+        scores = scores + _causal_mask_bias(s, t, offset, _F32)[None, None,
+                                                               None]
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(q.dtype), v,
+                         preferred_element_type=_F32)
+        return out.reshape(b, s, hq, hd).astype(q.dtype)
+
+    # Online softmax over KV chunks (flash-style, lax.scan over chunks).
+    nchunks = -(-t // chunk)
+    pad = nchunks * chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunks, chunk, hkv, hd)
+    vc = v.reshape(b, nchunks, chunk, hkv, hd)
+    q_pos = offset + jnp.arange(s)
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        kci, vci, ci = inp
+        k_pos = ci * chunk + jnp.arange(chunk)
+        valid = (k_pos[None, :] <= q_pos[:, None]) & (k_pos < t)[None, :]
+        bias = jnp.where(valid, 0.0, -1e30).astype(_F32)
+        sc = jnp.einsum("bskgh,btkh->bkgst", qg, kci,
+                        preferred_element_type=_F32) * scale
+        sc = sc + bias[None, None, None]
+        m_new = jnp.maximum(m_prev, sc.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkh->bkgsh", p.astype(q.dtype), vci,
+            preferred_element_type=_F32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, group, s), -jnp.inf, _F32)
+    l0 = jnp.zeros((b, hkv, group, s), _F32)
+    acc0 = jnp.zeros((b, hkv, group, s, hd), _F32)
+    # Flash-style backward (H3.3): remat the chunk body so the backward
+    # recomputes scores/probs per chunk from q/k instead of stacking the
+    # [nchunks, ..., s, chunk] probs as scan residuals — the probs stack
+    # was the single largest HBM item of long-sequence training cells.
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, acc0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, s, hq, hd)
+    return out.astype(q.dtype)
+
+
+def attention(x, params, dora, mcfg, dcfg: DoRAConfig | None, *,
+              positions, cache=None, training=True, constrain=None):
+    """Full attention block: QKV (DoRA-adapted), rope, core, O-proj.
+
+    Returns (out, new_cache). ``cache`` = {"k","v","len"} for decode; when
+    provided, new K/V rows are written at position ``len`` and attention
+    runs over the cache prefix.
+    """
+    b, s, _ = x.shape
+    hq, hkv, hd = mcfg.num_heads, mcfg.num_kv_heads, mcfg.head_dim
+
+    def proj(name, d_out):
+        w = params[name]
+        bias = params.get(name + "_bias")
+        return maybe_dora(x, w, (dora or {}).get(name), dcfg,
+                          bias=bias, training=training)
+
+    q = proj("wq", hq * hd).reshape(b, s, hq, hd)
+    k = proj("wk", hkv * hd).reshape(b, s, hkv, hd)
+    v = proj("wv", hkv * hd).reshape(b, s, hkv, hd)
+
+    if mcfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], mcfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], mcfg.norm_eps)
+
+    if mcfg.pos_mode == "rope":
+        cos, sin = rope_cos_sin(positions, hd, mcfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    elif mcfg.pos_mode == "rope_partial":
+        rd = mcfg.rotary_dim
+        cos, sin = rope_cos_sin(positions, rd, mcfg.rope_theta)
+        q = apply_rope_partial(q, cos, sin, rd)
+        k = apply_rope_partial(k, cos, sin, rd)
+    elif mcfg.pos_mode == "mrope":
+        pos3 = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        cos, sin = mrope_cos_sin(pos3, hd, mcfg.rope_theta,
+                                 mcfg.mrope_sections)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    # "sinusoidal": absolute embeddings added at the input; nothing here.
+
+    # NOTE (H3.4, refuted): pinning q/k/v to head-parallel sharding here
+    # was measured to INCREASE collective time — with kv_heads < tp the
+    # replicated K/V gradients partial-sum over the model axis and the
+    # gathered-sequence backward adds a second reshard (EXPERIMENTS.md
+    # §Perf cell 3). GSPMD's own choice (a2a on score tiles) is cheaper.
+
+    if cache is None:
+        out = attention_core(q, k, v, offset=0, chunk=mcfg.attn_chunk)
+        new_cache = None
+    else:
+        pos = jnp.asarray(cache["len"])
+        zero = jnp.zeros((), pos.dtype)  # match index dtypes (x64-safe)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (zero, pos, zero, zero))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (zero, pos, zero, zero))
+        # mask out unwritten cache rows via the causal offset: rows beyond
+        # pos+s have k_pos > q_pos and are excluded by causality. Decode
+        # (s == 1) always takes the dense-over-cache path: its score matrix
+        # is [B, 1, Hq, T] — small — and chunking would only add scan steps.
+        out = attention_core(q, ck, cv, offset=pos,
+                             chunk=None if s == 1 else mcfg.attn_chunk)
+        new_cache = {"k": ck, "v": cv, "len": pos + s}
+
+    out = out.reshape(b, s, hq * hd)
+    wo = params["wo"]
+    # row-parallel projection: constrain output to SP sharding (H1.4)
+    y = maybe_dora(out, wo, (dora or {}).get("wo"), dcfg,
+                   training=training, constrain=constrain)
+    return y, new_cache
+
+
+def mlp_swiglu(x, params, dora, dcfg: DoRAConfig | None, *, training=True,
+               act=jax.nn.silu, constrain=None):
+    d = dora or {}
+    gate = maybe_dora(x, params["w_gate"], d.get("w_gate"), dcfg,
+                      training=training)
+    up = maybe_dora(x, params["w_up"], d.get("w_up"), dcfg,
+                    training=training)
+    h = act(gate) * up
+    # row-parallel projection: constrain output to SP sharding (H1.4)
+    return maybe_dora(h, params["w_down"], d.get("w_down"), dcfg,
+                      training=training, constrain=constrain)

@@ -1,0 +1,170 @@
+"""Mixture-of-experts FFN: shared experts + routed top-k with capacity.
+
+Dispatch strategy (TPU/GSPMD-friendly): tokens stay grouped by batch row, so
+the scatter/gather that builds the per-expert capacity buffer has a leading
+batch dimension sharded over (pod, data) — under SPMD both become fully local
+(no cross-shard scatter). Expert weights are stacked [E, ...] and shard their
+*hidden* dim over the model axis (MoE-TP): per-expert matmuls are einsums with
+a contraction psum XLA inserts automatically, identical in shape to the dense
+TP MLP. This avoids expert-parallel all-to-alls and works for expert counts
+not divisible by the mesh (qwen2-moe's 60).
+
+Buffer size is capacity-bound: cf * k * tokens * d_model — independent of E.
+Dropped tokens (position >= capacity) contribute nothing (standard GShard
+behaviour); the router can add a load-balance aux loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DoRAConfig
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+_F32 = jnp.float32
+
+
+def router_topk(x, w_router, cfg: ModelConfig):
+    """x [G,S,D] → (weights [G,S,k] fp32, idx [G,S,k] int32, aux_loss)."""
+    logits = (x.astype(_F32) @ w_router.astype(_F32).T)      # [G,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, cfg.top_k)          # [G,S,k]
+    if cfg.renorm_topk:
+        gate_w = gate_w / jnp.maximum(
+            jnp.sum(gate_w, axis=-1, keepdims=True), 1e-9)
+    aux = jnp.asarray(0.0, _F32)
+    if cfg.router_aux_coef:
+        # Switch-style load-balance loss: E * sum(f_e * p_e).
+        E = cfg.num_experts
+        me = jnp.mean(probs.reshape(-1, E), axis=0)
+        ce = jnp.mean(
+            (jax.nn.one_hot(gate_i.reshape(-1, cfg.top_k), E, dtype=_F32)
+             .sum(axis=1)), axis=0) / cfg.top_k
+        aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+    return gate_w, gate_i, aux
+
+
+def _dispatch_indices(gate_i, E: int, capacity: int):
+    """Position of each (token, k) assignment within its expert's capacity
+    buffer, via a cumsum over the flattened group sequence.
+
+    gate_i: [G, N, k] int32 → (slot [G, N, k] int32 into [E*C], keep mask).
+    """
+    G, N, k = gate_i.shape
+    flat = gate_i.reshape(G, N * k)
+    onehot = jax.nn.one_hot(flat, E, dtype=jnp.int32)          # [G, N*k, E]
+    pos = jnp.cumsum(onehot, axis=1) - 1                       # pos in expert
+    pos = jnp.take_along_axis(pos, flat[..., None], axis=2)[..., 0]
+    keep = pos < capacity
+    slot = flat * capacity + jnp.minimum(pos, capacity - 1)
+    return slot.reshape(G, N, k), keep.reshape(G, N, k)
+
+
+def _expert_ffn(buf, p, dora, dcfg, mcfg: ModelConfig, *, training):
+    """buf [G, E, C, D] → [G, E, C, D] through stacked swiglu experts.
+
+    Expert weights: gate/up [E, F, D], down [E, D, F]. DoRA adaptation of the
+    routed experts (optional) vmaps the adapted linear over E.
+    """
+    act = jax.nn.silu if mcfg.mlp_kind == "swiglu" else jax.nn.gelu
+
+    def dense():
+        h = jnp.einsum("gecd,efd->gecf", buf, p["gate"])
+        u = jnp.einsum("gecd,efd->gecf", buf, p["up"])
+        h = act(h) * u
+        return jnp.einsum("gecf,edf->gecd", h, p["down"])
+
+    if dora is None:
+        sg = jax.lax.stop_gradient
+        p = {k: sg(v) for k, v in p.items()}
+        return dense()
+
+    # DoRA-adapted experts: vmap dora_linear over the expert dim.
+    def one(bufe, we_gate, we_up, we_down, de):
+        x = bufe  # [G*C? — here [G, C, D] after moveaxis]
+        h = L.maybe_dora(x, we_gate, de.get("gate"), dcfg, training=training)
+        u = L.maybe_dora(x, we_up, de.get("up"), dcfg, training=training)
+        h = act(h) * u
+        return L.maybe_dora(h, we_down, de.get("down"), dcfg,
+                            training=training)
+
+    bufE = jnp.moveaxis(buf, 1, 0)  # [E, G, C, D]
+    outE = jax.vmap(one)(bufE, p["gate"], p["up"], p["down"], dora)
+    return jnp.moveaxis(outE, 0, 1)
+
+
+def moe_ffn(x, p, dora, mcfg: ModelConfig, dcfg: DoRAConfig | None, *,
+            training: bool = True):
+    """x [B, S, D] → (y [B, S, D], aux_loss).
+
+    p: {"router": [E, D], "gate"/"up": [E, F, D], "down": [E, D, F],
+        optional "shared": swiglu params, "shared_gate": [1, D]}.
+    dora: {"shared": {...}, "experts": {...}} or None.
+
+    ``mcfg.moe_seq_chunks = nc > 1`` (set by the launch layer to the
+    sequence-parallel shard count) makes the dispatch CHUNK-LOCAL
+    (H2.4): the sequence folds into nc groups aligned with the SP
+    shards, so the capacity-buffer scatter/gather and their backward
+    cotangent scatters never cross shards — the per-layer buffer-sized
+    all-reduces over the model axis disappear. Capacity becomes
+    per-chunk (cf·k·S_loc/E): statistically the same load, and
+    boundary-local drops replace global ones (GShard semantics either
+    way).
+    """
+    nc = mcfg.moe_seq_chunks
+    if nc > 1 and x.shape[1] % nc == 0 and (x.shape[1] // nc) > 0:
+        B0, S0, D0 = x.shape
+        xc = x.reshape(B0 * nc, S0 // nc, D0)
+        y, aux = moe_ffn(
+            xc, p, dora, dataclasses.replace(mcfg, moe_seq_chunks=0),
+            dcfg, training=training)
+        return y.reshape(B0, S0, D0), aux
+
+    G, S, D = x.shape
+    E, k = mcfg.num_experts, mcfg.top_k
+    dora = dora or {}
+
+    gate_w, gate_i, aux = router_topk(x, jax.lax.stop_gradient(p["router"]),
+                                      mcfg)
+    capacity = max(int(mcfg.capacity_factor * k * S / E), 1)
+
+    slot, keep = _dispatch_indices(gate_i, E, capacity)        # [G,S,k]
+    # Scatter tokens into the capacity buffer [G, E*C, D]; dropped → zeros.
+    # Dispatch stays in the activation dtype (bf16): every buffer slot
+    # receives at most one token, so no accumulation precision is lost,
+    # and the buffer-sized collectives halve (EXPERIMENTS.md §Perf H2.1).
+    upd = jnp.where(keep[..., None], x[:, :, None, :],
+                    jnp.zeros((), x.dtype))
+    upd = upd.reshape(G, S * k, D)                             # [G, S*k, D]
+    buf = jnp.zeros((G, E * capacity, D), x.dtype)
+    buf = buf.at[jnp.arange(G)[:, None], slot.reshape(G, S * k)].add(
+        upd, mode="drop")
+    buf = buf.reshape(G, E, capacity, D)
+
+    out_buf = _expert_ffn(buf, p, dora.get("experts"), dcfg, mcfg,
+                          training=training)                   # [G,E,C,D]
+    out_buf = out_buf.reshape(G, E * capacity, D)
+
+    # Gather back and combine with gate weights. The combine runs in the
+    # activation dtype end to end (H2.1b): an fp32 einsum here makes the
+    # whole backward cotangent chain — including the buffer-sized scatter
+    # all-reduces — fp32, doubling MoE collective bytes.
+    picked = jnp.take_along_axis(
+        out_buf, slot.reshape(G, S * k)[..., None], axis=1)    # [G,S*k,D]
+    picked = picked.reshape(G, S, k, D)
+    w = jnp.where(keep, gate_w, 0.0)
+    y = jnp.einsum("gskd,gsk->gsd", picked, w.astype(x.dtype))
+
+    if mcfg.num_shared_experts:
+        sh = L.mlp_swiglu(x, p["shared"], dora.get("shared"), dcfg,
+                          training=training)
+        if "shared_gate" in p:
+            sg = jax.nn.sigmoid(
+                x.astype(_F32) @ jax.lax.stop_gradient(
+                    p["shared_gate"]).astype(_F32).T)           # [G,S,1]
+            sh = sh.astype(_F32) * sg
+        y = y + sh.astype(_F32)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,17 @@
+"""Optimizer substrate: AdamW over adapter params only, cosine schedule,
+global-norm clipping, optional gradient compression for cross-pod reduce."""
+from repro.optim.adamw import (
+    OptimizerConfig, adamw_init, adamw_update, cosine_warmup_schedule,
+    clip_by_global_norm, global_norm,
+)
+from repro.optim.compression import (
+    compress_bf16, decompress_bf16, int8_ef_compress, int8_ef_decompress,
+    init_error_feedback,
+)
+
+__all__ = [
+    "OptimizerConfig", "adamw_init", "adamw_update",
+    "cosine_warmup_schedule", "clip_by_global_norm", "global_norm",
+    "compress_bf16", "decompress_bf16", "int8_ef_compress",
+    "int8_ef_decompress", "init_error_feedback",
+]

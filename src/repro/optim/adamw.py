@@ -1,0 +1,131 @@
+"""AdamW for DoRA fine-tuning (adapter params only; base weights frozen).
+
+Written against raw pytrees (no optax dependency in this container). Mirrors
+the paper's training setup (§5.9: AdamW, cosine-ish schedule, grad clip).
+Optimizer state lives only for adapter leaves — the frozen base model carries
+zero optimizer memory, which is the whole point of PEFT at scale.
+
+fp32 master moments regardless of param dtype; update applied in fp32 and
+cast back. Weight decay is decoupled (AdamW) and skipped for the magnitude
+vector ``m`` (a norm-like parameter) by the default mask.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+_F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 1e-4
+    betas: tuple[float, float] = (0.9, 0.999)
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float | None = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_warmup_schedule(cfg: OptimizerConfig, step):
+    """Linear warmup → cosine decay to min_lr_ratio * lr."""
+    step = jnp.asarray(step, _F32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(math.pi * prog))
+    scale = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    sq = sum(jnp.sum(jnp.square(l.astype(_F32))) for l in leaves)
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(_F32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def _default_wd_mask(path, leaf) -> bool:
+    """Decay A/B matrices; skip the magnitude vector m (norm-like) and
+    the frozen base_sq cache (H3.2 — constant, zero grad)."""
+    last = path[-1]
+    key = getattr(last, "key", getattr(last, "name", str(last)))
+    return key not in ("m", "base_sq")
+
+
+def adamw_init(params) -> dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, _F32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, cfg: OptimizerConfig, *,
+                 wd_mask=None):
+    """One AdamW step. Returns (new_params, new_state, stats).
+
+    ``wd_mask(path, leaf) -> bool``: True = apply weight decay (default:
+    everything except magnitude vectors).
+    """
+    wd_mask = wd_mask or _default_wd_mask
+    count = state["count"] + 1
+    lr = cosine_warmup_schedule(cfg, count)
+
+    pre_norm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        grads, _ = clip_by_global_norm(grads, cfg.clip_norm)
+
+    b1, b2 = cfg.betas
+    c1 = 1.0 - b1 ** count.astype(_F32)
+    c2 = 1.0 - b2 ** count.astype(_F32)
+
+    flat_g = jax.tree.flatten_with_path(grads)[0]
+    masks = {tuple(str(k) for k in path): wd_mask(path, leaf)
+             for path, leaf in flat_g}
+
+    def upd(path, p, g, mu, nu):
+        g32 = g.astype(_F32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * g32 * g32
+        mhat = mu / c1
+        nhat = nu / c2
+        step = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if masks[tuple(str(k) for k in path)] and cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(_F32)
+        new_p = (p.astype(_F32) - lr * step).astype(p.dtype)
+        return new_p, mu, nu
+
+    paths_p = jax.tree.flatten_with_path(params)
+    flat_p, treedef = paths_p[0], jax.tree.structure(params)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    flat_gl = [leaf for _, leaf in flat_g]
+
+    new_p, new_mu, new_nu = [], [], []
+    for (path, p), g, mu, nu in zip(flat_p, flat_gl, flat_mu, flat_nu):
+        a, b, c = upd(path, p, g, mu, nu)
+        new_p.append(a)
+        new_mu.append(b)
+        new_nu.append(c)
+
+    new_state = {
+        "mu": jax.tree.unflatten(treedef, new_mu),
+        "nu": jax.tree.unflatten(treedef, new_nu),
+        "count": count,
+    }
+    stats = {"lr": lr, "grad_norm": pre_norm}
+    return jax.tree.unflatten(treedef, new_p), new_state, stats

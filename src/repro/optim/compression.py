@@ -1,0 +1,68 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+At 512+ chips the adapter gradients psum over (pod, data); the pod axis
+crosses DCN where bandwidth is ~10x scarcer than ICI. Two schemes:
+
+  - **bf16 cast** (lossless enough in practice): halves DCN bytes. Safe
+    default; stateless.
+  - **int8 + error feedback**: per-tensor symmetric quantization with a
+    residual carried across steps (Seide et al. error feedback), so the
+    quantization error is re-injected instead of lost — unbiased in the
+    long run. 4x fewer DCN bytes than fp32.
+
+Both compress *before* the cross-pod reduce and decompress after; the
+within-pod (ICI) reduce stays full precision. Usage in the train step:
+
+    g_local = psum(g, 'data')                    # ICI, fp32
+    g_q, scale = int8_ef_compress(g_local, ef)   # quantize
+    g_q = psum(g_q.astype(f32), 'pod')           # DCN, 8-bit payload
+    g, ef = int8_ef_decompress(g_q, scale, ...)  # dequantize + new residual
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_F32 = jnp.float32
+
+
+def compress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def decompress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(_F32), grads)
+
+
+def init_error_feedback(grads_like):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, _F32), grads_like)
+
+
+def _quantize_one(g, ef):
+    """Symmetric per-tensor int8 with error feedback residual."""
+    corrected = g.astype(_F32) + ef
+    scale = jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+    return q, scale, corrected
+
+
+def int8_ef_compress(grads, ef):
+    """Returns (q_tree int8, scale_tree fp32 scalar, corrected_tree fp32).
+
+    ``corrected`` is needed by the decompress step to compute the new
+    residual locally (corrected - dequantized)."""
+    flat = jax.tree.map(_quantize_one, grads, ef)
+    q = jax.tree.map(lambda t: t[0], flat,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    scale = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    corrected = jax.tree.map(lambda t: t[2], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    return q, scale, corrected
+
+
+def int8_ef_decompress(q, scale, corrected):
+    """Dequantize and compute the new error-feedback residual."""
+    deq = jax.tree.map(lambda qi, s: qi.astype(_F32) * s, q, scale)
+    new_ef = jax.tree.map(lambda c, d: c - d, corrected, deq)
+    return deq, new_ef

@@ -1,0 +1,7 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware)."""
+from repro.roofline.analysis import (
+    HW, HloAnalysis, analyze_hlo_text, roofline_terms, model_flops,
+)
+
+__all__ = ["HW", "HloAnalysis", "analyze_hlo_text", "roofline_terms",
+           "model_flops"]

@@ -1,0 +1,89 @@
+"""H3.2 — cached ||W||²_row (the paper's §2.3 future-work item):
+correctness vs the uncached norm, constancy under training, and the
+end-to-end step."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import DoRAConfig, dora_linear, init_dora_params
+from repro.core.factored_norm import factored_norm
+from repro.launch.steps import StepConfig, make_train_step
+from repro.models import adapter_shapes, init_adapters, init_params
+from repro.optim import OptimizerConfig, adamw_init
+
+CFG = DoRAConfig(rank=8, alpha=16.0, mode="eager", cache_base_norm=True)
+
+
+def test_init_includes_base_sq():
+    key = jax.random.PRNGKey(0)
+    W = jax.random.normal(key, (32, 64))
+    ad = init_dora_params(jax.random.fold_in(key, 1), W, CFG)
+    assert "base_sq" in ad
+    np.testing.assert_allclose(
+        np.asarray(ad["base_sq"]),
+        np.sum(np.asarray(W, np.float64) ** 2, axis=1), rtol=1e-5)
+
+
+def test_cached_norm_matches_uncached():
+    key = jax.random.PRNGKey(1)
+    W = jax.random.normal(key, (32, 64))
+    ad = init_dora_params(jax.random.fold_in(key, 1), W, CFG)
+    ad["B"] = 0.1 * jax.random.normal(jax.random.fold_in(key, 2),
+                                      ad["B"].shape)
+    n_ref = factored_norm(W, ad["A"], ad["B"], CFG.scaling)
+    n_cached = factored_norm(W, ad["A"], ad["B"], CFG.scaling,
+                             base_sq_cache=ad["base_sq"])
+    np.testing.assert_allclose(np.asarray(n_cached), np.asarray(n_ref),
+                               rtol=1e-6)
+
+
+def test_dora_linear_uses_cache_from_adapter_tree():
+    """A poisoned cache must change the output — proves the cached path
+    is live; a correct cache must match the uncached output."""
+    key = jax.random.PRNGKey(2)
+    W = jax.random.normal(key, (32, 64))
+    x = jax.random.normal(jax.random.fold_in(key, 3), (4, 64))
+    ad = init_dora_params(jax.random.fold_in(key, 1), W, CFG)
+    ad["B"] = 0.1 * jax.random.normal(jax.random.fold_in(key, 2),
+                                      ad["B"].shape)
+    y_cached = dora_linear(x, W, ad, CFG)
+    ad_nc = {k: v for k, v in ad.items() if k != "base_sq"}
+    y_ref = dora_linear(x, W, ad_nc, CFG)
+    np.testing.assert_allclose(np.asarray(y_cached), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    ad_bad = dict(ad, base_sq=ad["base_sq"] * 4.0)
+    y_bad = dora_linear(x, W, ad_bad, CFG)
+    assert not np.allclose(np.asarray(y_bad), np.asarray(y_ref))
+
+
+def test_train_step_keeps_base_sq_constant():
+    mcfg = get_config("phi4-mini-3.8b", smoke=True)
+    dcfg = DoRAConfig(rank=4, alpha=8.0, mode="eager",
+                      cache_base_norm=True)
+    scfg = StepConfig(dora=dcfg, optim=OptimizerConfig(weight_decay=0.1))
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, mcfg)
+    adapters = init_adapters(jax.random.fold_in(key, 1), mcfg, params,
+                             dcfg)
+    shapes = adapter_shapes(mcfg, dcfg)
+    assert jax.tree.structure(shapes) == jax.tree.structure(
+        jax.tree.map(lambda x: x, adapters))
+    opt = adamw_init(adapters)
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (2, 16), 0,
+                                mcfg.vocab_size)
+    labels = jax.random.randint(jax.random.PRNGKey(6), (2, 16), 0,
+                                mcfg.vocab_size)
+    step = jax.jit(make_train_step(mcfg, scfg, None, batch=2, seq=16))
+    new_ad, _, m = step(params, adapters, opt,
+                        {"tokens": tokens, "labels": labels})
+    assert np.isfinite(float(m["loss"]))
+    before = adapters["stack"]["l0"]["mixer"]["wq"]
+    after = new_ad["stack"]["l0"]["mixer"]["wq"]
+    np.testing.assert_array_equal(np.asarray(before["base_sq"]),
+                                  np.asarray(after["base_sq"]))
+    # trainable leaves did move
+    assert not np.array_equal(np.asarray(before["A"]),
+                              np.asarray(after["A"]))

@@ -1,0 +1,125 @@
+"""Checkpoint/fault-tolerance: atomic commit, resume, GC, corruption
+detection, preemption, straggler monitor."""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointConfig, Heartbeat,
+                              PreemptionHandler, StragglerMonitor,
+                              garbage_collect, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def _state(v=1.0):
+    return {"adapters": {"A": jnp.full((3, 2), v), "m": jnp.ones((3,))},
+            "opt": {"count": jnp.asarray(7, jnp.int32)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    cfg = CheckpointConfig(str(tmp_path), keep=3)
+    save_checkpoint(cfg, 10, _state(2.5))
+    restored, step = restore_checkpoint(cfg, _state(0.0))
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["adapters"]["A"]),
+                                  np.full((3, 2), 2.5))
+    assert int(restored["opt"]["count"]) == 7
+
+
+def test_latest_points_to_newest_commit(tmp_path):
+    cfg = CheckpointConfig(str(tmp_path), keep=5)
+    for s in (1, 2, 5):
+        save_checkpoint(cfg, s, _state(float(s)))
+    assert latest_step(cfg) == 5
+    restored, step = restore_checkpoint(cfg, _state())
+    assert step == 5
+    assert float(restored["adapters"]["A"][0, 0]) == 5.0
+
+
+def test_no_checkpoint_cold_start(tmp_path):
+    cfg = CheckpointConfig(str(tmp_path))
+    restored, step = restore_checkpoint(cfg, _state())
+    assert restored is None and step is None
+
+
+def test_gc_keeps_k(tmp_path):
+    cfg = CheckpointConfig(str(tmp_path), keep=2)
+    for s in range(1, 6):
+        save_checkpoint(cfg, s, _state())
+    dirs = sorted(p for p in os.listdir(tmp_path) if p.startswith("step_"))
+    assert dirs == ["step_00000004", "step_00000005"]
+    # newest still restorable
+    _, step = restore_checkpoint(cfg, _state())
+    assert step == 5
+
+
+def test_corrupt_shard_detected(tmp_path):
+    cfg = CheckpointConfig(str(tmp_path))
+    d = save_checkpoint(cfg, 1, _state())
+    shard = os.path.join(d, "shard_00000.npz")
+    with open(shard, "r+b") as f:
+        f.seek(30)
+        f.write(b"\xde\xad")
+    with pytest.raises(IOError, match="hash mismatch"):
+        restore_checkpoint(cfg, _state())
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    cfg = CheckpointConfig(str(tmp_path))
+    save_checkpoint(cfg, 1, _state())
+    bad = {"adapters": {"A": jnp.zeros((4, 2)), "m": jnp.ones((3,))},
+           "opt": {"count": jnp.asarray(0, jnp.int32)}}
+    with pytest.raises(ValueError, match="shape"):
+        restore_checkpoint(cfg, bad)
+
+
+def test_model_axis_guard(tmp_path):
+    cfg = CheckpointConfig(str(tmp_path))
+    save_checkpoint(cfg, 1, _state(), mesh_meta={"model": 16})
+    restored, _ = restore_checkpoint(cfg, _state(), expect_model_axis=16)
+    assert restored is not None
+    with pytest.raises(ValueError, match="model axis"):
+        restore_checkpoint(cfg, _state(), expect_model_axis=8)
+
+
+def test_tmp_dir_never_visible_as_checkpoint(tmp_path):
+    """A .tmp directory (simulated crash mid-write) is not restorable."""
+    cfg = CheckpointConfig(str(tmp_path))
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    assert latest_step(cfg) is None
+
+
+def test_preemption_handler_catches_sigterm():
+    with PreemptionHandler() as h:
+        assert not h.preempted
+        os.kill(os.getpid(), signal.SIGTERM)
+        time.sleep(0.05)
+        assert h.preempted
+
+
+def test_heartbeat_and_straggler_monitor(tmp_path):
+    d = str(tmp_path / "hb")
+    for i in range(4):
+        Heartbeat(d, i).beat(step=100)
+    Heartbeat(d, 4).beat(step=50)  # lagging host
+    mon = StragglerMonitor(d, step_slack=5, dead_after_s=1e9)
+    assert mon.stragglers() == ["host_00004.json"]
+    assert not mon.healthy(expected_hosts=5)
+    Heartbeat(d, 4).beat(step=101)
+    assert mon.healthy(expected_hosts=5)
+
+
+def test_straggler_dead_host_detection(tmp_path):
+    d = str(tmp_path / "hb")
+    Heartbeat(d, 0).beat(step=10)
+    # Fake an ancient beat for host 1.
+    with open(os.path.join(d, "host_00001.json"), "w") as f:
+        json.dump({"step": 10, "time": time.time() - 1e4}, f)
+    mon = StragglerMonitor(d, dead_after_s=300)
+    assert "host_00001.json" in mon.stragglers()

@@ -1,0 +1,247 @@
+"""Compose correctness: stable form, dispatch tiers, adapter equivalence."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DoRAConfig, compose_stable, compose_naive
+import repro.core.adapter as ad
+import repro.core.dispatch as dp
+import repro.core.factored_norm as fn
+from repro.core.compose import magnitude_scale, compose_reference_fp64
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _setup(key, m, n, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    base = jax.random.normal(k1, (m, n), jnp.float32).astype(dtype)
+    lora = (0.1 * jax.random.normal(k2, (m, n), jnp.float32)).astype(dtype)
+    g = 1.0 + 0.0015 * jax.random.normal(k3, (n,), jnp.float32)
+    return base, lora, g
+
+
+def test_stable_form_beats_naive_near_unity():
+    """Paper Fig. 1: near g≈1 in bf16, the naive form g(s·lora+base)-base
+    collapses; the stable form stays near the quantization floor."""
+    base, lora, g = _setup(jax.random.PRNGKey(0), 2048, 512, jnp.bfloat16)
+    s = 0.5
+    want = compose_reference_fp64(base, lora, g, s)
+    stable = compose_stable(base, lora, g, s).astype(jnp.float64)
+    naive = compose_naive(base, lora, g, s).astype(jnp.float64)
+    err_stable = float(jnp.max(jnp.abs(stable - want)))
+    err_naive = float(jnp.max(jnp.abs(naive - want)))
+    # The paper reports ~3.0x lower peak error; require a clear win.
+    assert err_stable * 2.0 < err_naive, (err_stable, err_naive)
+
+
+def test_naive_form_collapse_zone():
+    """100% of near-unity g fall in the bf16 collapse zone: with
+    |g-1| < eps_bf16/2 the naive form loses the base correction entirely."""
+    n = 256
+    g = jnp.full((n,), 1.0 + 1e-4, jnp.float32)  # inside bf16 collapse zone
+    base = jnp.full((4, n), 100.0, jnp.bfloat16)
+    lora = jnp.zeros((4, n), jnp.bfloat16)
+    naive = compose_naive(base, lora, g, 1.0)
+    stable = compose_stable(base, lora, g, 1.0)
+    # naive: g*base - base rounds to 0 in bf16; stable keeps (g-1)*base.
+    assert float(jnp.max(jnp.abs(naive.astype(jnp.float32)))) == 0.0
+    assert float(jnp.max(jnp.abs(stable.astype(jnp.float32)))) > 0.0
+
+
+def test_magnitude_scale_precision_context():
+    m = jnp.asarray([1.0, 2.0, 0.0], jnp.float32)
+    wn = jnp.asarray([2.0, 0.0, 0.0], jnp.float32)
+    g = magnitude_scale(m, wn, 1e-6)
+    assert g.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(g), [0.5, 2e6, 0.0])
+
+
+def test_broadcast_guard():
+    base = jnp.zeros((4, 8, 16))
+    with pytest.raises(ValueError, match="broadcast"):
+        compose_stable(base, base, jnp.ones((8,)), 1.0)
+
+
+class TestDispatch:
+    CFG = DoRAConfig(mode="auto")
+
+    def test_sub_crossover_routes_eager(self):
+        t = dp.select_tier(self.CFG, training=True, rows=64, d_out=512)
+        assert t is dp.Tier.EAGER  # KV-projection-sized: below crossover
+
+    def test_cpu_routes_eager(self):
+        t = dp.select_tier(self.CFG, training=True, rows=10**6, d_out=8192)
+        assert t is dp.Tier.EAGER  # backend is cpu in this container
+
+    def test_interpret_forces_fused(self):
+        cfg = DoRAConfig(mode="interpret")
+        assert dp.select_tier(cfg, training=True, rows=8, d_out=128) \
+            is dp.Tier.FUSED_BWD
+        assert dp.select_tier(cfg, training=False, rows=8, d_out=128) \
+            is dp.Tier.FUSED_FWD
+
+    def test_bad_shape_routes_eager(self):
+        cfg = DoRAConfig(mode="fused")
+        assert dp.select_tier(cfg, training=True, rows=10**6, d_out=100) \
+            is dp.Tier.EAGER
+
+    def test_env_force_off(self):
+        os.environ["REPRO_DORA_FUSED"] = "0"
+        try:
+            cfg = DoRAConfig(mode="fused")
+            assert dp.select_tier(cfg, training=True, rows=10**6,
+                                  d_out=8192) is dp.Tier.EAGER
+        finally:
+            del os.environ["REPRO_DORA_FUSED"]
+
+    def test_crossover_matches_paper(self):
+        # paper §4: d_out >= 2048 AND rows*d_out >= 2048*6144
+        assert not dp.above_crossover(6143, 2048, self.CFG)
+        assert dp.above_crossover(6144, 2048, self.CFG)
+        assert not dp.above_crossover(10**9, 2047, self.CFG)
+
+
+class TestDoraLinear:
+    """The adapted linear must equal the mathematical definition
+    m ⊙ x(W+sBA)ᵀ / ||W+sBA||_row for every tier and norm impl."""
+
+    def _check(self, cfg, dtype=jnp.float32, tol=1e-5):
+        k = jax.random.PRNGKey(42)
+        k1, k2, k3 = jax.random.split(k, 3)
+        d_in, d_out, rank = 96, 128, cfg.rank
+        x = jax.random.normal(k1, (4, 7, d_in), jnp.float32).astype(dtype)
+        W = jax.random.normal(k2, (d_out, d_in), jnp.float32).astype(dtype)
+        adapter = ad.init_dora_params(k3, W, cfg)
+        # make B nonzero so the test is not trivial
+        adapter["B"] = 0.3 * jax.random.normal(k3, adapter["B"].shape,
+                                               jnp.float32).astype(dtype)
+        adapter["m"] = adapter["m"] * 1.01
+        y = ad.dora_linear(x, W, adapter, cfg, training=True)
+
+        s = cfg.scaling
+        comp = (W.astype(jnp.float64)
+                + s * adapter["B"].astype(jnp.float64)
+                @ adapter["A"].astype(jnp.float64))
+        wn = jnp.linalg.norm(comp, axis=1)
+        want = (adapter["m"].astype(jnp.float64) / wn
+                * (x.astype(jnp.float64) @ comp.T))
+        np.testing.assert_allclose(np.asarray(y, np.float64),
+                                   np.asarray(want), rtol=tol, atol=tol)
+        return y
+
+    def test_eager_tier(self):
+        self._check(DoRAConfig(rank=8, alpha=16, mode="eager"))
+
+    def test_fused_interpret_tier(self):
+        self._check(DoRAConfig(rank=8, alpha=16, mode="interpret"))
+
+    def test_norm_impl_equivalence(self):
+        ys = [self._check(DoRAConfig(rank=8, alpha=16, mode="eager",
+                                     norm_impl=impl))
+              for impl in ("factored", "dense_ba", "peft_eye")]
+        for y in ys[1:]:
+            np.testing.assert_allclose(np.asarray(ys[0]), np.asarray(y),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_eager_vs_fused_grads(self):
+        """Paper §5.9 convergence-equivalence at operator level: grads of
+        the two tiers agree."""
+        cfg_e = DoRAConfig(rank=8, alpha=16, mode="eager")
+        cfg_f = DoRAConfig(rank=8, alpha=16, mode="interpret")
+        k = jax.random.PRNGKey(7)
+        k1, k2, k3 = jax.random.split(k, 3)
+        x = jax.random.normal(k1, (16, 128), jnp.float32)
+        W = jax.random.normal(k2, (128, 128), jnp.float32)
+        adapter = ad.init_dora_params(k3, W, cfg_e)
+        adapter["B"] = 0.1 * jax.random.normal(k3, adapter["B"].shape)
+
+        def loss(adp, cfg):
+            y = ad.dora_linear(x, W, adp, cfg, training=True)
+            return jnp.sum(y ** 2)
+
+        ge = jax.grad(loss)(adapter, cfg_e)
+        gf = jax.grad(loss)(adapter, cfg_f)
+        for name in ("A", "B", "m"):
+            np.testing.assert_allclose(
+                np.asarray(ge[name]), np.asarray(gf[name]),
+                rtol=1e-4, atol=1e-4, err_msg=name)
+
+    def test_frozen_magnitude(self):
+        cfg = DoRAConfig(rank=4, alpha=8, mode="eager",
+                         magnitude_trainable=False)
+        k = jax.random.PRNGKey(9)
+        x = jax.random.normal(k, (8, 64))
+        W = jax.random.normal(k, (128, 64))
+        adapter = ad.init_dora_params(k, W, cfg)
+
+        def loss(adp):
+            return jnp.sum(ad.dora_linear(x, W, adp, cfg) ** 2)
+
+        g = jax.grad(loss)(adapter)
+        assert float(jnp.abs(g["m"]).max()) == 0.0
+        # At init B = 0, so the first nonzero adapter gradient lands on B
+        # (standard LoRA property); A's gradient is zero through B = 0.
+        assert float(jnp.abs(g["B"]).max()) > 0.0
+
+    def test_base_weight_frozen(self):
+        cfg = DoRAConfig(rank=4, alpha=8, mode="eager")
+        k = jax.random.PRNGKey(10)
+        x = jax.random.normal(k, (8, 64))
+        W = jax.random.normal(k, (128, 64))
+        adapter = ad.init_dora_params(k, W, cfg)
+
+        def loss(w):
+            return jnp.sum(ad.dora_linear(x, w, adapter, cfg) ** 2)
+
+        # dora_linear stop-gradients W internally (PEFT semantics).
+        g = jax.grad(loss)(W)
+        assert float(jnp.abs(g).max()) == 0.0
+
+    def test_bias_handling(self):
+        """Bias is subtracted before compose, re-added after (App. A):
+        equivalent to composing on the bias-free y_base."""
+        cfg = DoRAConfig(rank=4, alpha=8, mode="eager")
+        k = jax.random.PRNGKey(11)
+        x = jax.random.normal(k, (8, 64))
+        W = jax.random.normal(k, (128, 64))
+        bias = jax.random.normal(k, (128,))
+        adapter = ad.init_dora_params(k, W, cfg)
+        adapter["B"] = 0.2 * jax.random.normal(k, adapter["B"].shape)
+        y = ad.dora_linear(x, W, adapter, cfg, bias=bias)
+        y_nb = ad.dora_linear(x, W, adapter, cfg, bias=None)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_nb + bias),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_init_matches_dora(self):
+        """At init (B=0), DoRA is an exact no-op: y == x @ Wᵀ."""
+        cfg = DoRAConfig(rank=8, alpha=16, mode="eager")
+        k = jax.random.PRNGKey(12)
+        x = jax.random.normal(k, (8, 64))
+        W = jax.random.normal(k, (128, 64))
+        adapter = ad.init_dora_params(k, W, cfg)
+        y = ad.dora_linear(x, W, adapter, cfg)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ W.T),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_stacked_experts(self):
+        cfg = DoRAConfig(rank=4, alpha=8, mode="eager")
+        k = jax.random.PRNGKey(13)
+        E, d_in, d_out = 3, 32, 128
+        x = jax.random.normal(k, (E, 5, d_in))
+        W = jax.random.normal(k, (E, d_out, d_in))
+        adapter = ad.init_dora_params(k, W, cfg)
+        y = ad.dora_linear_stacked(x, W, adapter, cfg)
+        assert y.shape == (E, 5, d_out)
+        for e in range(E):
+            ye = ad.dora_linear(x[e], W[e],
+                                jax.tree.map(lambda v: v[e], adapter), cfg)
+            np.testing.assert_allclose(np.asarray(y[e]), np.asarray(ye),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_scaling_rslora():
+    assert DoRAConfig(rank=64, alpha=16, rslora=False).scaling == 16 / 64
+    assert DoRAConfig(rank=64, alpha=16, rslora=True).scaling == 16 / 8.0

@@ -1,0 +1,78 @@
+"""Data pipeline: determinism, restart-safety, per-host sharding,
+prefetch semantics, and learnability of the synthetic stream."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.data import (DataConfig, SyntheticLMDataset, host_shard_slice,
+                        make_train_iterator, prefetch)
+
+CFG = DataConfig(vocab_size=512, seq_len=32, global_batch=8, seed=7)
+
+
+def test_batches_deterministic():
+    a = SyntheticLMDataset(CFG).global_batch_np(5)
+    b = SyntheticLMDataset(CFG).global_batch_np(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_batches_differ_across_steps():
+    ds = SyntheticLMDataset(CFG)
+    assert not np.array_equal(ds.global_batch_np(0)["tokens"],
+                              ds.global_batch_np(1)["tokens"])
+
+
+def test_labels_are_next_tokens():
+    g = SyntheticLMDataset(CFG).global_batch_np(0)
+    np.testing.assert_array_equal(g["tokens"][:, 1:], g["labels"][:, :-1])
+
+
+def test_restart_resumes_same_stream():
+    """Resume from step N sees exactly the batches an unbroken run sees."""
+    it_full = make_train_iterator(CFG)
+    batches = [next(it_full) for _ in range(6)]
+    it_resumed = make_train_iterator(CFG, start_step=3)
+    for i in range(3):
+        got = next(it_resumed)
+        np.testing.assert_array_equal(got["tokens"],
+                                      batches[3 + i]["tokens"])
+
+
+def test_host_sharding_partitions_global_batch():
+    ds = SyntheticLMDataset(CFG)
+    g = ds.global_batch_np(2)
+    parts = [ds.host_batch_np(2, i, 4) for i in range(4)]
+    stacked = np.concatenate([p["tokens"] for p in parts], axis=0)
+    np.testing.assert_array_equal(stacked, g["tokens"])
+
+
+def test_host_shard_slice_validates():
+    with pytest.raises(ValueError):
+        host_shard_slice(10, 0, 3)
+
+
+def test_prefetch_preserves_order():
+    it = make_train_iterator(CFG)
+    want = [next(it)["tokens"] for _ in range(4)]
+    got = []
+    pf = prefetch(make_train_iterator(CFG), depth=2)
+    for _ in range(4):
+        got.append(next(pf)["tokens"])
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+
+
+def test_stream_has_learnable_structure():
+    """The bigram successor rule must make next-token prediction beatable:
+    the fraction of positions following the deterministic rule should be
+    close to structure_p."""
+    cfg = DataConfig(vocab_size=256, seq_len=128, global_batch=4,
+                     structure_p=0.75, seed=3)
+    ds = SyntheticLMDataset(cfg)
+    g = ds.global_batch_np(0)
+    toks = g["tokens"].astype(np.int64)
+    succ = (ds._bigram_a * toks[:, :-1] + ds._bigram_b) % cfg.vocab_size
+    frac = (toks[:, 1:] == succ).mean()
+    assert 0.6 < frac < 0.9, frac

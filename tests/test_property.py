@@ -1,0 +1,120 @@
+"""Property-based tests (hypothesis) on the system's core invariants.
+
+Invariant 1 — the factored decomposition is *exact algebra*: for any W, A, B
+and scaling s, the factored norm equals the dense norm (up to fp tolerance).
+
+Invariant 2 — compose identity: Y_base + compose(Y_base, Y_lora, g, s)
+            == g ⊙ (Y_base + s·Y_lora) for any g.
+
+Invariant 3 — tier equivalence: eager and interpret-mode fused paths agree.
+
+Invariant 4 — chunking invariance: any chunk budget gives the same norm.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import repro.core.factored_norm as fn
+from repro.core import DoRAConfig, compose_stable
+from repro.kernels import ops as kops
+
+jax.config.update("jax_enable_x64", True)
+
+_DIMS = st.sampled_from([1, 2, 3, 5, 8, 16, 31, 64, 128])
+_RANKS = st.sampled_from([1, 2, 4, 7, 16, 33])
+_S = st.floats(min_value=0.0, max_value=16.0, allow_nan=False)
+_SEED = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _mats(seed, d_out, d_in, r):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    W = jax.random.normal(k1, (d_out, d_in), jnp.float32)
+    A = jax.random.normal(k2, (r, d_in), jnp.float32)
+    B = jax.random.normal(k3, (d_out, r), jnp.float32)
+    return W, A, B
+
+
+@settings(max_examples=40, deadline=None)
+@given(d_out=_DIMS, d_in=_DIMS, r=_RANKS, s=_S, seed=_SEED)
+def test_factored_norm_equals_dense(d_out, d_in, r, s, seed):
+    W, A, B = _mats(seed, d_out, d_in, r)
+    got = fn.factored_norm(W, A, B, float(s))
+    want = fn.norm_reference_fp64(W, A, B, float(s))
+    scale = max(1.0, float(jnp.max(want)))
+    np.testing.assert_allclose(np.asarray(got) / scale,
+                               np.asarray(want, np.float32) / scale,
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(d_out=_DIMS, d_in=_DIMS, r=_RANKS, s=_S, seed=_SEED,
+       chunk_mb=st.sampled_from([1, 2, 256]))
+def test_chunking_invariance(d_out, d_in, r, s, seed, chunk_mb):
+    W, A, B = _mats(seed, d_out, d_in, r)
+    full = fn.factored_norm(W, A, B, float(s), chunk_mb=None)
+    chunked = fn.factored_norm(W, A, B, float(s), chunk_mb=chunk_mb)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(rows=st.sampled_from([1, 3, 17, 64]),
+       n=st.sampled_from([8, 64, 256]),
+       s=_S, seed=_SEED,
+       gdev=st.floats(min_value=0.0, max_value=0.5, allow_nan=False))
+def test_compose_identity(rows, n, s, seed, gdev):
+    """Y_base + Δ == g ⊙ (Y_base + s·Y_lora)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    base = jax.random.normal(k1, (rows, n), jnp.float32)
+    lora = jax.random.normal(k2, (rows, n), jnp.float32)
+    g = 1.0 + gdev * jax.random.normal(k3, (n,), jnp.float32)
+    delta = compose_stable(base, lora, g, float(s))
+    left = base + delta
+    right = g[None, :] * (base + float(s) * lora)
+    np.testing.assert_allclose(np.asarray(left), np.asarray(right),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.sampled_from([1, 5, 32, 100]),
+       nmul=st.sampled_from([1, 2, 3]),
+       s=_S, seed=_SEED)
+def test_fused_interpret_equals_eager(rows, nmul, s, seed):
+    """Tier equivalence under arbitrary row counts (pad/unpad path)."""
+    n = 128 * nmul
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    base = jax.random.normal(k1, (rows, n), jnp.float32)
+    lora = jax.random.normal(k2, (rows, n), jnp.float32)
+    g = 1.0 + 0.01 * jax.random.normal(k3, (n,), jnp.float32)
+    fused = kops.fused_compose(base, lora, g, float(s), interpret=True,
+                               block_m=32, block_n=128)
+    eager = compose_stable(base, lora, g, float(s))
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(eager),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=_SEED, r=st.sampled_from([1, 4, 16]))
+def test_norm_scale_homogeneity(seed, r):
+    """||c·(W + sBA)|| = |c|·||W + sBA|| — catches accumulation-dtype bugs."""
+    W, A, B = _mats(seed, 16, 32, r)
+    base = fn.factored_norm(W, A, B, 1.0)
+    scaled = fn.factored_norm(4.0 * W, 2.0 * A, 2.0 * B, 1.0)
+    np.testing.assert_allclose(np.asarray(scaled), 4.0 * np.asarray(base),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=_SEED)
+def test_dora_noop_at_init(seed):
+    """B = 0 ⇒ the adapted layer equals the frozen layer exactly."""
+    import repro.core.adapter as ad
+    cfg = DoRAConfig(rank=4, alpha=8, mode="eager")
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (6, 24), jnp.float32)
+    W = jax.random.normal(k2, (32, 24), jnp.float32)
+    adapter = ad.init_dora_params(k3, W, cfg)
+    y = ad.dora_linear(x, W, adapter, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ W.T),
+                               rtol=1e-5, atol=1e-5)
