@@ -21,6 +21,8 @@ import time
 
 import jax
 
+from repro.compat import xla as cxla
+
 RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
 
 
@@ -43,13 +45,13 @@ def time_fn(fn, *args, repeats: int = 20, warmup: int = 3) -> dict:
 def compiled_stats(fn, *args) -> dict:
     lowered = jax.jit(fn).lower(*args)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = cxla.cost_analysis_dict(compiled)
     mem = compiled.memory_analysis()
     return {
         "flops": cost.get("flops", 0.0),
         "bytes_accessed": cost.get("bytes accessed", 0.0),
         "temp_bytes": mem.temp_size_in_bytes,
-        "peak_bytes": mem.peak_memory_in_bytes,
+        "peak_bytes": cxla.peak_memory_bytes(compiled),
         "argument_bytes": mem.argument_size_in_bytes,
     }
 

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import fmt_bytes, save, time_fn
+from repro.compat import xla as cxla
 from repro.core import DoRAConfig
 from repro.launch.steps import StepConfig, make_train_step
 from repro.models import init_adapters, init_params, forward
@@ -77,7 +78,7 @@ def run(verbose: bool = True) -> dict:
                                           batch=BATCH, seq=SEQ)) \
             .lower(params, adapters, opt, batch)
         compiled = lowered.compile()
-        cost = compiled.cost_analysis()
+        cost = cxla.cost_analysis_dict(compiled)
         mem = compiled.memory_analysis()
         out[name] = {
             "train_s": t_train["median_s"],

@@ -27,15 +27,15 @@ import numpy as np  # noqa: E402
 
 sys.path.insert(0, "src")
 
-from jax.sharding import AxisType, PartitionSpec as P  # noqa: E402
-from jax.experimental.shard_map import shard_map  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.compat.mesh import make_mesh, shard_map  # noqa: E402
 
 
 def main() -> None:
     assert len(jax.devices()) >= 8, "needs 8 host-platform devices"
-    mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                         axis_types=(AxisType.Auto,) * 2,
-                         devices=jax.devices()[:8])
+    mesh = make_mesh((2, 4), ("pod", "data"),
+                     devices=jax.devices()[:8])
 
     d = 512
     rng = np.random.default_rng(0)

@@ -15,6 +15,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 
+from repro.compat import xla as cxla
 from repro.core import DoRAConfig
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import StepConfig, cell_specs
@@ -60,7 +61,7 @@ def main() -> None:
     print(f"compute {terms['compute_s']*1e3:.1f} ms | memory "
           f"{terms['memory_s']*1e3:.1f} ms | collective "
           f"{terms['collective_s']*1e3:.1f} ms -> {terms['dominant']}")
-    print(f"peak {(mem.peak_memory_in_bytes + mem.argument_size_in_bytes - mem.alias_size_in_bytes)/2**30:.2f} GiB")
+    print(f"peak {(cxla.peak_memory_bytes(compiled) + mem.argument_size_in_bytes - mem.alias_size_in_bytes)/2**30:.2f} GiB")
     print(ana.report(args.top))
 
 

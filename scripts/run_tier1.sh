@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Tier-1 gate: run the test suite with the Pallas interpret tier forced
+# (every compose/norm call exercises the fused kernels through the Pallas
+# interpreter on CPU) and fail on any regression below the recorded pass
+# count.
+#
+# Usage:  scripts/run_tier1.sh [extra pytest args...]
+# Env:    REPRO_TIER1_MIN_PASS  recorded floor (default below)
+#         REPRO_TIER1_MAX_FAIL  allowed failures (default 0)
+#         REPRO_FORCE_TIER      tier to force (default: interpret)
+#
+# Baselines (keep in sync with ROADMAP.md):
+#   seed     127 passed / 81 failed / 2 collection errors
+#   post-PR1 250 passed / 0 failed / 2 skipped (hypothesis absent) — every
+#            seed failure was JAX API drift, absorbed by src/repro/compat/
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+MIN_PASS="${REPRO_TIER1_MIN_PASS:-250}"
+MAX_FAIL="${REPRO_TIER1_MAX_FAIL:-0}"
+export REPRO_FORCE_TIER="${REPRO_FORCE_TIER:-interpret}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+out="$(mktemp)"
+trap 'rm -f "$out"' EXIT
+
+# || true: pytest exits nonzero on any failure; the gate below decides.
+python -m pytest -q "$@" 2>&1 | tee "$out" || true
+
+summary="$(grep -E '[0-9]+ (passed|failed|error)' "$out" | tail -1)"
+passed="$(grep -oE '[0-9]+ passed' "$out" | tail -1 | grep -oE '[0-9]+' || echo 0)"
+failed="$(grep -oE '[0-9]+ failed' "$out" | tail -1 | grep -oE '[0-9]+' || echo 0)"
+errors="$(grep -oE '[0-9]+ errors?' "$out" | tail -1 | grep -oE '[0-9]+' || echo 0)"
+
+echo
+echo "tier-1 summary: ${summary:-<no pytest summary found>}"
+if [ "${errors}" -gt 0 ]; then
+    echo "tier-1 FAIL: ${errors} collection error(s) (seed had 2; must stay 0)"
+    exit 1
+fi
+if [ "${failed}" -gt "${MAX_FAIL}" ]; then
+    echo "tier-1 FAIL: ${failed} failed > allowed ${MAX_FAIL}"
+    exit 1
+fi
+if [ "${passed}" -lt "${MIN_PASS}" ]; then
+    echo "tier-1 FAIL: ${passed} passed < recorded floor ${MIN_PASS}"
+    exit 1
+fi
+echo "tier-1 OK: ${passed} passed, ${failed} failed (floor ${MIN_PASS}, REPRO_FORCE_TIER=${REPRO_FORCE_TIER})"

@@ -32,8 +32,9 @@ import os
 import shutil
 import tempfile
 
-import jax
 import numpy as np
+
+from repro.compat import tree as ctree
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,22 +45,15 @@ class CheckpointConfig:
 
 
 def _flatten_with_names(tree):
-    flat = jax.tree.flatten_with_path(tree)[0]
-    out = {}
-    for path, leaf in flat:
-        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in path)
-        out[name] = np.asarray(leaf)
-    return out
+    flat = ctree.flatten_with_path(tree)[0]
+    return {ctree.path_str(path): np.asarray(leaf) for path, leaf in flat}
 
 
 def _unflatten_like(tree_like, named):
-    flat = jax.tree.flatten_with_path(tree_like)
-    paths, treedef = flat[0], jax.tree.structure(tree_like)
+    paths, treedef = ctree.flatten_with_path(tree_like)
     leaves = []
     for path, like in paths:
-        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in path)
+        name = ctree.path_str(path)
         if name not in named:
             raise KeyError(f"checkpoint missing leaf {name!r}")
         arr = named[name]
@@ -69,7 +63,7 @@ def _unflatten_like(tree_like, named):
                 f"{like.shape} (elastic resize only re-partitions the data "
                 f"axis; model-axis/param shapes must match)")
         leaves.append(arr.astype(like.dtype))
-    return jax.tree.unflatten(treedef, leaves)
+    return ctree.unflatten(treedef, leaves)
 
 
 def _sha256(path: str) -> str:

@@ -1,0 +1,41 @@
+"""Mesh construction and shard_map entry points, portable across JAX.
+
+Newer JAX grew ``jax.make_mesh(..., axis_types=AxisType.Auto)`` and promoted
+``shard_map`` to ``jax.shard_map``; older releases have neither ``AxisType``
+nor the promoted name (``jax.experimental.shard_map.shard_map``). The repo's
+meshes are always fully "auto" (GSPMD derives the collectives), which is
+exactly the old default — so on old JAX the axis-type argument is simply
+omitted, with identical partitioning semantics.
+"""
+from __future__ import annotations
+
+import jax
+
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+
+def _resolve_shard_map():
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map as fn  # noqa: F811
+    return fn
+
+
+shard_map = _resolve_shard_map()
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with auto axis types wherever expressible."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(
+                tuple(axis_shapes), tuple(axis_names),
+                axis_types=(AxisType.Auto,) * len(tuple(axis_names)),
+                **kwargs)
+        except TypeError:
+            pass  # AxisType exists but make_mesh predates axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

@@ -72,22 +72,14 @@ def compute_weight_norm(W, A, B, cfg: DoRAConfig, *, axis_name=None,
         return _norm.norm_peft_eye(W, A, B, cfg.scaling)
     if impl == "dense_ba":
         return _norm.norm_dense_ba(W, A, B, cfg.scaling)
-    mode = cfg.resolve_mode()
-    if mode in ("fused", "interpret"):
+    plan = _dispatch.plan_norm(cfg, d_out=W.shape[0])
+    if plan.fused:
         from repro.kernels import ops as _kops
         return _kops.fused_norm(
             W, A, B, cfg.scaling,
             block_rows=cfg.norm_block_rows, block_k=cfg.norm_block_k,
-            interpret=(mode == "interpret" if interpret is None
-                       else interpret),
+            interpret=(plan.interpret if interpret is None else interpret),
             base_sq_cache=base_sq_cache)
-    if mode == "auto" and _dispatch._platform() == "tpu" \
-            and _dispatch.shape_supported(W.shape[0]):
-        from repro.kernels import ops as _kops
-        return _kops.fused_norm(
-            W, A, B, cfg.scaling,
-            block_rows=cfg.norm_block_rows, block_k=cfg.norm_block_k,
-            interpret=False, base_sq_cache=base_sq_cache)
     return _norm.factored_norm(W, A, B, cfg.scaling,
                                chunk_mb=cfg.resolve_chunk_mb(),
                                base_sq_cache=base_sq_cache)
@@ -99,24 +91,23 @@ def compose_delta(y_base, y_lora, g, cfg: DoRAConfig, *, training: bool):
     rows = 1
     for d in y_base.shape[:-1]:
         rows *= d
-    tier = _dispatch.select_tier(cfg, training=training, rows=rows,
-                                 d_out=y_base.shape[-1])
-    if tier is _dispatch.Tier.EAGER:
+    plan = _dispatch.plan_compose(cfg, training=training, rows=rows,
+                                  d_out=y_base.shape[-1])
+    if plan.tier is _dispatch.Tier.EAGER:
         return _compose.compose_stable(y_base, y_lora, g, cfg.scaling)
     from repro.kernels import ops as _kops
-    interpret = _dispatch.use_interpret(cfg)
-    if tier is _dispatch.Tier.FUSED_FWD:
+    if plan.tier is _dispatch.Tier.FUSED_FWD:
         g = jax.lax.stop_gradient(g)
         return _kops.fused_compose(
             y_base, y_lora, g, cfg.scaling, save_inner=False,
             mag_grad=False, block_m=cfg.block_rows, block_n=cfg.block_cols,
-            interpret=interpret)
+            interpret=plan.interpret)
     return _kops.fused_compose(
         y_base, y_lora, g, cfg.scaling,
         save_inner=cfg.save_inner and cfg.magnitude_trainable,
         mag_grad=cfg.magnitude_trainable,
         block_m=cfg.block_rows, block_n=cfg.block_cols,
-        interpret=interpret)
+        interpret=plan.interpret)
 
 
 def dora_linear(x, W, adapter: dict[str, Any], cfg: DoRAConfig, *,

@@ -22,6 +22,17 @@ def _env_flag(name: str) -> str | None:
     return v if v not in (None, "") else None
 
 
+# Tier names (dispatch-table keys) → config modes. "tpu"/"pallas"/"fused"
+# all mean the compiled-kernel path; dispatch degrades it to the
+# interpreter on non-TPU hosts.
+_TIER_ALIASES = {"tpu": "fused", "pallas": "fused", "fused": "fused",
+                 "interpret": "interpret", "eager": "eager"}
+
+
+def _normalize_tier(tier: str) -> str | None:
+    return _TIER_ALIASES.get(tier.strip().lower())
+
+
 @dataclasses.dataclass(frozen=True)
 class DoRAConfig:
     """Configuration for DoRA adaptation of a linear layer family."""
@@ -36,6 +47,10 @@ class DoRAConfig:
     # "interpret": force pallas kernels in interpret mode (CPU validation).
     # "eager": force the pure-jnp Tier-3 path.
     mode: str = "auto"
+    # Forced kernel tier ("tpu" | "interpret" | "eager"); overrides ``mode``
+    # when set. The REPRO_FORCE_TIER env var overrides both, so any tier is
+    # exercisable on any host without touching config plumbing.
+    force_tier: str | None = None
     # Crossover below which launch latency dominates (paper §4: d_out >= 2048
     # and rows * d_out >= 2048 * 6144).
     min_fused_dout: int = 2048
@@ -64,6 +79,11 @@ class DoRAConfig:
             raise ValueError(f"rank must be positive, got {self.rank}")
         if self.mode not in ("auto", "fused", "interpret", "eager"):
             raise ValueError(f"unknown mode {self.mode!r}")
+        if (self.force_tier is not None
+                and _normalize_tier(self.force_tier) is None):
+            raise ValueError(
+                f"unknown force_tier {self.force_tier!r} (expected one of "
+                f"'tpu'/'fused', 'interpret', 'eager')")
         if self.norm_impl not in ("factored", "dense_ba", "peft_eye"):
             raise ValueError(f"unknown norm_impl {self.norm_impl!r}")
         if self.dropout != 0.0:
@@ -79,12 +99,34 @@ class DoRAConfig:
         return self.alpha / self.rank
 
     def resolve_mode(self) -> str:
-        """Apply the paper's env-var overrides (App. B)."""
+        """Apply the env-var overrides (paper App. B + forced tier).
+
+        Precedence: REPRO_DORA_FUSED=0 kill switch > REPRO_FORCE_TIER >
+        REPRO_DORA_MODE > ``force_tier`` config field > ``mode``.
+        """
         if _env_flag("REPRO_DORA_FUSED") == "0":
             return "eager"
+        tier = _env_flag("REPRO_FORCE_TIER")
+        if tier is not None:
+            mode = _normalize_tier(tier)
+            if mode is None:
+                raise ValueError(
+                    f"REPRO_FORCE_TIER={tier!r} is not a known tier "
+                    f"(expected 'tpu'/'fused', 'interpret', or 'eager')")
+            return mode
         forced = _env_flag("REPRO_DORA_MODE")
         if forced is not None:
-            return forced
+            mode = forced.strip().lower()
+            if mode != "auto":
+                mode = _normalize_tier(mode)
+            if mode is None:
+                raise ValueError(
+                    f"REPRO_DORA_MODE={forced!r} is not a known mode "
+                    f"(expected 'auto', 'fused'/'tpu', 'interpret', or "
+                    f"'eager')")
+            return mode
+        if self.force_tier is not None:
+            return _normalize_tier(self.force_tier)
         return self.mode
 
     def resolve_chunk_mb(self) -> int | None:

@@ -7,18 +7,22 @@ Tier 2 — fused forward: inference + accelerator. Forward-only kernel, no
 Tier 3 — eager fallback: CPU / forced-off / sub-crossover shapes / unmet
          shape constraints (d_out % 128 != 0, bad magnitude broadcast).
 
-On TPU the "Triton available" predicate becomes "backend is tpu" (Pallas
-compiles) — or ``mode='interpret'`` for CPU validation, where the kernels run
-through the Pallas interpreter. Shapes are static under jit, so tier
-selection happens at trace time, exactly like the paper's Python-level
-``_compose_with_dispatch``.
+Every tier routes through ONE capability-probed dispatch table
+(:data:`DISPATCH_TABLE`): a kernel *backend* ("tpu" — compiled Pallas,
+"interpret" — the Pallas interpreter for CPU validation, "eager" — pure
+jnp) is resolved from the probes in :mod:`repro.compat.probes`, the config
+mode, and the forced-tier override (``REPRO_FORCE_TIER`` env var or
+``DoRAConfig.force_tier``), and the paper's Tier-1/2/3 split is then layered
+on top of that backend. Shapes are static under jit, so selection happens at
+trace time, exactly like the paper's Python-level ``_compose_with_dispatch``.
 """
 from __future__ import annotations
 
+import dataclasses
 import enum
+from typing import Callable
 
-import jax
-
+from repro.compat import probes
 from repro.core.config import DoRAConfig
 
 
@@ -28,8 +32,69 @@ class Tier(enum.Enum):
     EAGER = 3
 
 
-def _platform() -> str:
-    return jax.default_backend()
+@dataclasses.dataclass(frozen=True)
+class KernelBackend:
+    """One row of the dispatch table: how a tier's kernels execute."""
+    name: str                      # "tpu" | "interpret" | "eager"
+    fused: bool                    # routes to the Pallas kernels
+    interpret: bool                # Pallas interpreter (CPU validation)
+    available: Callable[[], bool]  # capability probe
+
+
+DISPATCH_TABLE: dict[str, KernelBackend] = {
+    "tpu": KernelBackend("tpu", fused=True, interpret=False,
+                         available=probes.can_compile_pallas_tpu),
+    "interpret": KernelBackend("interpret", fused=True, interpret=True,
+                               available=probes.has_pallas),
+    "eager": KernelBackend("eager", fused=False, interpret=False,
+                           available=lambda: True),
+}
+
+# Config/env mode → table row. "fused" means "the compiled kernels" and
+# degrades to the interpreter off-TPU so one config runs on any host.
+_MODE_TO_BACKEND = {"fused": "tpu", "interpret": "interpret",
+                    "eager": "eager"}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """Resolved execution plan for one kernel call site."""
+    tier: Tier
+    backend: str       # DISPATCH_TABLE key actually used
+    interpret: bool    # pass to pallas_call
+
+    @property
+    def fused(self) -> bool:
+        return self.tier is not Tier.EAGER
+
+
+def available_backends() -> tuple[str, ...]:
+    """Table rows whose capability probe passes on this host, best first."""
+    return tuple(name for name, b in DISPATCH_TABLE.items()
+                 if b.available())
+
+
+def resolve_backend(cfg: DoRAConfig) -> KernelBackend:
+    """Mode/override → the dispatch-table row to execute on.
+
+    A *forced* tier (``REPRO_FORCE_TIER`` / ``cfg.force_tier``, surfaced
+    through ``cfg.resolve_mode()``) must be honored or fail loudly; the
+    only soft degrade is mode="fused" on a non-TPU host, which falls to the
+    interpreter so the same config validates on CPU (paper App. B).
+    """
+    mode = cfg.resolve_mode()
+    if mode == "auto":
+        name = "tpu" if DISPATCH_TABLE["tpu"].available() else "eager"
+        return DISPATCH_TABLE[name]
+    name = _MODE_TO_BACKEND[mode]
+    backend = DISPATCH_TABLE[name]
+    if backend.available():
+        return backend
+    if name == "tpu" and DISPATCH_TABLE["interpret"].available():
+        return DISPATCH_TABLE["interpret"]
+    raise RuntimeError(
+        f"kernel tier {name!r} was forced but is unavailable on this host: "
+        f"{probes.why_unavailable(name)}")
 
 
 def above_crossover(rows: int, d_out: int, cfg: DoRAConfig) -> bool:
@@ -45,22 +110,49 @@ def shape_supported(d_out: int) -> bool:
     return d_out % 128 == 0
 
 
+def plan_compose(cfg: DoRAConfig, *, training: bool, rows: int,
+                 d_out: int) -> KernelPlan:
+    """Resolve the compose call site to (Tier, backend, interpret).
+
+    The shape constraint outranks even a forced tier: d_out % 128 != 0 is
+    inexpressible in the 128-lane kernels, and the paper (App. B/C)
+    specifies the eager fallback for it — same precedence the seed
+    dispatch had.
+    """
+    if not shape_supported(d_out):
+        return KernelPlan(Tier.EAGER, "eager", False)
+    mode = cfg.resolve_mode()
+    backend = resolve_backend(cfg)
+    if not backend.fused:
+        return KernelPlan(Tier.EAGER, backend.name, False)
+    if mode == "auto" and not above_crossover(rows, d_out, cfg):
+        return KernelPlan(Tier.EAGER, "eager", False)
+    tier = Tier.FUSED_BWD if training else Tier.FUSED_FWD
+    return KernelPlan(tier, backend.name, backend.interpret)
+
+
+def plan_norm(cfg: DoRAConfig, *, d_out: int) -> KernelPlan:
+    """Resolve the factored-norm call site. The norm kernel is forward-only
+    (the norm is detached), so the fused choice is Tier 2 by construction;
+    no crossover guard — the norm reads the whole [d_out, d_in] weight, so
+    the fused pass wins at every adapted-layer size (paper §2.3)."""
+    if not shape_supported(d_out):
+        return KernelPlan(Tier.EAGER, "eager", False)
+    backend = resolve_backend(cfg)
+    if not backend.fused:
+        return KernelPlan(Tier.EAGER, backend.name, False)
+    return KernelPlan(Tier.FUSED_FWD, backend.name, backend.interpret)
+
+
 def select_tier(cfg: DoRAConfig, *, training: bool, rows: int,
                 d_out: int) -> Tier:
-    mode = cfg.resolve_mode()
-    if mode == "eager":
-        return Tier.EAGER
-    if not shape_supported(d_out):
-        return Tier.EAGER
-    if mode in ("fused", "interpret"):
-        return Tier.FUSED_BWD if training else Tier.FUSED_FWD
-    # mode == "auto"
-    if _platform() != "tpu":
-        return Tier.EAGER
-    if not above_crossover(rows, d_out, cfg):
-        return Tier.EAGER
-    return Tier.FUSED_BWD if training else Tier.FUSED_FWD
+    return plan_compose(cfg, training=training, rows=rows,
+                        d_out=d_out).tier
 
 
 def use_interpret(cfg: DoRAConfig) -> bool:
-    return cfg.resolve_mode() == "interpret" or _platform() != "tpu"
+    backend = resolve_backend(cfg)
+    if not backend.fused:
+        # Eager never reaches a pallas_call; answer for "if it did".
+        return not probes.is_tpu()
+    return backend.interpret

@@ -23,8 +23,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat.pallas import pl, tpu_compiler_params
 
 _F32 = jnp.float32
 
@@ -68,7 +68,7 @@ def norm_terms_pallas(W, A, B, *, block_rows: int, block_k: int,
             pl.BlockSpec((1, block_rows), lambda i, k: (0, i)),
         ),
         out_shape=(out_shape, out_shape),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(W, A, B)

@@ -19,7 +19,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.compat.pallas import pl
 
 _F32 = jnp.float32
 

@@ -9,7 +9,10 @@
 Both wrappers do the shape plumbing the paper's dispatch layer does on CUDA:
 flatten leading dims, pad rows to the block shape, enforce the
 d_out % 128 == 0 constraint (paper App. C), and accept an ``interpret`` flag
-so the same kernels run on CPU for validation.
+so the same kernels run on CPU for validation. ``interpret=None`` (default)
+resolves through the capability probes: compiled on a TPU backend, the
+Pallas interpreter anywhere else — so direct callers (tests, benchmarks)
+never hardcode a host assumption.
 """
 from __future__ import annotations
 
@@ -18,6 +21,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.compat.pallas import resolve_interpret
 from repro.kernels import dora_compose as _ck
 from repro.kernels import factored_norm as _nk
 from repro.kernels import norm_assembly as _ak
@@ -129,7 +133,7 @@ def fused_compose(base, lora, g, s: float, *,
                   save_inner: bool = True,
                   mag_grad: bool = True,
                   block_m: int = 256, block_n: int = 1024,
-                  interpret: bool = False):
+                  interpret: bool | None = None):
     """delta = (g-1)⊙base + g⊙s⊙lora via the fused Pallas kernels.
 
     base/lora: [..., d_out] (input dtype); g: fp32 [d_out] (differentiable —
@@ -137,7 +141,8 @@ def fused_compose(base, lora, g, s: float, *,
     frozen-magnitude fast path that skips the ``inner`` save entirely).
     """
     fn = _make_compose(float(s), bool(save_inner), bool(mag_grad),
-                       int(block_m), int(block_n), bool(interpret))
+                       int(block_m), int(block_n),
+                       resolve_interpret(interpret))
     return fn(base, lora, g)
 
 
@@ -147,8 +152,9 @@ def fused_compose(base, lora, g, s: float, *,
 
 def fused_norm(W, A, B, s: float, *,
                block_rows: int = 256, block_k: int = 512,
-               interpret: bool = False, base_sq_cache=None):
+               interpret: bool | None = None, base_sq_cache=None):
     """Detached fp32 row-wise norm of W + s·B·A via the Pallas kernels."""
+    interpret = resolve_interpret(interpret)
     W = jax.lax.stop_gradient(W)
     A = jax.lax.stop_gradient(A)
     B = jax.lax.stop_gradient(B)

@@ -27,8 +27,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat.pallas import (pl, resolve_interpret, tpu_compiler_params,
+                                 vmem)
 
 _F32 = jnp.float32
 
@@ -58,12 +59,13 @@ def _scan_kernel(dt_ref, dtx_ref, b_ref, c_ref, at_ref, h0_ref,
 
 def selective_scan_pallas(dt, dtx, Bm, Cm, A_t, h0_t, *,
                           block_di: int = 512, chunk: int = 64,
-                          interpret: bool = False):
+                          interpret: bool | None = None):
     """dt, dtx: [B, S, di]; Bm, Cm: [B, S, n]; A_t: [n, di];
     h0_t: [B, n, di] — all fp32, S % chunk == 0, di % block_di == 0.
     Returns (y [B, S, di], h_final [B, n, di])."""
     B, S, di = dt.shape
     n = A_t.shape[0]
+    interpret = resolve_interpret(interpret)
     grid = (B, di // block_di, S // chunk)
     kern = functools.partial(_scan_kernel, chunk=chunk)
     y, h_f = pl.pallas_call(
@@ -85,8 +87,8 @@ def selective_scan_pallas(dt, dtx, Bm, Cm, A_t, h0_t, *,
             jax.ShapeDtypeStruct((B, S, di), _F32),
             jax.ShapeDtypeStruct((B, n, di), _F32),
         ),
-        scratch_shapes=[pltpu.VMEM((n, block_di), _F32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[vmem((n, block_di), _F32)],
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(dt, dtx, Bm, Cm, A_t, h0_t)

@@ -13,6 +13,7 @@ import traceback
 
 import jax
 
+from repro.compat import xla as cxla
 from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import StepConfig, cell_specs
@@ -38,7 +39,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    peak_bytes = cxla.peak_memory_bytes(compiled)
+    cost = cxla.cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     ana = analyze_hlo_text(hlo)
     hw = HW()
@@ -58,13 +60,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
         "compile_s": round(t_compile, 1),
         "memory": {
-            "peak_bytes": mem.peak_memory_in_bytes,
+            "peak_bytes": peak_bytes,
             "argument_bytes": mem.argument_size_in_bytes,
             "output_bytes": mem.output_size_in_bytes,
             "temp_bytes": mem.temp_size_in_bytes,
             "alias_bytes": mem.alias_size_in_bytes,
             # donated args alias outputs — they are not double-counted
-            "fits_16g": bool(mem.peak_memory_in_bytes
+            "fits_16g": bool(peak_bytes
                              + mem.argument_size_in_bytes
                              - mem.alias_size_in_bytes < hw.hbm_bytes),
         },

@@ -14,6 +14,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import mesh as cmesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -28,17 +30,12 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"the dry-run must set "
             f"XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             f"any jax import")
-    from jax.sharding import AxisType
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devices)
+    return cmesh.make_mesh(shape, axes, devices=devices)
 
 
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Tiny mesh for CPU tests (uses however many devices exist)."""
-    from jax.sharding import AxisType
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return cmesh.make_mesh((data, model), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

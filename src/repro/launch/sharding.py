@@ -29,6 +29,7 @@ from typing import Any
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import tree as ctree
 from repro.core import DoRAConfig
 from repro.models import lm as _lm
 from repro.models.config import ModelConfig
@@ -255,7 +256,7 @@ def opt_state_sharding(adapter_shardings, mesh, adapter_shapes=None):
         return NamedSharding(mesh, P(*spec))
 
     if adapter_shapes is not None:
-        moments = jax.tree.map(shard_moment, adapter_shardings,
+        moments = ctree.map(shard_moment, adapter_shardings,
                                adapter_shapes)
     else:
         moments = adapter_shardings
@@ -347,4 +348,4 @@ def replicated(mesh):
 
 def tree_replicated(tree, mesh):
     rep = replicated(mesh)
-    return jax.tree.map(lambda _: rep, tree)
+    return ctree.map(lambda _: rep, tree)

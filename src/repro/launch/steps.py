@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, SMOKE_SHAPES, get_config
+from repro.compat import tree as ctree
 from repro.core import DoRAConfig
 from repro.models import (adapter_shapes, cache_shapes, forward,
                           param_shapes)
@@ -103,14 +104,14 @@ def make_train_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
                     adapters, params, xi, li, is_embeds)
                 loss_acc, g_acc = carry
                 return (loss_acc + l,
-                        jax.tree.map(jnp.add, g_acc, g)), None
+                        ctree.map(jnp.add, g_acc, g)), None
 
-            zeros = jax.tree.map(lambda a: jnp.zeros(a.shape, _F32),
+            zeros = ctree.map(lambda a: jnp.zeros(a.shape, _F32),
                                  adapters)
             (loss, grads), _ = jax.lax.scan(
                 micro, (jnp.zeros((), _F32), zeros), (xm, lm_))
             loss = loss / ga
-            grads = jax.tree.map(lambda g: g / ga, grads)
+            grads = ctree.map(lambda g: g / ga, grads)
 
         new_adapters, new_opt, stats = adamw_update(
             grads, opt_state, adapters, scfg.optim)
@@ -220,9 +221,9 @@ def cell_specs(arch: str, shape_name: str, mesh, *, smoke: bool = False,
 
     if kind == "train":
         opt_sds = {
-            "mu": jax.tree.map(
+            "mu": ctree.map(
                 lambda s: _sds(s.shape, _F32), a_sds),
-            "nu": jax.tree.map(
+            "nu": ctree.map(
                 lambda s: _sds(s.shape, _F32), a_sds),
             "count": _sds((), jnp.int32),
         }

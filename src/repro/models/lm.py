@@ -20,6 +20,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.compat import tree as ctree
 from repro.core import DoRAConfig
 from repro.core.adapter import init_dora_params
 from repro.models import layers as L
@@ -122,7 +123,7 @@ def _is_leaf_spec(x):
 
 
 def _map_spec(fn, spec):
-    return jax.tree.map(fn, spec, is_leaf=_is_leaf_spec)
+    return ctree.map(fn, spec, is_leaf=_is_leaf_spec)
 
 
 def param_shapes(mcfg: ModelConfig):
@@ -175,14 +176,13 @@ def _init_leaf(key, kind, shape, dtype):
 def init_params(key, mcfg: ModelConfig):
     n_scan = mcfg.num_layers // mcfg.period
     spec = model_spec(mcfg)
-    flat, treedef = jax.tree.flatten(
-        spec, is_leaf=_is_leaf_spec)
+    _, treedef = ctree.flatten(spec, is_leaf=_is_leaf_spec)
     # Stable per-leaf keys via fold_in of the leaf index.
-    paths = jax.tree.flatten_with_path(spec, is_leaf=_is_leaf_spec)[0]
+    paths = ctree.flatten_with_path(spec, is_leaf=_is_leaf_spec)[0]
     leaves = []
     for i, ((path, leaf)) in enumerate(paths):
         kind, shape = leaf
-        in_stack = path and getattr(path[0], "key", None) == "stack"
+        in_stack = path and ctree.path_key(path[0]) == "stack"
         k = jax.random.fold_in(key, i)
         if in_stack:
             ks = jax.random.split(k, n_scan)
@@ -190,7 +190,7 @@ def init_params(key, mcfg: ModelConfig):
                 lambda kk: _init_leaf(kk, kind, shape, mcfg.dtype))(ks))
         else:
             leaves.append(_init_leaf(k, kind, shape, mcfg.dtype))
-    return jax.tree.unflatten(treedef, leaves)
+    return ctree.unflatten(treedef, leaves)
 
 
 # ---------------------------------------------------------------------------
@@ -295,8 +295,8 @@ def cache_shapes(mcfg: ModelConfig, batch: int, max_len: int,
 
 
 def init_cache(mcfg: ModelConfig, batch: int, max_len: int, dtype=None):
-    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                        cache_shapes(mcfg, batch, max_len, dtype))
+    return ctree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                     cache_shapes(mcfg, batch, max_len, dtype))
 
 
 # ---------------------------------------------------------------------------

@@ -18,6 +18,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.compat import tree as ctree
+
 _F32 = jnp.float32
 
 
@@ -45,7 +47,7 @@ def cosine_warmup_schedule(cfg: OptimizerConfig, step):
 
 
 def global_norm(tree) -> jax.Array:
-    leaves = jax.tree.leaves(tree)
+    leaves = ctree.leaves(tree)
     sq = sum(jnp.sum(jnp.square(l.astype(_F32))) for l in leaves)
     return jnp.sqrt(sq)
 
@@ -53,23 +55,21 @@ def global_norm(tree) -> jax.Array:
 def clip_by_global_norm(grads, max_norm: float):
     norm = global_norm(grads)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
-    return jax.tree.map(lambda g: (g.astype(_F32) * scale).astype(g.dtype),
-                        grads), norm
+    return ctree.map(lambda g: (g.astype(_F32) * scale).astype(g.dtype),
+                     grads), norm
 
 
 def _default_wd_mask(path, leaf) -> bool:
     """Decay A/B matrices; skip the magnitude vector m (norm-like) and
     the frozen base_sq cache (H3.2 — constant, zero grad)."""
-    last = path[-1]
-    key = getattr(last, "key", getattr(last, "name", str(last)))
-    return key not in ("m", "base_sq")
+    return ctree.path_key(path[-1]) not in ("m", "base_sq")
 
 
 def adamw_init(params) -> dict[str, Any]:
     zeros = lambda p: jnp.zeros(p.shape, _F32)
     return {
-        "mu": jax.tree.map(zeros, params),
-        "nu": jax.tree.map(zeros, params),
+        "mu": ctree.map(zeros, params),
+        "nu": ctree.map(zeros, params),
         "count": jnp.zeros((), jnp.int32),
     }
 
@@ -93,7 +93,7 @@ def adamw_update(grads, state, params, cfg: OptimizerConfig, *,
     c1 = 1.0 - b1 ** count.astype(_F32)
     c2 = 1.0 - b2 ** count.astype(_F32)
 
-    flat_g = jax.tree.flatten_with_path(grads)[0]
+    flat_g = ctree.flatten_with_path(grads)[0]
     masks = {tuple(str(k) for k in path): wd_mask(path, leaf)
              for path, leaf in flat_g}
 
@@ -109,10 +109,9 @@ def adamw_update(grads, state, params, cfg: OptimizerConfig, *,
         new_p = (p.astype(_F32) - lr * step).astype(p.dtype)
         return new_p, mu, nu
 
-    paths_p = jax.tree.flatten_with_path(params)
-    flat_p, treedef = paths_p[0], jax.tree.structure(params)
-    flat_mu = jax.tree.leaves(state["mu"])
-    flat_nu = jax.tree.leaves(state["nu"])
+    flat_p, treedef = ctree.flatten_with_path(params)
+    flat_mu = ctree.leaves(state["mu"])
+    flat_nu = ctree.leaves(state["nu"])
     flat_gl = [leaf for _, leaf in flat_g]
 
     new_p, new_mu, new_nu = [], [], []
@@ -123,9 +122,9 @@ def adamw_update(grads, state, params, cfg: OptimizerConfig, *,
         new_nu.append(c)
 
     new_state = {
-        "mu": jax.tree.unflatten(treedef, new_mu),
-        "nu": jax.tree.unflatten(treedef, new_nu),
+        "mu": ctree.unflatten(treedef, new_mu),
+        "nu": ctree.unflatten(treedef, new_nu),
         "count": count,
     }
     stats = {"lr": lr, "grad_norm": pre_norm}
-    return jax.tree.unflatten(treedef, new_p), new_state, stats
+    return ctree.unflatten(treedef, new_p), new_state, stats

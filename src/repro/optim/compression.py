@@ -20,22 +20,23 @@ within-pod (ICI) reduce stays full precision. Usage in the train step:
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
+
+from repro.compat import tree as ctree
 
 _F32 = jnp.float32
 
 
 def compress_bf16(grads):
-    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    return ctree.map(lambda g: g.astype(jnp.bfloat16), grads)
 
 
 def decompress_bf16(grads):
-    return jax.tree.map(lambda g: g.astype(_F32), grads)
+    return ctree.map(lambda g: g.astype(_F32), grads)
 
 
 def init_error_feedback(grads_like):
-    return jax.tree.map(lambda g: jnp.zeros(g.shape, _F32), grads_like)
+    return ctree.map(lambda g: jnp.zeros(g.shape, _F32), grads_like)
 
 
 def _quantize_one(g, ef):
@@ -51,18 +52,18 @@ def int8_ef_compress(grads, ef):
 
     ``corrected`` is needed by the decompress step to compute the new
     residual locally (corrected - dequantized)."""
-    flat = jax.tree.map(_quantize_one, grads, ef)
-    q = jax.tree.map(lambda t: t[0], flat,
+    flat = ctree.map(_quantize_one, grads, ef)
+    q = ctree.map(lambda t: t[0], flat,
                      is_leaf=lambda x: isinstance(x, tuple))
-    scale = jax.tree.map(lambda t: t[1], flat,
+    scale = ctree.map(lambda t: t[1], flat,
                          is_leaf=lambda x: isinstance(x, tuple))
-    corrected = jax.tree.map(lambda t: t[2], flat,
+    corrected = ctree.map(lambda t: t[2], flat,
                              is_leaf=lambda x: isinstance(x, tuple))
     return q, scale, corrected
 
 
 def int8_ef_decompress(q, scale, corrected):
     """Dequantize and compute the new error-feedback residual."""
-    deq = jax.tree.map(lambda qi, s: qi.astype(_F32) * s, q, scale)
-    new_ef = jax.tree.map(lambda c, d: c - d, corrected, deq)
+    deq = ctree.map(lambda qi, s: qi.astype(_F32) * s, q, scale)
+    new_ef = ctree.map(lambda c, d: c - d, corrected, deq)
     return deq, new_ef

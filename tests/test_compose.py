@@ -68,6 +68,13 @@ def test_broadcast_guard():
 class TestDispatch:
     CFG = DoRAConfig(mode="auto")
 
+    @pytest.fixture(autouse=True)
+    def _own_env(self, monkeypatch):
+        # These tests assert tier selection from cfg.mode alone; a
+        # forced-tier harness (scripts/run_tier1.sh) must not leak in.
+        monkeypatch.delenv("REPRO_FORCE_TIER", raising=False)
+        monkeypatch.delenv("REPRO_DORA_MODE", raising=False)
+
     def test_sub_crossover_routes_eager(self):
         t = dp.select_tier(self.CFG, training=True, rows=64, d_out=512)
         assert t is dp.Tier.EAGER  # KV-projection-sized: below crossover

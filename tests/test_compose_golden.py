@@ -1,0 +1,103 @@
+"""Golden-value regression: the stable compose vs the fp64 oracle at
+near-unity magnitude scales.
+
+The paper's Fig. 1 result rests on one numerical fact: with g = 1 ± 2^-k
+(DoRA's g concentrates inside the bf16 collapse zone), the naive form
+``g*(s*lora + base) - base`` cancels catastrophically while the stable form
+``(g-1)*base + g*s*lora`` keeps the correction exact — because (g - 1) is
+representable exactly in fp32 for these g. This module locks that behavior
+with exact golden values (scalar cases whose arithmetic is representable)
+and with fp64-oracle error bounds across bf16/fp32 activations on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compose import (compose_naive, compose_reference_fp64,
+                                compose_stable)
+
+jax.config.update("jax_enable_x64", True)
+
+# g offsets the paper measures: well inside bf16's 8-bit mantissa collapse
+# zone (2^-9) and inside fp16's (2^-13).
+G_OFFSETS = [2.0 ** -9, -(2.0 ** -9), 2.0 ** -13, -(2.0 ** -13)]
+S = 1.25  # exactly representable scaling
+
+
+def _mats(key, rows, d_out, dtype):
+    kb, kl = jax.random.split(key)
+    base = jax.random.normal(kb, (rows, d_out), jnp.float32).astype(dtype)
+    lora = (0.05 * jax.random.normal(kl, (rows, d_out),
+                                     jnp.float32)).astype(dtype)
+    return base, lora
+
+
+@pytest.mark.parametrize("off", G_OFFSETS)
+def test_exact_golden_scalar_case(off):
+    """base=1, lora=0, g=1+off: delta must be EXACTLY off (fp32), the
+    correction the naive bf16 form collapses to 0 or 2^-8."""
+    g = jnp.asarray([1.0 + off], jnp.float32)
+    base = jnp.ones((1, 1), jnp.float32)
+    lora = jnp.zeros((1, 1), jnp.float32)
+    delta = compose_stable(base, lora, g, S)
+    # Golden value: off is a power of two → (g-1)*1 is exact in fp32.
+    assert float(delta[0, 0]) == off
+
+
+@pytest.mark.parametrize("off", G_OFFSETS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stable_tracks_fp64_oracle(off, dtype, rng_key):
+    rows, d_out = 64, 256
+    base, lora = _mats(rng_key, rows, d_out, dtype)
+    g = jnp.full((d_out,), 1.0 + off, jnp.float32)
+    got = np.asarray(compose_stable(base, lora, g, S), np.float64)
+    want = np.asarray(compose_reference_fp64(base, lora, g, S))
+    # The compose itself runs in fp32; the only loss is the final cast to
+    # the activation dtype. Bound = 1 ulp of the output dtype on the
+    # correction's scale (|delta| ~ |off| + s*|lora|), NOT on |base| —
+    # that looser bound is exactly what the naive form needs and the
+    # stable form must beat.
+    scale = np.abs(want) + np.abs(off)
+    ulp = 1e-6 if dtype == jnp.float32 else 2.0 ** -8
+    err = np.abs(got - want)
+    assert np.max(err / np.maximum(scale, np.abs(off))) <= ulp, \
+        f"stable compose drifted from fp64 oracle at g=1{off:+g}"
+
+
+@pytest.mark.parametrize("off", [2.0 ** -9, -(2.0 ** -9)])
+def test_naive_bf16_collapses_where_stable_survives(off, rng_key):
+    """The regression this file exists for: at g = 1 ± 2^-9 in bf16, the
+    naive form's relative error vs the oracle must be ~100% (g rounds to
+    1.0 ± nothing after the multiply, the subtraction cancels), while the
+    stable form stays within bf16 quantization of the same oracle."""
+    rows, d_out = 64, 256
+    base, lora = _mats(rng_key, rows, d_out, jnp.bfloat16)
+    lora = jnp.zeros_like(lora)  # isolate the (g-1)*base correction
+    g = jnp.full((d_out,), 1.0 + off, jnp.float32)
+    want = np.asarray(compose_reference_fp64(base, lora, g, S))
+    stable = np.asarray(compose_stable(base, lora, g, S), np.float64)
+    naive = np.asarray(compose_naive(base, lora, g, S), np.float64)
+    denom = np.linalg.norm(want)
+    rel_stable = np.linalg.norm(stable - want) / denom
+    rel_naive = np.linalg.norm(naive - want) / denom
+    assert rel_stable < 0.01, rel_stable
+    assert rel_naive > 0.5, (
+        "naive bf16 compose unexpectedly survived the collapse zone — "
+        "did someone change its evaluation dtype?")
+
+
+def test_cosine_vs_oracle_above_paper_threshold(rng_key):
+    """Paper's headline equivalence metric: cosine similarity of the stable
+    fp32 compose vs the fp64 oracle > 0.9999 at every measured g offset."""
+    rows, d_out = 128, 512
+    base, lora = _mats(rng_key, rows, d_out, jnp.float32)
+    for off in G_OFFSETS:
+        g = jnp.full((d_out,), 1.0 + off, jnp.float32)
+        got = np.asarray(compose_stable(base, lora, g, S),
+                         np.float64).ravel()
+        want = np.asarray(compose_reference_fp64(base, lora, g, S)).ravel()
+        cos = got @ want / (np.linalg.norm(got) * np.linalg.norm(want))
+        assert cos > 0.9999, (off, cos)

@@ -1,4 +1,5 @@
 """Factored-norm correctness: algebra, chunking, baselines, sharding."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -116,11 +117,10 @@ _SHARDED_PROG = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat.mesh import make_mesh, shard_map
     from repro.core import factored_norm as fn
 
-    mesh = jax.make_mesh((8,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("model",))
     d_out, d_in, r, s = 64, 512, 16, 1.3
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
     W = jax.random.normal(k1, (d_out, d_in), jnp.float32)
@@ -155,7 +155,12 @@ def test_sharded_factored_norm_subprocess():
     """The psum-based sharded norm (8 fake devices, d_in sharded 8-way)
     matches the single-device factored norm. Run in a subprocess so the
     device-count flag doesn't leak into this test session."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    # Inherit the parent env (JAX_PLATFORMS etc. — a stripped env can send
+    # the TPU plugin off to poll cloud metadata) and pin the CPU backend.
+    env = dict(os.environ, PYTHONPATH=src, JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)  # the program sets its own device count
     res = subprocess.run([sys.executable, "-c", _SHARDED_PROG],
                          capture_output=True, text=True, timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                         env=env)
     assert "SHARDED_OK" in res.stdout, res.stderr[-2000:]

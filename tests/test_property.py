@@ -13,7 +13,13 @@ Invariant 4 — chunking invariance: any chunk budget gives the same norm.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; pip install -r "
+           "requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import repro.core.factored_norm as fn
 from repro.core import DoRAConfig, compose_stable

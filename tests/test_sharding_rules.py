@@ -115,21 +115,27 @@ def test_adapter_sharding_congruent(arch):
 
 
 def test_adapter_tp_congruence_rules():
-    """B row-sharded iff W out-sharded; A col-sharded iff W in-sharded.
-    FSDP is pod-only (H1.3), so on a (data, model) mesh the fsdp dims
-    replicate."""
+    """B row-sharded iff W out-sharded; A col-sharded iff W in-sharded —
+    whatever axis W's dim takes, the adapter dim takes the same one. On
+    this tp=1 mesh qwen3-32b crosses the per-chip budget, so its fsdp
+    role resolves to 'fsdp_data' (H3.5) and the fsdp dims land on
+    ``data`` rather than replicating."""
     mcfg = get_config("qwen3-32b")
     dcfg = DoRAConfig(rank=384)
-    sh = S.adapter_sharding(mcfg, dcfg, FakeMeshAsReal())
+    mesh = FakeMeshAsReal()
+    sh = S.adapter_sharding(mcfg, dcfg, mesh)
     unit = sh["stack"]["l0"]
-    # wq [q_dim, D]: out TP -> B/m model-sharded, A d_in pod-fsdp (repl
-    # on a single-pod mesh)
+    # wq [q_dim, D]: out TP -> B/m model-sharded; A d_in congruent with
+    # W's d_in (data-FSDP for this over-budget model on tp=1)
+    wq_roles = S.leaf_roles(mcfg, "wq", 2, mesh)
+    assert wq_roles == ("tp", "fsdp_data")
     assert unit["mixer"]["wq"]["B"].spec == P(None, "model", None)
     assert unit["mixer"]["wq"]["m"].spec == P(None, "model")
-    assert unit["mixer"]["wq"]["A"].spec == P(None, None, None)
-    # w_down [D, ff]: in TP -> A col-sharded over model
+    assert unit["mixer"]["wq"]["A"].spec == P(None, None, "data")
+    # w_down [D, ff]: in TP -> A col-sharded over model; B congruent with
+    # W's d_out fsdp axis
     assert unit["ffn"]["w_down"]["A"].spec == P(None, None, "model")
-    assert unit["ffn"]["w_down"]["B"].spec == P(None, None, None)
+    assert unit["ffn"]["w_down"]["B"].spec == P(None, "data", None)
 
 
 def test_adapter_pod_fsdp_on_multipod_mesh():
@@ -144,10 +150,8 @@ def test_adapter_pod_fsdp_on_multipod_mesh():
 def FakeMeshAsReal():
     """A real (1,1) mesh named like production but sized 1 — divisibility
     always passes, so the chosen axes reflect the pure role logic."""
-    import jax
-    from jax.sharding import AxisType
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    from repro.compat.mesh import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 class TestBatchAndCache:
