@@ -1,4 +1,5 @@
-"""Compose kernel benchmark — paper §5.4 / Table 9 / Figures 6-7.
+"""Compose kernel benchmark — paper §5.4 / Table 9 / Figures 6-7, extended
+with the matmul-fused compose.
 
 The paper's claim is a memory-traffic one: eager DoRA compose = 4 kernel
 launches x ~3 passes = ~12 HBM passes; fused = 1 pass (3 reads + 1 write).
@@ -11,8 +12,23 @@ On this CPU container we measure the two transferable quantities:
   - wall-clock of the jitted eager path vs. the Pallas kernel in
     interpret mode for *correctness* only (interpret mode is not a
     performance proxy).
+
+The matmul-fused section goes one fusion deeper: the unfused schedule
+materializes ``y_lora = h@Bᵀ`` in HBM before the compose; the fused kernel
+computes the up-projection per-tile in VMEM, so the [M, d_out] tensor is
+never written or re-read. For that kernel the analytic bytes-moved model
+(base read + delta write + h read + per-row-tile B re-reads) is reported
+alongside the measured HLO bytes of the unfused schedule — the model is
+the number that transfers to TPU.
+
+Results land in results/bench/ and, via ``write_artifact``, in the
+committed ``BENCH_compose.json`` that seeds the repo's perf trajectory.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -20,9 +36,16 @@ import jax.numpy as jnp
 from benchmarks.common import compiled_stats, fmt_bytes, save, time_fn
 from repro.core import compose as C
 from repro.kernels import ops as K
+from repro.kernels import ref as R
 
 SHAPES = [(1024, 2048), (4096, 4096), (8192, 4096), (16384, 8192)]
+# (rows, d_out, rank) for the matmul-fused path — r=384 is the paper's
+# high-rank regime; 128 the padding floor.
+MM_SHAPES = [(1024, 2048, 128), (4096, 4096, 384), (8192, 4096, 384)]
+SMOKE_SHAPES = [(256, 512)]
+SMOKE_MM_SHAPES = [(256, 512, 64)]
 S = 2.0
+MM_BLOCK_M = 256
 
 
 def eager_unfused(base, lora, g, s):
@@ -40,9 +63,124 @@ def fused_expr(base, lora, g, s):
     return C.compose_stable(base, lora, g, s)
 
 
-def run(dtype=jnp.bfloat16, verbose: bool = True) -> list[dict]:
+def mm_unfused(base, h, B, g, s):
+    """The pre-tentpole hot path: y_lora materialized in HBM (barrier),
+    then the element-wise compose — what dispatch ran before the
+    matmul-fused plan flag."""
+    y_lora = jax.lax.optimization_barrier(h @ B.T)
+    return C.compose_stable(base, y_lora, g, s)
+
+
+def mm_fused_expr(base, h, B, g, s):
+    """Single expression from the factored operands (XLA free to fuse the
+    element-wise tail into the matmul, but the [M, N] product still exists
+    as a buffer — the Pallas kernel is what removes it)."""
+    g32 = g.astype(jnp.float32)
+    t = jnp.asarray(s, jnp.float32) * jax.lax.dot_general(
+        h, B, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return ((g32 - 1.0) * base.astype(jnp.float32)
+            + g32 * t).astype(base.dtype)
+
+
+def mm_kernel_bytes_model(m, n, r, dtype_size: int,
+                          block_m: int = MM_BLOCK_M) -> dict:
+    """Analytic HBM traffic of the matmul-fused kernel vs the y_lora path.
+
+    unfused: h read + B read + y_lora write + (base read + y_lora read +
+             delta write)  →  4 full [M, N] passes + the small operands.
+    fused:   base read + delta write (2 passes) + h read + B re-read once
+             per row tile (the crossover term the dispatch guard bounds).
+    The fused kernel moves the 128-lane-PADDED rank (rp), same as the
+    dispatch guard — charging the raw r would understate the h/B terms
+    for off-lane ranks.
+    """
+    mn = m * n * dtype_size
+    row_tiles = -(-m // block_m)
+    rp = (r + 127) // 128 * 128
+    unfused = 4 * mn + (m * r + n * r) * dtype_size + 4 * n
+    fused = 2 * mn + (m * rp + row_tiles * n * rp) * dtype_size + 4 * n
+    return {"bytes_unfused_model": unfused, "bytes_fused_model": fused,
+            "model_ratio": unfused / fused}
+
+
+def run_mm(dtype=jnp.bfloat16, shapes=None, verbose: bool = True,
+           repeats: int = 10) -> list[dict]:
+    """Matmul-fused compose: measured unfused HLO bytes + wall vs the
+    fused expression, the analytic kernel bytes model, and interpret-mode
+    kernel correctness vs the fp64 oracle."""
     rows = []
-    for m, n in SHAPES:
+    for m, n, r in (shapes or MM_SHAPES):
+        k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(0), 4)
+        base = jax.random.normal(k1, (m, n), jnp.float32).astype(dtype)
+        h = (0.3 * jax.random.normal(k2, (m, r), jnp.float32)).astype(dtype)
+        B = (0.3 * jax.random.normal(k3, (n, r), jnp.float32)).astype(dtype)
+        g = 1.0 + 1e-3 * jax.random.normal(k4, (n,), jnp.float32)
+
+        st_unf = compiled_stats(
+            lambda b, hh, bb, gg: mm_unfused(b, hh, bb, gg, S),
+            base, h, B, g)
+        st_fus = compiled_stats(
+            lambda b, hh, bb, gg: mm_fused_expr(b, hh, bb, gg, S),
+            base, h, B, g)
+        jf_unf = jax.jit(lambda b, hh, bb, gg: mm_unfused(b, hh, bb, gg, S))
+        jf_fus = jax.jit(
+            lambda b, hh, bb, gg: mm_fused_expr(b, hh, bb, gg, S))
+        t_unf = time_fn(jf_unf, base, h, B, g, repeats=repeats)
+        t_fus = time_fn(jf_fus, base, h, B, g, repeats=repeats)
+
+        # interpret-mode kernel correctness vs the fp32 dense oracle
+        # (small slices keep the interpreter tractable at bench shapes;
+        # the fp64-oracle bounds live in tests/test_compose_mm.py where
+        # x64 is enabled).
+        ms, ns = min(m, 512), min(n, 1024)
+        out_k = K.fused_compose_mm(base[:ms, :ns], h[:ms], B[:ns], g[:ns],
+                                   S, mag_grad=False, interpret=True)
+        want = R.ref_compose_mm(base[:ms, :ns], h[:ms], B[:ns], g[:ns], S)
+        maxerr = float(jnp.max(jnp.abs(
+            out_k.astype(jnp.float32) - want.astype(jnp.float32))))
+
+        model = mm_kernel_bytes_model(m, n, r, jnp.dtype(dtype).itemsize)
+        row = {"shape": f"{m}x{n}r{r}",
+               "bytes_unfused": st_unf["bytes_accessed"],
+               "bytes_xla_fused": st_fus["bytes_accessed"],
+               **model,
+               "wall_unfused_s": t_unf["median_s"],
+               "wall_xla_fused_s": t_fus["median_s"],
+               "wall_speedup": t_unf["median_s"] / t_fus["median_s"],
+               "kernel_vs_oracle_maxerr": maxerr}
+        rows.append(row)
+        if verbose:
+            print(f"  {row['shape']:>14}: model "
+                  f"{fmt_bytes(model['bytes_unfused_model']):>8} -> "
+                  f"{fmt_bytes(model['bytes_fused_model']):>8} "
+                  f"({model['model_ratio']:.2f}x) | measured unfused "
+                  f"{fmt_bytes(row['bytes_unfused']):>8} | wall "
+                  f"{row['wall_speedup']:.2f}x | maxerr {maxerr:.2e}")
+    save("compose_mm_bench", rows)
+    return rows
+
+
+def write_artifact(rows_ew, rows_mm, path="BENCH_compose.json") -> str:
+    """Commit-able perf artifact: the bytes-moved reduction both compose
+    fusions deliver, seeding the repo's perf trajectory."""
+    payload = {
+        "bench": "compose",
+        "dtype": "bfloat16",
+        "elementwise_fused": rows_ew,
+        "matmul_fused": rows_mm,
+        "notes": "bytes_*_model are the analytic HBM-traffic numbers that "
+                 "transfer to TPU; wall clocks are CPU-relative only.",
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+        f.write("\n")
+    return path
+
+
+def run(dtype=jnp.bfloat16, shapes=None, verbose: bool = True) -> list[dict]:
+    rows = []
+    for m, n in (shapes or SHAPES):
         key = jax.random.PRNGKey(0)
         kb, kl = jax.random.split(key)
         base = jax.random.normal(kb, (m, n), jnp.float32).astype(dtype)
@@ -89,8 +227,22 @@ def run(dtype=jnp.bfloat16, verbose: bool = True) -> list[dict]:
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / few repeats (CI gate)")
+    ap.add_argument("--artifact", default="",
+                    help="also write the committed BENCH_compose.json "
+                         "artifact to this path")
+    # parse_known_args: benchmarks.run invokes main() under its own argv.
+    args, _ = ap.parse_known_args()
     print("# Compose traffic & wall (paper Table 9 / Fig 6-7), bf16")
-    run()
+    rows_ew = run(shapes=SMOKE_SHAPES if args.smoke else None)
+    print("# Matmul-fused compose (y_lora never materialized), bf16")
+    rows_mm = run_mm(shapes=SMOKE_MM_SHAPES if args.smoke else None,
+                     repeats=3 if args.smoke else 10)
+    if args.artifact:
+        path = write_artifact(rows_ew, rows_mm, args.artifact)
+        print(f"wrote {os.path.abspath(path)}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,141 @@
+"""Decode throughput before/after the frozen-adapter serving cache.
+
+Measures the decode loop (the only part the cache touches per token) in
+three configurations on a CPU-runnable smoke config:
+
+  - ``uncached``   — the pre-tentpole path: the factored norm of every
+    adapted layer recomputed on EVERY decode token;
+  - ``cached``     — g precomputed once by ``precompute_adapter_state``,
+    decode does zero norm work per token (bitwise-identical logits);
+  - ``cached+gsB`` — g·s additionally folded into B (broadcast-free
+    compose; allclose, not bitwise).
+
+Absolute tok/s on this CPU is meaningless for TPU; the *ratio* isolates
+exactly the per-token norm work the cache removes, and is recorded in the
+committed ``BENCH_serve.json`` to seed the perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] \
+        [--artifact BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save
+from repro.configs import get_config
+from repro.core import DoRAConfig
+from repro.launch.steps import (StepConfig, make_decode_step,
+                                make_precompute_step, make_prefill_step)
+from repro.launch.train import build_state
+
+
+def bench_decode(mcfg, scfg, params, adapters, *, batch, prompt_len,
+                 max_len, gen_len, warmup=2):
+    """Time ``gen_len`` decode steps against a prefilled cache; returns
+    (tok_s, ms_per_token)."""
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, mcfg.vocab_size,
+                                    (batch, prompt_len)), jnp.int32)
+    prefill = jax.jit(make_prefill_step(mcfg, scfg, None, batch=batch,
+                                        seq=max_len))
+    decode = jax.jit(make_decode_step(mcfg, scfg, None, batch=batch))
+    logits, cache = jax.block_until_ready(
+        prefill(params, adapters, {"tokens": toks}))
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    for _ in range(warmup):
+        logits, _ = decode(params, adapters, cache, {"tokens": nxt})
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    c = cache
+    for _ in range(gen_len):
+        logits, c = decode(params, adapters, c, {"tokens": nxt})
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    return batch * gen_len / dt, 1e3 * dt / gen_len
+
+
+def run(arch="qwen2-7b", *, smoke=True, rank=64, batch=4, prompt_len=16,
+        gen_len=32, verbose=True) -> list[dict]:
+    mcfg = get_config(arch, smoke=smoke)
+    dcfg = DoRAConfig(rank=rank, alpha=2.0 * rank, mode="auto")
+    scfg = StepConfig(dora=dcfg)
+    params, adapters, _ = build_state(mcfg, dcfg, 0)
+    max_len = prompt_len + gen_len + 4
+
+    t0 = time.perf_counter()
+    cached = jax.block_until_ready(jax.jit(
+        make_precompute_step(mcfg, scfg))(params, adapters))
+    t_pre = time.perf_counter() - t0
+    folded = jax.block_until_ready(jax.jit(make_precompute_step(
+        mcfg, scfg, fold_gsb=True))(params, adapters))
+
+    cases = [("uncached", adapters), ("cached", cached),
+             ("cached+gsB", folded)]
+    rows = []
+    base_tok_s = None
+    for name, tree in cases:
+        tok_s, ms = bench_decode(mcfg, scfg, params, tree, batch=batch,
+                                 prompt_len=prompt_len, max_len=max_len,
+                                 gen_len=gen_len)
+        base_tok_s = base_tok_s or tok_s
+        row = {"mode": name, "arch": mcfg.name, "rank": rank,
+               "batch": batch, "gen_len": gen_len,
+               "tok_s": tok_s, "ms_per_token": ms,
+               "speedup_vs_uncached": tok_s / base_tok_s}
+        rows.append(row)
+        if verbose:
+            print(f"  {name:>12}: {tok_s:8.1f} tok/s  ({ms:6.2f} ms/tok, "
+                  f"{row['speedup_vs_uncached']:.2f}x)")
+    if verbose:
+        print(f"  precompute (one-off, amortized over the adapter set): "
+              f"{1e3 * t_pre:.1f} ms")
+    for r in rows:
+        r["precompute_ms"] = 1e3 * t_pre
+    save("serve_bench", rows)
+    return rows
+
+
+def write_artifact(rows, path="BENCH_serve.json") -> str:
+    payload = {"bench": "serve_decode",
+               "rows": rows,
+               "notes": "smoke-config CPU decode; the cached/uncached "
+                        "ratio isolates the per-token factored-norm work "
+                        "removed by precompute_adapter_state."}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+        f.write("\n")
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--rank", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: short decode, small batch (the MODEL "
+                         "is always the smoke config on this CPU "
+                         "container; rows record the actual arch name)")
+    ap.add_argument("--artifact", default="",
+                    help="also write the committed BENCH_serve.json")
+    args, _ = ap.parse_known_args()
+    gen = 8 if args.smoke else args.gen_len
+    batch = 2 if args.smoke else args.batch
+    print("# Decode tok/s before/after the frozen-adapter cache")
+    rows = run(args.arch, smoke=True, rank=args.rank, batch=batch,
+               gen_len=gen)
+    if args.artifact:
+        print(f"wrote {os.path.abspath(write_artifact(rows, args.artifact))}")
+
+
+if __name__ == "__main__":
+    main()

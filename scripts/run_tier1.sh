@@ -47,3 +47,17 @@ if [ "${passed}" -lt "${MIN_PASS}" ]; then
     exit 1
 fi
 echo "tier-1 OK: ${passed} passed, ${failed} failed (floor ${MIN_PASS}, REPRO_FORCE_TIER=${REPRO_FORCE_TIER})"
+
+# End-to-end smokes (still under the forced tier, so the fused kernels and
+# the frozen-adapter cache path are exercised through the Pallas
+# interpreter on every gate). set -e aborts the gate on any failure.
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+echo
+echo "serve smoke (REPRO_FORCE_TIER=${REPRO_FORCE_TIER}): adapter cache + padded prefill"
+python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \
+    --prompt-len 16 --gen-len 4
+echo
+echo "bench smoke: compose kernels (incl. matmul-fused) + serving cache"
+python -m benchmarks.compose_bench --smoke
+python -m benchmarks.serve_bench --smoke
+echo "tier-1 smokes OK"

@@ -2,7 +2,8 @@
 from repro.core.config import DoRAConfig
 from repro.core.adapter import (
     dora_linear, dora_linear_stacked, init_dora_params,
-    compute_weight_norm, compose_delta,
+    compute_weight_norm, compose_delta, compose_delta_factored,
+    precompute_adapter_state, invalidate_adapter_state,
 )
 # NOTE: the factored_norm *function* is deliberately not re-exported at
 # package level — it would shadow the repro.core.factored_norm submodule.
@@ -17,7 +18,8 @@ from repro.core.dispatch import Tier, select_tier
 
 __all__ = [
     "DoRAConfig", "dora_linear", "dora_linear_stacked", "init_dora_params",
-    "compute_weight_norm", "compose_delta",
+    "compute_weight_norm", "compose_delta", "compose_delta_factored",
+    "precompute_adapter_state", "invalidate_adapter_state",
     "factored_norm_terms", "factored_norm_sharded", "assemble_norm",
     "norm_peft_eye", "norm_dense_ba", "dtype_eps", "compose_stable",
     "compose_naive", "magnitude_scale", "Tier", "select_tier",

@@ -7,12 +7,25 @@ Forward contract (paper App. A):
     w_norm = ||W + s·B·A||_row         (fp32, detached, recomputed per step)
 
 Bias is subtracted before the compose and re-added after (i.e. the compose
-operates on the bias-free Y_base); the norm is recomputed every forward and
-never cached across steps. Weights follow the paper's [d_out, d_in]
-convention with per-output-row norms.
+operates on the bias-free Y_base); under training the norm is recomputed
+every forward. Weights follow the paper's [d_out, d_in] convention with
+per-output-row norms.
 
 ``dora_linear`` is the single integration point the models use; it routes
-through the three-tier dispatch.
+through the three-tier dispatch. Two hot-path overhauls live here:
+
+  - **Matmul-fused compose** (plan flag ``matmul_fused``): when the rank
+    passes the crossover guard, the LoRA up-projection ``h @ Bᵀ`` runs
+    inside the compose kernel and the ``[M, d_out]`` y_lora tensor is never
+    materialized in HBM.
+  - **Frozen-adapter serving state** (:func:`precompute_adapter_state`):
+    during generation A/B/m are frozen, so ``w_norm`` — and hence ``g`` —
+    is computed ONCE per adapter set and carried in the adapter tree as a
+    ``"g"`` leaf; the decode loop then does zero factored-norm work per
+    token. **Invalidation contract:** the cached state is only valid while
+    A/B/m are untouched — ``dora_linear(training=True)`` refuses a tree
+    carrying ``"g"`` so a stale cache can never silently leak into
+    training; rebuild the state after every adapter update.
 """
 from __future__ import annotations
 
@@ -21,6 +34,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+from jax import ad_checkpoint as _adc
 
 from repro.core import compose as _compose
 from repro.core import dispatch as _dispatch
@@ -59,7 +73,19 @@ def init_dora_params(key, W, cfg: DoRAConfig, *, m_dtype=jnp.float32):
 def compute_weight_norm(W, A, B, cfg: DoRAConfig, *, axis_name=None,
                         base_sq_cache=None, interpret: bool | None = None):
     """Detached fp32 [d_out] row norm of the composed weight, routed through
-    the configured implementation."""
+    the configured implementation. Every route tags its result with the
+    ``"dora_wnorm"`` checkpoint name: the layer-remat policy saves it
+    (instead of recomputing O(d_out·d_in) in the backward) and tests
+    assert from the jaxpr that cached-state serving steps contain no norm
+    work at all."""
+    return _adc.checkpoint_name(
+        _compute_weight_norm(W, A, B, cfg, axis_name=axis_name,
+                             base_sq_cache=base_sq_cache,
+                             interpret=interpret), "dora_wnorm")
+
+
+def _compute_weight_norm(W, A, B, cfg: DoRAConfig, *, axis_name,
+                         base_sq_cache, interpret):
     impl = cfg.norm_impl
     if axis_name is not None:
         # Sharded accumulation (beyond-paper, DESIGN.md §5): only the
@@ -85,13 +111,19 @@ def compute_weight_norm(W, A, B, cfg: DoRAConfig, *, axis_name=None,
                                base_sq_cache=base_sq_cache)
 
 
-def compose_delta(y_base, y_lora, g, cfg: DoRAConfig, *, training: bool):
-    """Route the compose through the three-tier dispatch."""
-    _compose.check_broadcast(g, y_base)
+def _row_count(shape) -> int:
     rows = 1
-    for d in y_base.shape[:-1]:
+    for d in shape[:-1]:
         rows *= d
-    plan = _dispatch.plan_compose(cfg, training=training, rows=rows,
+    return rows
+
+
+def compose_delta(y_base, y_lora, g, cfg: DoRAConfig, *, training: bool):
+    """Route the compose through the three-tier dispatch (materialized
+    y_lora form — rank unknown here, so never matmul-fused)."""
+    _compose.check_broadcast(g, y_base)
+    plan = _dispatch.plan_compose(cfg, training=training,
+                                  rows=_row_count(y_base.shape),
                                   d_out=y_base.shape[-1])
     if plan.tier is _dispatch.Tier.EAGER:
         return _compose.compose_stable(y_base, y_lora, g, cfg.scaling)
@@ -110,50 +142,189 @@ def compose_delta(y_base, y_lora, g, cfg: DoRAConfig, *, training: bool):
         interpret=plan.interpret)
 
 
+def compose_delta_factored(y_base, h, B, g, cfg: DoRAConfig, *,
+                           training: bool):
+    """Compose from the factored LoRA activation ``h = x@Aᵀ``.
+
+    When the plan resolves matmul-fused, the up-projection h@Bᵀ runs inside
+    the compose kernel and y_lora never touches HBM; otherwise y_lora is
+    materialized once and the classic element-wise path runs (identical
+    math — tier-equivalence is tested).
+    """
+    _compose.check_broadcast(g, y_base)
+    plan = _dispatch.plan_compose(cfg, training=training,
+                                  rows=_row_count(y_base.shape),
+                                  d_out=y_base.shape[-1],
+                                  rank=B.shape[-1])
+    if plan.matmul_fused:
+        from repro.kernels import ops as _kops
+        mag_grad = cfg.magnitude_trainable
+        if plan.tier is _dispatch.Tier.FUSED_FWD:
+            g = jax.lax.stop_gradient(g)
+            mag_grad = False
+        return _kops.fused_compose_mm(
+            y_base, h, B, g, cfg.scaling, mag_grad=mag_grad,
+            block_m=cfg.block_rows, block_n=cfg.block_cols,
+            interpret=plan.interpret)
+    y_lora = h @ B.T
+    return compose_delta(y_base, y_lora, g, cfg, training=training)
+
+
 def dora_linear(x, W, adapter: dict[str, Any], cfg: DoRAConfig, *,
                 bias=None, training: bool = True, axis_name=None,
                 base_sq_cache=None, constrain=None):
     """Adapted linear: x [..., d_in] → y [..., d_out].
 
     W: frozen [d_out, d_in]; adapter: {"A": [r, d_in], "B": [d_out, r],
-    "m": [d_out]}. ``axis_name``: if W/A are d_in-sharded inside shard_map,
-    the norm partials psum over this axis. ``constrain``: optional
+    "m": [d_out]} plus optional cached leaves — "base_sq" (precomputed
+    ||W||²_row, H3.2) and the frozen-adapter serving state written by
+    :func:`precompute_adapter_state` ("g", optionally "gsB"). A cached "g"
+    skips the factored norm entirely (zero norm FLOPs per decode token) and
+    is refused under ``training=True`` (invalidation contract).
+
+    ``axis_name``: if W/A are d_in-sharded inside shard_map, the norm
+    partials psum over this axis. ``constrain``: optional
     sharding-constraint fn applied to y_base / y_lora — row-parallel call
     sites pin the sequence-parallel sharding here so the partial sums
     lower to reduce-scatter and the compose runs seq-sharded
-    (EXPERIMENTS.md §Perf H1.4).
+    (EXPERIMENTS.md §Perf H1.4). A constrained y_lora must exist to be
+    constrained, so those call sites keep the materialized-lora path.
     """
     A, B, m = adapter["A"], adapter["B"], adapter["m"]
-    if base_sq_cache is None and "base_sq" in adapter:
-        base_sq_cache = adapter["base_sq"]
-    if base_sq_cache is not None:
-        base_sq_cache = jax.lax.stop_gradient(base_sq_cache)
+    if "g" in adapter:
+        if training:
+            raise ValueError(
+                "adapter tree carries precomputed serving state ('g'), "
+                "which is stale the moment A/B/m change: it is invalid "
+                "under training=True. Train on the raw adapter tree and "
+                "rebuild the state with precompute_adapter_state() after "
+                "the update.")
+        g = jax.lax.stop_gradient(adapter["g"]).astype(_F32)
+    else:
+        if base_sq_cache is None and "base_sq" in adapter:
+            base_sq_cache = adapter["base_sq"]
+        if base_sq_cache is not None:
+            base_sq_cache = jax.lax.stop_gradient(base_sq_cache)
+        w_norm = compute_weight_norm(W, A, B, cfg, axis_name=axis_name,
+                                     base_sq_cache=base_sq_cache)
+        eps = _norm.dtype_eps(x.dtype)
+        g = _compose.magnitude_scale(m, w_norm, eps)
     if not cfg.magnitude_trainable:
-        m = jax.lax.stop_gradient(m)
-    w_norm = compute_weight_norm(W, A, B, cfg, axis_name=axis_name,
-                                 base_sq_cache=base_sq_cache)
-    eps = _norm.dtype_eps(x.dtype)
-    g = _compose.magnitude_scale(m, w_norm, eps)
+        g = jax.lax.stop_gradient(g)
 
     W = jax.lax.stop_gradient(W)
     y_base = x @ W.T
-    y_lora = (x @ A.T) @ B.T
-    if constrain is not None:
-        y_base = constrain(y_base)
-        y_lora = constrain(y_lora)
-    delta = compose_delta(y_base, y_lora, g, cfg, training=training)
-    y = y_base + delta
+    if "gsB" in adapter and not training and constrain is None:
+        # Serving fast path (opt-in, see precompute_adapter_state): g·s is
+        # pre-folded into B, so the per-token work collapses to two
+        # matmuls + one fused multiply-add — the g·s broadcast over the
+        # [M, d_out] lora term is gone (only the (g-1)·base one remains).
+        # Sharded call sites (constrain set) keep the standard path: the
+        # sequence-parallel constraint needs the lora tensor to pin.
+        gsB = jax.lax.stop_gradient(adapter["gsB"])
+        t = jax.lax.dot_general(
+            (x @ A.T).astype(_F32), gsB.astype(_F32),
+            (((x.ndim - 1,), (1,)), ((), ())), preferred_element_type=_F32)
+        delta = ((g - 1.0) * y_base.astype(_F32) + t).astype(y_base.dtype)
+        y = y_base + delta
+    else:
+        h = x @ A.T
+        if constrain is not None:
+            y_base = constrain(y_base)
+            y_lora = constrain(h @ B.T)
+            delta = compose_delta(y_base, y_lora, g, cfg, training=training)
+        else:
+            delta = compose_delta_factored(y_base, h, B, g, cfg,
+                                           training=training)
+        y = y_base + delta
     if bias is not None:
         y = y + bias  # bias re-added after the compose (paper App. A)
     return y
 
 
-def dora_linear_stacked(x, W, adapter, cfg: DoRAConfig, *, training=True):
+def dora_linear_stacked(x, W, adapter, cfg: DoRAConfig, *, bias=None,
+                        training=True, base_sq_cache=None):
     """vmap over a leading stack dim (e.g. experts): x [E, ..., d_in],
-    W [E, d_out, d_in], adapter leaves stacked on dim 0."""
+    W [E, d_out, d_in], adapter leaves stacked on dim 0; ``bias`` /
+    ``base_sq_cache`` (both [E, d_out] when given) and ``training`` are
+    forwarded so expert/layer stacks hit the same cached base-norm fast
+    path as the unstacked call."""
+    def one(xe, we, ad, be, bq):
+        return dora_linear(xe, we, ad, cfg, bias=be, training=training,
+                           base_sq_cache=bq)
+
     return jax.vmap(
-        lambda xe, we, ad: dora_linear(xe, we, ad, cfg, training=training)
-    )(x, W, adapter)
+        one,
+        in_axes=(0, 0, 0,
+                 None if bias is None else 0,
+                 None if base_sq_cache is None else 0),
+    )(x, W, adapter, bias, base_sq_cache)
+
+
+# ---------------------------------------------------------------------------
+# Frozen-adapter serving state (decode does zero norm work per token).
+# ---------------------------------------------------------------------------
+
+def _is_adapter_leaf(node) -> bool:
+    return isinstance(node, dict) and {"A", "B", "m"} <= set(node.keys())
+
+
+def precompute_adapter_state(params, adapters, cfg: DoRAConfig, *,
+                             act_dtype=None, fold_gsb: bool = False):
+    """Compute the per-adapter serving state once for a frozen adapter set.
+
+    Walks the adapter tree alongside the congruent ``params`` tree and
+    returns a NEW adapter tree whose leaves additionally carry
+
+      - ``"g"``  — fp32 [d_out] magnitude scale m / max(||W+sBA||_row, ε),
+        computed with the exact runtime eps (``act_dtype`` must match the
+        activation dtype the model runs in, else g is not bitwise-equal to
+        the recomputed one);
+      - ``"gsB"`` (``fold_gsb=True`` only) — fp32 [d_out, r] with g·s folded
+        into B, enabling the broadcast-free decode compose. Off by default
+        because the folded evaluation order differs from the canonical
+        ``s·lora``-first form by last-ulp rounding.
+
+    Stacked leaves ([n_scan, ...] / experts) are handled by vmapping over
+    the leading dims. The returned tree is for **serving only**: prefill
+    and decode skip the factored norm entirely, and ``dora_linear``
+    raises if the tree reaches a ``training=True`` call (the invalidation
+    contract — any update to A/B/m invalidates the cache, so rebuild the
+    state after each training step before serving again).
+    """
+    eps = _norm.dtype_eps(act_dtype if act_dtype is not None else _F32)
+
+    def leaf_state(W, ad):
+        if W.ndim > 2:
+            return jax.vmap(leaf_state)(W, ad)
+        w_norm = compute_weight_norm(W, ad["A"], ad["B"], cfg,
+                                     base_sq_cache=ad.get("base_sq"))
+        g = _compose.magnitude_scale(ad["m"], w_norm, eps)
+        # Strip any prior serving state first: re-precomputing a folded
+        # tree with fold_gsb=False must not leave a stale "gsB" behind
+        # (dora_linear would silently prefer it over the bitwise path).
+        out = {k: v for k, v in ad.items() if k not in ("g", "gsB")}
+        out["g"] = jax.lax.stop_gradient(g)
+        if fold_gsb:
+            gsB = (g * cfg.scaling)[:, None] * ad["B"].astype(_F32)
+            out["gsB"] = jax.lax.stop_gradient(gsB)
+        return out
+
+    def walk(p_node, a_node):
+        if _is_adapter_leaf(a_node):
+            return leaf_state(p_node, a_node)
+        return {k: walk(p_node[k], v) for k, v in a_node.items()}
+
+    return walk(params, adapters)
+
+
+def invalidate_adapter_state(adapters):
+    """Strip the serving-state leaves ("g"/"gsB") from an adapter tree,
+    returning the raw trainable tree — the inverse of
+    :func:`precompute_adapter_state`."""
+    if _is_adapter_leaf(adapters):
+        return {k: v for k, v in adapters.items() if k not in ("g", "gsB")}
+    return {k: invalidate_adapter_state(v) for k, v in adapters.items()}
 
 
 @dataclasses.dataclass(frozen=True)

@@ -67,6 +67,17 @@ class DoRAConfig:
     save_inner: bool = True
     magnitude_trainable: bool = True
     dropout: float = 0.0
+    # Matmul-fused compose (beyond-paper, one fusion deeper): compute the
+    # LoRA up-projection h@Bᵀ inside the compose kernel so y_lora is never
+    # written to HBM. Only taken on the fused backends when the (128-padded)
+    # rank stays below the crossover — above it the per-row-tile re-reads
+    # of B exceed the y_lora write+read the fusion saves (B traffic ≈
+    # (M/block_rows)·d_out·r vs 2·M·d_out, i.e. profitable while
+    # r ≲ 2·block_rows). ``mm_fused_max_rank=None`` derives exactly that
+    # 2·block_rows bound, so tuning block_rows re-calibrates the guard;
+    # set an int to pin it explicitly.
+    compose_matmul_fused: bool = True
+    mm_fused_max_rank: int | None = None
 
     # --- kernel block shapes (perf-tunable; see EXPERIMENTS.md §Perf) ---
     block_rows: int = 256
@@ -128,6 +139,13 @@ class DoRAConfig:
         if self.force_tier is not None:
             return _normalize_tier(self.force_tier)
         return self.mode
+
+    def resolve_mm_fused_max_rank(self) -> int:
+        """Rank crossover for the matmul-fused compose: explicit override
+        or the bytes-model bound 2·block_rows (see the field comment)."""
+        if self.mm_fused_max_rank is not None:
+            return self.mm_fused_max_rank
+        return 2 * self.block_rows
 
     def resolve_chunk_mb(self) -> int | None:
         env = _env_flag("REPRO_DORA_NORM_CHUNK_MB")

@@ -62,6 +62,10 @@ class KernelPlan:
     tier: Tier
     backend: str       # DISPATCH_TABLE key actually used
     interpret: bool    # pass to pallas_call
+    # Matmul-fused compose: the LoRA up-projection h@Bᵀ runs inside the
+    # compose kernel (y_lora never materialized). Only ever True on a fused
+    # tier with a crossover-eligible rank (see ``mm_fused_eligible``).
+    matmul_fused: bool = False
 
     @property
     def fused(self) -> bool:
@@ -110,14 +114,29 @@ def shape_supported(d_out: int) -> bool:
     return d_out % 128 == 0
 
 
+def mm_fused_eligible(rank: int | None, cfg: DoRAConfig) -> bool:
+    """Crossover guard for the matmul-fused compose: the kernel re-reads the
+    B tile once per row-tile, so its extra traffic is ~(rows/block_rows)·
+    d_out·r bytes vs the 2·rows·d_out the fusion saves — profitable while
+    the (lane-padded) rank stays below ``mm_fused_max_rank`` (≈2·block_rows
+    by the bytes model). ``rank=None`` (call sites composing an already
+    materialized y_lora) is never eligible."""
+    if rank is None or not cfg.compose_matmul_fused:
+        return False
+    rank_padded = (rank + 127) // 128 * 128
+    return rank_padded <= cfg.resolve_mm_fused_max_rank()
+
+
 def plan_compose(cfg: DoRAConfig, *, training: bool, rows: int,
-                 d_out: int) -> KernelPlan:
-    """Resolve the compose call site to (Tier, backend, interpret).
+                 d_out: int, rank: int | None = None) -> KernelPlan:
+    """Resolve the compose call site to (Tier, backend, interpret, mm-fused).
 
     The shape constraint outranks even a forced tier: d_out % 128 != 0 is
     inexpressible in the 128-lane kernels, and the paper (App. B/C)
     specifies the eager fallback for it — same precedence the seed
-    dispatch had.
+    dispatch had. ``rank``: the adapter rank when the caller still holds
+    the factored ``h = x@Aᵀ`` (enables the matmul-fused kernel); None when
+    only the materialized y_lora is available.
     """
     if not shape_supported(d_out):
         return KernelPlan(Tier.EAGER, "eager", False)
@@ -128,7 +147,8 @@ def plan_compose(cfg: DoRAConfig, *, training: bool, rows: int,
     if mode == "auto" and not above_crossover(rows, d_out, cfg):
         return KernelPlan(Tier.EAGER, "eager", False)
     tier = Tier.FUSED_BWD if training else Tier.FUSED_FWD
-    return KernelPlan(tier, backend.name, backend.interpret)
+    return KernelPlan(tier, backend.name, backend.interpret,
+                      matmul_fused=mm_fused_eligible(rank, cfg))
 
 
 def plan_norm(cfg: DoRAConfig, *, d_out: int) -> KernelPlan:

@@ -25,6 +25,17 @@ reduction order).
 
 Shape constraint (paper App. C): d_out must be divisible by 128; the ops
 wrapper pads rows and enforces/falls back on the feature dim.
+
+Matmul-fused variant (one fusion deeper than the paper): the forward takes
+``h = x @ Aᵀ [M, r]`` and ``B [d_out, r]`` instead of the materialized
+``lora = h @ Bᵀ`` — the LoRA up-projection runs on the MXU inside the same
+pass that composes the delta, so the ``[M, d_out]`` ``lora`` tensor is never
+written to (or re-read from) HBM: 3 full-matrix passes become 2. The matching
+backward emits ``d_h = (g·s)·dY @ B`` fused with ``d_base = (g-1)·dY`` in a
+single pass over dY, accumulating the ``[bm, r]`` d_h tile across the
+sequential d_out-chunk grid dimension (same accumulation pattern as the
+factored-norm kernel). r is zero-padded to the 128-lane width by the ops
+wrapper; zero columns perturb neither contraction.
 """
 from __future__ import annotations
 
@@ -33,7 +44,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.compat.pallas import pl
+from repro.compat.pallas import pl, tpu_compiler_params
 
 _F32 = jnp.float32
 
@@ -115,3 +126,97 @@ def compose_bwd_pallas(dy, gm1, gs, *, block_m: int, block_n: int,
         out_shape=(out_shape, out_shape),
         interpret=interpret,
     )(dy, gm1, gs)
+
+
+# ---------------------------------------------------------------------------
+# Matmul-fused compose: the LoRA up-projection h @ Bᵀ never leaves VMEM.
+# ---------------------------------------------------------------------------
+
+def _mm_fwd_kernel(base_ref, h_ref, b_ref, gm1_ref, delta_ref, *, s: float):
+    b = base_ref[...].astype(_F32)                 # [bm, bn]
+    h = h_ref[...].astype(_F32)                    # [bm, rp]
+    bm_ = b_ref[...].astype(_F32)                  # [bn, rp]
+    gm1 = gm1_ref[...].astype(_F32)                # (1, bn)
+    lora = jax.lax.dot_general(                    # h @ B_tileᵀ on the MXU
+        h, bm_, (((1,), (1,)), ((), ())), preferred_element_type=_F32)
+    t = jnp.asarray(s, _F32) * lora                # canonical order (§3.1)
+    delta_ref[...] = (gm1 * b + (gm1 + 1.0) * t).astype(delta_ref.dtype)
+
+
+def _mm_bwd_kernel(dy_ref, b_ref, gm1_ref, gs_ref, dbase_ref, dh_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        dh_ref[...] = jnp.zeros_like(dh_ref)
+
+    dy = dy_ref[...].astype(_F32)                  # [bm, bn]
+    gm1 = gm1_ref[...].astype(_F32)                # (1, bn)
+    gs = gs_ref[...].astype(_F32)                  # (1, bn)
+    dbase_ref[...] = (gm1 * dy).astype(dbase_ref.dtype)
+    t = gs * dy                                    # (g·s)·dY tile
+    dh_ref[...] += jax.lax.dot_general(            # accumulate over d_out
+        t, b_ref[...].astype(_F32), (((1,), (0,)), ((), ())),
+        preferred_element_type=_F32)
+
+
+def compose_mm_fwd_pallas(base, h, B, gm1, s: float, *,
+                          block_m: int, block_n: int,
+                          interpret: bool = False):
+    """base: [M, N]; h: [M, rp]; B: [N, rp]; gm1: fp32 [1, N].
+
+    Returns delta [M, N] = (g-1)⊙base + g⊙s⊙(h @ Bᵀ) with the up-projection
+    computed per-tile in VMEM. rp (the padded rank) must be a lane multiple;
+    callers pad through the ops wrapper.
+    """
+    m, n = base.shape
+    rp = h.shape[1]
+    grid = (pl.cdiv(m, block_m), pl.cdiv(n, block_n))
+    mat, vec = _row_specs(block_m, block_n)
+    return pl.pallas_call(
+        functools.partial(_mm_fwd_kernel, s=float(s)),
+        grid=grid,
+        in_specs=[
+            mat,                                            # base (i, j)
+            pl.BlockSpec((block_m, rp), lambda i, j: (i, 0)),   # h (i, ·)
+            pl.BlockSpec((block_n, rp), lambda i, j: (j, 0)),   # B (j, ·)
+            vec,                                            # gm1 (·, j)
+        ],
+        out_specs=mat,
+        out_shape=jax.ShapeDtypeStruct((m, n), base.dtype),
+        interpret=interpret,
+    )(base, h, B, gm1)
+
+
+def compose_mm_bwd_pallas(dy, B, gm1, gs, *, block_m: int, block_n: int,
+                          interpret: bool = False):
+    """dy: [M, N]; B: [N, rp]; gm1, gs: fp32 [1, N].
+
+    Returns (d_base [M, N], d_h fp32 [M, rp]) in ONE pass over dY: the d_h
+    tile accumulates across the sequential d_out-chunk grid dimension
+    (paper §3.2 extended one matmul deeper — dY is read once for both
+    cotangents instead of once for d_base and once for the d_lora @ B
+    matmul).
+    """
+    m, n = dy.shape
+    rp = B.shape[1]
+    grid = (pl.cdiv(m, block_m), pl.cdiv(n, block_n))
+    mat, vec = _row_specs(block_m, block_n)
+    return pl.pallas_call(
+        _mm_bwd_kernel,
+        grid=grid,
+        in_specs=[
+            mat,                                            # dy (i, j)
+            pl.BlockSpec((block_n, rp), lambda i, j: (j, 0)),   # B (j, ·)
+            vec, vec,                                       # gm1, gs (·, j)
+        ],
+        out_specs=(
+            mat,                                            # d_base (i, j)
+            pl.BlockSpec((block_m, rp), lambda i, j: (i, 0)),   # d_h (i, ·)
+        ),
+        out_shape=(jax.ShapeDtypeStruct((m, n), dy.dtype),
+                   jax.ShapeDtypeStruct((m, rp), _F32)),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(dy, B, gm1, gs)

@@ -147,6 +147,109 @@ def fused_compose(base, lora, g, s: float, *,
 
 
 # ---------------------------------------------------------------------------
+# Matmul-fused compose with custom VJP: y_lora never reaches HBM.
+# ---------------------------------------------------------------------------
+
+def _pad_rank(x, rp: int):
+    r = x.shape[-1]
+    if rp == r:
+        return x
+    return jnp.pad(x, ((0, 0), (0, rp - r)))
+
+
+@functools.lru_cache(maxsize=None)
+def _make_compose_mm(s: float, mag_grad: bool, block_m: int, block_n: int,
+                     interpret: bool):
+    def _flatten(x):
+        return x.reshape(-1, x.shape[-1])
+
+    @jax.custom_vjp
+    def compose(base, h, B, g):
+        out, _ = fwd(base, h, B, g)
+        return out
+
+    def fwd(base, h, B, g):
+        shape = base.shape
+        n = shape[-1]
+        r = B.shape[-1]
+        bn = pick_block_n(n, block_n)
+        rp = _round_up(r, 128)          # lane-width padding; zeros are inert
+        g32 = g.astype(_F32)
+        gm1 = (g32 - 1.0).reshape(1, n)
+        b2, m = _pad_rows(_flatten(base), block_m)
+        h2, _ = _pad_rows(_pad_rank(_flatten(h), rp), block_m)
+        bm = min(block_m, b2.shape[0])
+        delta = _ck.compose_mm_fwd_pallas(
+            b2, h2, _pad_rank(B, rp), gm1, s,
+            block_m=bm, block_n=bn, interpret=interpret)
+        delta = delta[:m].reshape(shape)
+        # Residuals are all tensors already live in the surrounding graph
+        # (h is the x@Aᵀ activation, base is y_base) — unlike the Tier-1
+        # dual-output path, nothing extra is materialized for the backward,
+        # including the magnitude gradient (see _bwd).
+        res = (g32, h, B, base if mag_grad else None)
+        return delta, res
+
+    def _bwd(res, dy):
+        g32, h, B, base = res
+        shape = dy.shape
+        n = shape[-1]
+        r = B.shape[-1]
+        bn = pick_block_n(n, block_n)
+        rp = _round_up(r, 128)
+        gm1 = (g32 - 1.0).reshape(1, n)
+        gs = (g32 * s).reshape(1, n)
+        dy2, m = _pad_rows(_flatten(dy), block_m)
+        bm = min(block_m, dy2.shape[0])
+        d_base, d_h = _ck.compose_mm_bwd_pallas(
+            dy2, _pad_rank(B, rp), gm1, gs,
+            block_m=bm, block_n=bn, interpret=interpret)
+        d_base = d_base[:m].reshape(shape)
+        d_h = d_h[:m, :r].reshape(h.shape).astype(h.dtype)
+        # d_B = (g·s) ⊙ (dYᵀ @ h): T is the one cross matmul the backward
+        # cannot avoid (it also carries the lora half of d_g, so it is
+        # computed once and reused — deterministic jnp reductions, paper
+        # §3.2's .sum()-over-atomics choice).
+        dy32 = _flatten(dy).astype(_F32)
+        T = jax.lax.dot_general(
+            dy32, _flatten(h).astype(_F32), (((0,), (0,)), ((), ())),
+            preferred_element_type=_F32)                     # [n, r]
+        d_B = ((g32 * s)[:, None] * T).astype(B.dtype)
+        if not mag_grad:
+            d_g = jnp.zeros_like(g32)
+        else:
+            # d_g = Σ_rows dY ⊙ (base + s·lora); the lora term contracts
+            # through T: Σ_m dY⊙(hBᵀ) = rowsum(B ⊙ T).
+            d_g = (jnp.sum(dy.astype(_F32) * base.astype(_F32),
+                           axis=tuple(range(dy.ndim - 1)))
+                   + s * jnp.sum(B.astype(_F32) * T, axis=1))
+        return d_base, d_h, d_B, d_g
+
+    compose.defvjp(fwd, _bwd)
+    return compose
+
+
+def fused_compose_mm(base, h, B, g, s: float, *,
+                     mag_grad: bool = True,
+                     block_m: int = 256, block_n: int = 1024,
+                     interpret: bool | None = None):
+    """delta = (g-1)⊙base + g⊙s⊙(h @ Bᵀ) with the up-projection fused.
+
+    base: [..., d_out]; h = x@Aᵀ: [..., r]; B: [d_out, r]; g: fp32 [d_out].
+    The [..., d_out] ``y_lora`` tensor is never materialized in HBM —
+    forward reads (base, h, B) and writes delta only; backward reads dY
+    once for both d_base and d_h (plus the unavoidable dYᵀ@h cross matmul
+    for d_B / the magnitude gradient).
+    """
+    if base.shape[:-1] != h.shape[:-1]:
+        raise ValueError(f"base leading dims {base.shape[:-1]} != h leading "
+                         f"dims {h.shape[:-1]}")
+    fn = _make_compose_mm(float(s), bool(mag_grad), int(block_m),
+                          int(block_n), resolve_interpret(interpret))
+    return fn(base, h, B, g)
+
+
+# ---------------------------------------------------------------------------
 # Fused factored norm.
 # ---------------------------------------------------------------------------
 

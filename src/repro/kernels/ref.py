@@ -10,6 +10,7 @@ chunking, no tiling) used by the allclose test sweeps and benchmarks:
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 _F32 = jnp.float32
@@ -50,6 +51,23 @@ def ref_compose_dual(base, lora, g, s: float):
     inner = (base.astype(_F32)
              + jnp.asarray(float(s), _F32) * lora.astype(_F32))
     return delta, inner.astype(base.dtype)
+
+
+def ref_compose_mm(base, h, B, g, s: float):
+    """Matmul-fused compose oracle: the lora product materialized densely in
+    fp32, then the stable compose — what the fused kernel must match."""
+    lora = jax.lax.dot_general(
+        h.astype(_F32), B.astype(_F32), (((h.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=_F32)
+    return ref_compose(base, lora, g, s)
+
+
+def ref_compose_mm_fp64(base, h, B, g, s: float):
+    """fp64 oracle for the matmul-fused compose (golden-tolerance tests)."""
+    f64 = jnp.float64
+    lora = h.astype(f64) @ B.astype(f64).T
+    g64 = g.astype(f64)
+    return (g64 - 1.0) * base.astype(f64) + g64 * (float(s) * lora)
 
 
 def ref_compose_bwd(dy, base, lora, g, s: float):

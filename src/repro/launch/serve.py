@@ -5,11 +5,15 @@ CPU-runnable with a smoke config::
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
         --batch 2 --prompt-len 32 --gen-len 16
 
-Implements the minimal production serving shape: one jitted prefill step
-(prompt → cache + first logits) and one jitted decode step re-used per
-token (the cache is donated, so decode runs in place). Sampling is
-greedy/temperature on the host — the device step is exactly the
-``serve_step`` the ``decode_*``/``long_*`` dry-run cells lower.
+Implements the minimal production serving shape: one jitted precompute of
+the frozen-adapter state (w_norm/g cached once per adapter set — the
+decode loop does zero factored-norm work per token), one jitted prefill
+step (prompt → cache + first logits; right-padded to ``max_len`` on
+attention-only archs so a single compiled prefill serves every prompt
+length, with the cache length rewound to the true P) and one jitted decode
+step re-used per token (the cache is donated, so decode runs in place).
+Sampling is greedy/temperature on the host — the device step is exactly
+the ``serve_step`` the ``decode_*``/``long_*`` dry-run cells lower.
 """
 from __future__ import annotations
 
@@ -23,27 +27,52 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import DoRAConfig
 from repro.launch.steps import StepConfig, make_decode_step, \
-    make_prefill_step
+    make_precompute_step, make_prefill_step
 from repro.launch.train import build_state
 
 
 def generate(mcfg, params, adapters, scfg: StepConfig, prompts, *,
              gen_len: int, max_len: int, temperature: float = 0.0,
-             seed: int = 0):
-    """prompts: int32 [B, P]. Returns tokens [B, P+gen_len]."""
+             seed: int = 0, cache_adapters: bool = True,
+             fold_gsb: bool = False):
+    """prompts: int32 [B, P]. Returns tokens [B, P+gen_len].
+
+    ``cache_adapters``: precompute the frozen-adapter serving state (cached
+    g) before prefill — bitwise-identical tokens, no per-token norm work.
+    ``fold_gsb``: additionally fold g·s into B (broadcast-free decode
+    compose; last-ulp numerics difference, so off by default).
+    """
     B, P = prompts.shape
-    prefill = jax.jit(make_prefill_step(mcfg, scfg, None, batch=B,
-                                        seq=max_len))
+    if max_len < P + gen_len:
+        raise ValueError(f"max_len={max_len} < P+gen_len={P + gen_len}")
+    if cache_adapters:
+        adapters = jax.jit(make_precompute_step(
+            mcfg, scfg, fold_gsb=fold_gsb))(params, adapters)
+
+    # Padded prefill (attention-only archs): pad the prompt to max_len and
+    # pass the true P as a traced scalar — ONE compiled prefill covers
+    # every prompt length in the bucket; the step rewinds the cache length
+    # to P. SSM states integrate every processed token and cannot rewind,
+    # so hybrid/Mamba archs prefill at the exact P.
+    can_pad = all(k == "attn" for k in mcfg.layer_kinds())
+    pad = max_len - P if can_pad else 0
+    prefill = jax.jit(make_prefill_step(
+        mcfg, scfg, None, batch=B, seq=max_len, padded=bool(pad)))
     decode = jax.jit(make_decode_step(mcfg, scfg, None, batch=B),
                      donate_argnums=(2,))
 
-    # Prefill writes the prompt into a max_len cache.
-    pad = max_len - P
     toks = jnp.asarray(prompts, jnp.int32)
-    logits, cache = prefill(params, adapters, {"tokens": toks})
-    # forward() counted the padded rows too — rewind len to the true P.
+    batch_in = {"tokens": toks}
     if pad:
-        cache = dict(cache)
+        batch_in = {"tokens": jnp.pad(toks, ((0, 0), (0, pad))),
+                    "prompt_len": jnp.asarray(P, jnp.int32)}
+    logits, cache = prefill(params, adapters, batch_in)
+    # The decode contract: the cache stands at exactly the true prompt
+    # length, so the first generated token is written at position P.
+    # (Hard errors, not asserts — the contract must survive python -O.)
+    if int(cache["len"]) != P:
+        raise RuntimeError(
+            f"prefill left cache at {int(cache['len'])}, expected {P}")
 
     key = jax.random.PRNGKey(seed)
     out = [toks]
@@ -57,6 +86,9 @@ def generate(mcfg, params, adapters, scfg: StepConfig, prompts, *,
         nxt = nxt.astype(jnp.int32)[:, None]
         out.append(nxt)
         last, cache = decode(params, adapters, cache, {"tokens": nxt})
+        if i == 0 and int(cache["len"]) != P + 1:
+            raise RuntimeError(
+                f"decode wrote at {int(cache['len']) - 1}, expected {P}")
     return jnp.concatenate(out, axis=1)
 
 
@@ -71,6 +103,12 @@ def main() -> None:
     ap.add_argument("--alpha", type=float, default=16.0)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-adapter-cache", action="store_true",
+                    help="skip the frozen-adapter precompute (recompute "
+                         "the factored norm every step — debug only)")
+    ap.add_argument("--fold-gsb", action="store_true",
+                    help="fold g*s into B in the serving state "
+                         "(broadcast-free decode compose)")
     args = ap.parse_args()
 
     mcfg = get_config(args.arch, smoke=args.smoke)
@@ -86,7 +124,9 @@ def main() -> None:
     t0 = time.time()
     toks = generate(mcfg, params, adapters, scfg, prompts,
                     gen_len=args.gen_len, max_len=max_len,
-                    temperature=args.temperature, seed=args.seed)
+                    temperature=args.temperature, seed=args.seed,
+                    cache_adapters=not args.no_adapter_cache,
+                    fold_gsb=args.fold_gsb)
     dt = time.time() - t0
     toks = np.asarray(toks)
     print(f"generated [{toks.shape[0]}, {toks.shape[1]}] in {dt:.2f}s "

@@ -122,13 +122,29 @@ def make_train_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
 
 
 def make_prefill_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
-                      batch: int, seq: int):
+                      batch: int, seq: int, padded: bool = False):
     """(params, adapters, batch) -> (last_logits [B, V], cache).
 
     Processes the full prompt and materializes the KV/SSM cache sized to
-    ``seq`` (the serving runtime hands it to the decode step)."""
+    ``seq`` (the serving runtime hands it to the decode step).
+
+    ``padded=True``: shape-bucketed serving — the prompt arrives
+    right-padded to ``seq`` and ``batch["prompt_len"]`` carries the TRUE
+    prompt length P as an int32 scalar. P is traced, so ONE compiled
+    prefill covers every P ≤ seq. The returned logits are gathered at
+    position P-1 (the full-vocab head runs on exactly that one row, not
+    the padded tail) and the cache length is REWOUND to P so the first
+    decode token overwrites the first padded row — without the rewind,
+    decode appends after the pad garbage. Only valid for attention caches
+    (a rewound "len" masks the stale K/V rows via causality; an SSM state
+    has already integrated the pad tokens and cannot rewind)."""
     constraint = (S.make_boundary_constraint(mesh, batch=batch, seq=seq)
                   if mesh is not None else None)
+    if padded and any(k != "attn" for k in mcfg.layer_kinds()):
+        raise ValueError(
+            "padded prefill requires attention-only caches: SSM layer "
+            "states integrate the padded tokens and cannot be rewound "
+            f"(arch {mcfg.name!r} has {mcfg.layer_kinds()})")
 
     def prefill_step(params, adapters, batch_in):
         is_embeds = "embeds" in batch_in
@@ -136,12 +152,43 @@ def make_prefill_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
               else {"tokens": batch_in["tokens"]})
         from repro.models import init_cache
         cache = init_cache(mcfg, batch, seq)
+        if padded:
+            p_len = jnp.asarray(batch_in["prompt_len"], jnp.int32)
+            kw["gather_position"] = p_len - 1
+        else:
+            kw["loss_slice"] = 1
         logits, new_cache, _ = forward(
             mcfg, params, adapters, scfg.dora, cache=cache, training=False,
-            boundary_constraint=constraint, loss_slice=1, **kw)
+            boundary_constraint=constraint, **kw)
+        if padded and new_cache is not None:
+            new_cache = dict(new_cache)
+            new_cache["len"] = p_len.astype(new_cache["len"].dtype)
         return logits[:, -1], new_cache
 
     return prefill_step
+
+
+def make_precompute_step(mcfg: ModelConfig, scfg: StepConfig, *,
+                         fold_gsb: bool = False):
+    """(params, adapters) -> serving adapter tree (jit-able).
+
+    Runs :func:`repro.core.precompute_adapter_state` once per frozen
+    adapter set: every adapter leaf gains a cached ``"g"`` (and ``"gsB"``
+    when folded) so the prefill/decode steps built below do ZERO
+    factored-norm work per call — the whole O(d_out·d_in) norm moves out
+    of the token loop. The act_dtype is pinned to the model dtype so the
+    cached g is bitwise-identical to the one the uncached forward would
+    compute. Invalidation: any training step on the adapters makes the
+    returned tree stale; rebuild it (cheap — one norm per adapted layer)
+    before serving the updated weights."""
+    from repro.core import precompute_adapter_state
+
+    def precompute_step(params, adapters):
+        return precompute_adapter_state(params, adapters, scfg.dora,
+                                        act_dtype=mcfg.dtype,
+                                        fold_gsb=fold_gsb)
+
+    return precompute_step
 
 
 def make_decode_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,

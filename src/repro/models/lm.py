@@ -362,7 +362,7 @@ def _layer_apply(x, p, a, c, mcfg, dcfg, *, kind, ffn, positions, length,
 def forward(mcfg: ModelConfig, params, adapters, dcfg: DoRAConfig | None,
             *, tokens=None, embeds=None, cache=None, positions=None,
             training: bool = True, boundary_constraint=None,
-            loss_slice: int | None = None):
+            loss_slice: int | None = None, gather_position=None):
     """Returns (logits [B,S,V], new_cache, aux_loss).
 
     tokens [B,S] int32 OR embeds [B,S,D] (modality-frontend stubs feed
@@ -373,6 +373,11 @@ def forward(mcfg: ModelConfig, params, adapters, dcfg: DoRAConfig | None,
     pin sequence-parallel sharding (saved remat residuals inherit it).
     ``loss_slice``: keep only the last N positions before the LM head
     (paper §5.1 partial-sequence loss — avoids the full-vocab logit spike).
+    ``gather_position``: int32 scalar (traced OK) — keep ONLY this position
+    before the final norm + LM head (logits come back [B, 1, V]); the
+    shape-bucketed prefill uses it so the full-vocab head runs on exactly
+    one row regardless of how much right-padding the bucket added.
+    Overrides ``loss_slice``.
     """
     kinds, ffns = mcfg.layer_kinds(), mcfg.ffn_kinds()
     p = mcfg.period
@@ -446,7 +451,9 @@ def forward(mcfg: ModelConfig, params, adapters, dcfg: DoRAConfig | None,
             body, (x, jnp.asarray(0.0, _F32)), (stack_p, stack_a, stack_c))
         new_cache = {"stack": new_stack_c, "len": length + S}
 
-    if loss_slice is not None and loss_slice < x.shape[1]:
+    if gather_position is not None:
+        x = jax.lax.dynamic_slice_in_dim(x, gather_position, 1, axis=1)
+    elif loss_slice is not None and loss_slice < x.shape[1]:
         x = x[:, -loss_slice:]
     x = _apply_norm(x, params["final_norm"], mcfg)
     head = jax.lax.stop_gradient(params["head"])
