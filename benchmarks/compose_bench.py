@@ -34,18 +34,22 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import compiled_stats, fmt_bytes, save, time_fn
+from repro.core import DoRAConfig
 from repro.core import compose as C
 from repro.kernels import ops as K
 from repro.kernels import ref as R
 
 SHAPES = [(1024, 2048), (4096, 4096), (8192, 4096), (16384, 8192)]
 # (rows, d_out, rank) for the matmul-fused path — r=384 is the paper's
-# high-rank regime; 128 the padding floor.
-MM_SHAPES = [(1024, 2048, 128), (4096, 4096, 384), (8192, 4096, 384)]
+# high-rank regime; 128 the padding floor; the 8-row entry is the
+# decode-shaped grid (small M), priced at the shrunken block_m the
+# config derives for it (DoRAConfig.resolve_mm_block_rows).
+MM_SHAPES = [(1024, 2048, 128), (4096, 4096, 384), (8192, 4096, 384),
+             (8, 4096, 64)]
 SMOKE_SHAPES = [(256, 512)]
 SMOKE_MM_SHAPES = [(256, 512, 64)]
 S = 2.0
-MM_BLOCK_M = 256
+DTYPE_SIZE = 2  # bf16 — the dtype every section benches in
 
 
 def eager_unfused(base, lora, g, s):
@@ -84,7 +88,7 @@ def mm_fused_expr(base, h, B, g, s):
 
 
 def mm_kernel_bytes_model(m, n, r, dtype_size: int,
-                          block_m: int = MM_BLOCK_M) -> dict:
+                          block_m: int | None = None) -> dict:
     """Analytic HBM traffic of the matmul-fused kernel vs the y_lora path.
 
     unfused: h read + B read + y_lora write + (base read + y_lora read +
@@ -93,13 +97,20 @@ def mm_kernel_bytes_model(m, n, r, dtype_size: int,
              per row tile (the crossover term the dispatch guard bounds).
     The fused kernel moves the 128-lane-PADDED rank (rp), same as the
     dispatch guard — charging the raw r would understate the h/B terms
-    for off-lane ranks.
+    for off-lane ranks. Rows are charged PADDED to the row tile, which is
+    what the kernel actually computes; ``block_m=None`` derives the
+    decode-aware tile from the config (small M shrinks the grid, so a
+    2-row decode is priced at 8 padded rows, not 256).
     """
-    mn = m * n * dtype_size
+    if block_m is None:
+        block_m = DoRAConfig().resolve_mm_block_rows(m)
     row_tiles = -(-m // block_m)
+    mp = row_tiles * block_m
+    mn = m * n * dtype_size
+    mpn = mp * n * dtype_size
     rp = (r + 127) // 128 * 128
     unfused = 4 * mn + (m * r + n * r) * dtype_size + 4 * n
-    fused = 2 * mn + (m * rp + row_tiles * n * rp) * dtype_size + 4 * n
+    fused = 2 * mpn + (mp * rp + row_tiles * n * rp) * dtype_size + 4 * n
     return {"bytes_unfused_model": unfused, "bytes_fused_model": fused,
             "model_ratio": unfused / fused}
 

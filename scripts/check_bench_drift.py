@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Bench-drift gate: the analytic bytes models must not regress.
+
+Re-runs the *deterministic* bytes-model sections of
+``benchmarks/compose_bench.py`` — the analytic HBM-traffic numbers that
+transfer to TPU — at the current code's defaults, and fails when the
+prediction REGRESSES versus the committed ``BENCH_compose.json``:
+
+  - ``bytes_fused_model`` (matmul-fused kernel traffic) grew, or
+  - ``model_ratio`` (unfused/fused traffic, the headline win) shrank.
+
+Measured sections (HLO bytes-accessed, wall clocks) are machine-dependent
+and stay informational — they are never gated here.
+
+An *improvement* (prediction strictly better than committed) passes but
+prints a reminder to regenerate the artifact
+(``python -m benchmarks.compose_bench --artifact BENCH_compose.json``)
+so the committed trajectory keeps up with the code.
+
+Exit status: 0 clean, 1 on regression (CI fails the PR).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path[:0] = [ROOT, os.path.join(ROOT, "src")]
+
+# Relative slack for float round-trips through JSON; the models are pure
+# integer arithmetic, so any real drift is far larger.
+EPS = 1e-9
+
+_SHAPE_RE = re.compile(r"^(\d+)x(\d+)r(\d+)$")
+
+
+def check(artifact_path: str) -> int:
+    from benchmarks.compose_bench import DTYPE_SIZE, mm_kernel_bytes_model
+
+    with open(artifact_path) as f:
+        committed = json.load(f)
+
+    failures = []
+    improvements = []
+    rows = committed.get("matmul_fused", [])
+    if not rows:
+        print(f"ERROR: no matmul_fused rows in {artifact_path}")
+        return 1
+    print(f"bench-drift gate: {len(rows)} bytes-model rows "
+          f"from {artifact_path}")
+    for row in rows:
+        shape = row["shape"]
+        m_ = _SHAPE_RE.match(shape)
+        if not m_:
+            failures.append(f"{shape}: unparseable shape string")
+            continue
+        m, n, r = (int(g) for g in m_.groups())
+        model = mm_kernel_bytes_model(m, n, r, DTYPE_SIZE)
+        got_fused = model["bytes_fused_model"]
+        got_ratio = model["model_ratio"]
+        want_fused = row["bytes_fused_model"]
+        want_ratio = row["model_ratio"]
+        status = "ok"
+        if got_fused > want_fused * (1 + EPS):
+            status = "REGRESSION"
+            failures.append(
+                f"{shape}: predicted fused traffic regressed "
+                f"{want_fused:.0f} -> {got_fused:.0f} bytes")
+        elif got_ratio < want_ratio * (1 - EPS):
+            status = "REGRESSION"
+            failures.append(
+                f"{shape}: predicted traffic ratio regressed "
+                f"{want_ratio:.4f}x -> {got_ratio:.4f}x")
+        elif got_fused < want_fused * (1 - EPS) \
+                or got_ratio > want_ratio * (1 + EPS):
+            status = "improved"
+            improvements.append(shape)
+        print(f"  {shape:>16}: fused {want_fused:>12.0f} -> "
+              f"{got_fused:>12.0f} B, ratio {want_ratio:.4f}x -> "
+              f"{got_ratio:.4f}x  [{status}]")
+
+    if failures:
+        print("\nbench-drift FAIL: predicted HBM traffic regressed vs the "
+              "committed artifact:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        print("If the regression is intentional (a deliberate model "
+              "change), regenerate the artifact and justify it in the PR:\n"
+              "  python -m benchmarks.compose_bench --artifact "
+              "BENCH_compose.json")
+        return 1
+    if improvements:
+        print(f"\nbench-drift OK (improved: {', '.join(improvements)}) — "
+              f"regenerate BENCH_compose.json to record the better model.")
+    else:
+        print("\nbench-drift OK: analytic bytes models match the committed "
+              "artifact.")
+    return 0
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else \
+        os.path.join(ROOT, "BENCH_compose.json")
+    sys.exit(check(path))

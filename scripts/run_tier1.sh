@@ -7,19 +7,31 @@
 # Usage:  scripts/run_tier1.sh [extra pytest args...]
 # Env:    REPRO_TIER1_MIN_PASS  recorded floor (default below)
 #         REPRO_TIER1_MAX_FAIL  allowed failures (default 0)
-#         REPRO_FORCE_TIER      tier to force (default: interpret)
+#         REPRO_FORCE_TIER      tier to force (default: interpret;
+#                               "default" = leave the dispatch unforced,
+#                               the CI matrix's other leg)
 #
 # Baselines (keep in sync with ROADMAP.md):
 #   seed     127 passed / 81 failed / 2 collection errors
 #   post-PR1 250 passed / 0 failed / 2 skipped (hypothesis absent) — every
 #            seed failure was JAX API drift, absorbed by src/repro/compat/
+#   post-PR2 292 passed / 0 failed / 2 skipped
+#   post-PR3 317 passed / 0 failed / 2 skipped (SPMD compose + CI gates)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-MIN_PASS="${REPRO_TIER1_MIN_PASS:-250}"
+MIN_PASS="${REPRO_TIER1_MIN_PASS:-317}"
 MAX_FAIL="${REPRO_TIER1_MAX_FAIL:-0}"
-export REPRO_FORCE_TIER="${REPRO_FORCE_TIER:-interpret}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+TIER="${REPRO_FORCE_TIER:-interpret}"
+if [ "${TIER}" = "default" ]; then
+    # CI matrix leg: run with the dispatch left alone (mode=auto resolves
+    # to the eager tier on CPU hosts).
+    unset REPRO_FORCE_TIER
+    TIER="(unforced)"
+else
+    export REPRO_FORCE_TIER="${TIER}"
+fi
 
 out="$(mktemp)"
 trap 'rm -f "$out"' EXIT
@@ -46,18 +58,21 @@ if [ "${passed}" -lt "${MIN_PASS}" ]; then
     echo "tier-1 FAIL: ${passed} passed < recorded floor ${MIN_PASS}"
     exit 1
 fi
-echo "tier-1 OK: ${passed} passed, ${failed} failed (floor ${MIN_PASS}, REPRO_FORCE_TIER=${REPRO_FORCE_TIER})"
+echo "tier-1 OK: ${passed} passed, ${failed} failed (floor ${MIN_PASS}, tier ${TIER})"
 
 # End-to-end smokes (still under the forced tier, so the fused kernels and
 # the frozen-adapter cache path are exercised through the Pallas
 # interpreter on every gate). set -e aborts the gate on any failure.
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo
-echo "serve smoke (REPRO_FORCE_TIER=${REPRO_FORCE_TIER}): adapter cache + padded prefill"
+echo "serve smoke (tier ${TIER}): adapter cache + padded prefill"
 python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \
     --prompt-len 16 --gen-len 4
 echo
 echo "bench smoke: compose kernels (incl. matmul-fused) + serving cache"
 python -m benchmarks.compose_bench --smoke
 python -m benchmarks.serve_bench --smoke
+echo
+echo "bench-drift gate: analytic bytes models vs committed BENCH_compose.json"
+python scripts/check_bench_drift.py
 echo "tier-1 smokes OK"

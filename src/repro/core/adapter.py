@@ -17,7 +17,10 @@ through the three-tier dispatch. Two hot-path overhauls live here:
   - **Matmul-fused compose** (plan flag ``matmul_fused``): when the rank
     passes the crossover guard, the LoRA up-projection ``h @ Bᵀ`` runs
     inside the compose kernel and the ``[M, d_out]`` y_lora tensor is never
-    materialized in HBM.
+    materialized in HBM — including under SPMD: sharded call sites pin the
+    rank-space ``h`` (rows like the output, rank replicated) instead of a
+    materialized y_lora, and an expressible :class:`~repro.core.sharding.
+    ComposeSharding` plan runs the kernel shard-local under shard_map.
   - **Frozen-adapter serving state** (:func:`precompute_adapter_state`):
     during generation A/B/m are frozen, so ``w_norm`` — and hence ``g`` —
     is computed ONCE per adapter set and carried in the adapter tree as a
@@ -40,6 +43,7 @@ from repro.core import compose as _compose
 from repro.core import dispatch as _dispatch
 from repro.core import factored_norm as _norm
 from repro.core.config import DoRAConfig
+from repro.core.sharding import ComposeSharding, as_compose_sharding
 
 _F32 = jnp.float32
 
@@ -143,30 +147,44 @@ def compose_delta(y_base, y_lora, g, cfg: DoRAConfig, *, training: bool):
 
 
 def compose_delta_factored(y_base, h, B, g, cfg: DoRAConfig, *,
-                           training: bool):
+                           training: bool,
+                           sharding: ComposeSharding | None = None,
+                           constrain=None):
     """Compose from the factored LoRA activation ``h = x@Aᵀ``.
 
     When the plan resolves matmul-fused, the up-projection h@Bᵀ runs inside
     the compose kernel and y_lora never touches HBM; otherwise y_lora is
     materialized once and the classic element-wise path runs (identical
     math — tier-equivalence is tested).
+
+    ``sharding``: the call site's :class:`ComposeSharding` plan. An
+    expressible plan rides the KernelPlan into the shard_map'd kernel
+    (shard-local tiles, no y_lora anywhere); an inexpressible one falls
+    back to the materialized-lora route, where ``constrain`` (the output
+    constraint — usually ``sharding`` itself or a legacy callable) pins
+    y_lora so the TP partial sums still lower to reduce-scatter (H1.4).
     """
     _compose.check_broadcast(g, y_base)
-    plan = _dispatch.plan_compose(cfg, training=training,
-                                  rows=_row_count(y_base.shape),
+    rows = _row_count(y_base.shape)
+    plan = _dispatch.plan_compose(cfg, training=training, rows=rows,
                                   d_out=y_base.shape[-1],
-                                  rank=B.shape[-1])
+                                  rank=B.shape[-1], sharding=sharding)
     if plan.matmul_fused:
         from repro.kernels import ops as _kops
         mag_grad = cfg.magnitude_trainable
         if plan.tier is _dispatch.Tier.FUSED_FWD:
             g = jax.lax.stop_gradient(g)
             mag_grad = False
+        rows_local = rows // (plan.sharding.row_shards
+                              if plan.sharding is not None else 1)
         return _kops.fused_compose_mm(
             y_base, h, B, g, cfg.scaling, mag_grad=mag_grad,
-            block_m=cfg.block_rows, block_n=cfg.block_cols,
-            interpret=plan.interpret)
+            block_m=cfg.resolve_mm_block_rows(rows_local),
+            block_n=cfg.block_cols,
+            interpret=plan.interpret, sharding=plan.sharding)
     y_lora = h @ B.T
+    if constrain is not None:
+        y_lora = constrain(y_lora)
     return compose_delta(y_base, y_lora, g, cfg, training=training)
 
 
@@ -183,14 +201,21 @@ def dora_linear(x, W, adapter: dict[str, Any], cfg: DoRAConfig, *,
     is refused under ``training=True`` (invalidation contract).
 
     ``axis_name``: if W/A are d_in-sharded inside shard_map, the norm
-    partials psum over this axis. ``constrain``: optional
-    sharding-constraint fn applied to y_base / y_lora — row-parallel call
-    sites pin the sequence-parallel sharding here so the partial sums
-    lower to reduce-scatter and the compose runs seq-sharded
-    (EXPERIMENTS.md §Perf H1.4). A constrained y_lora must exist to be
-    constrained, so those call sites keep the materialized-lora path.
+    partials psum over this axis. ``constrain``: the call site's sharding —
+    either a :class:`ComposeSharding` plan (or a callable carrying one as
+    ``.plan``, like ``launch.sharding.make_boundary_constraint``'s), or a
+    bare row-constraint callable. Sharded call sites pin y_base AND the
+    rank-space intermediate ``h`` (rows sharded like the output, rank
+    replicated) — never a materialized y_lora — so the matmul-fused route
+    stays available under SPMD and the TP partial sums still lower to
+    reduce-scatter (H1.4). With a full plan the fused kernels run
+    shard-local under shard_map; a bare callable must be a row-only
+    constraint (its feature entry replicated), which every
+    sequence-parallel boundary constraint is.
     """
     A, B, m = adapter["A"], adapter["B"], adapter["m"]
+    plan_sh = as_compose_sharding(constrain)
+    cfn = plan_sh if plan_sh is not None else constrain
     if "g" in adapter:
         if training:
             raise ValueError(
@@ -214,28 +239,31 @@ def dora_linear(x, W, adapter: dict[str, Any], cfg: DoRAConfig, *,
 
     W = jax.lax.stop_gradient(W)
     y_base = x @ W.T
-    if "gsB" in adapter and not training and constrain is None:
+    h = x @ A.T
+    if cfn is not None:
+        y_base = cfn(y_base)
+        # Constrain the RANK-SPACE intermediate, not y_lora: rows shard
+        # exactly like the output, the rank dim replicates — [M, r] is the
+        # cheap tensor to pin, and the fused compose stays factored.
+        h = plan_sh.constrain_h(h) if plan_sh is not None else cfn(h)
+    if "gsB" in adapter and not training:
         # Serving fast path (opt-in, see precompute_adapter_state): g·s is
         # pre-folded into B, so the per-token work collapses to two
         # matmuls + one fused multiply-add — the g·s broadcast over the
         # [M, d_out] lora term is gone (only the (g-1)·base one remains).
-        # Sharded call sites (constrain set) keep the standard path: the
-        # sequence-parallel constraint needs the lora tensor to pin.
+        # Sharded call sites take it too: h is already pinned rank-space
+        # above, and the folded up-projection output inherits the output
+        # constraint like any row-parallel matmul.
         gsB = jax.lax.stop_gradient(adapter["gsB"])
         t = jax.lax.dot_general(
-            (x @ A.T).astype(_F32), gsB.astype(_F32),
+            h.astype(_F32), gsB.astype(_F32),
             (((x.ndim - 1,), (1,)), ((), ())), preferred_element_type=_F32)
         delta = ((g - 1.0) * y_base.astype(_F32) + t).astype(y_base.dtype)
         y = y_base + delta
     else:
-        h = x @ A.T
-        if constrain is not None:
-            y_base = constrain(y_base)
-            y_lora = constrain(h @ B.T)
-            delta = compose_delta(y_base, y_lora, g, cfg, training=training)
-        else:
-            delta = compose_delta_factored(y_base, h, B, g, cfg,
-                                           training=training)
+        delta = compose_delta_factored(y_base, h, B, g, cfg,
+                                       training=training, sharding=plan_sh,
+                                       constrain=cfn)
         y = y_base + delta
     if bias is not None:
         y = y + bias  # bias re-added after the compose (paper App. A)
@@ -243,15 +271,17 @@ def dora_linear(x, W, adapter: dict[str, Any], cfg: DoRAConfig, *,
 
 
 def dora_linear_stacked(x, W, adapter, cfg: DoRAConfig, *, bias=None,
-                        training=True, base_sq_cache=None):
+                        training=True, base_sq_cache=None, constrain=None):
     """vmap over a leading stack dim (e.g. experts): x [E, ..., d_in],
     W [E, d_out, d_in], adapter leaves stacked on dim 0; ``bias`` /
-    ``base_sq_cache`` (both [E, d_out] when given) and ``training`` are
-    forwarded so expert/layer stacks hit the same cached base-norm fast
-    path as the unstacked call."""
+    ``base_sq_cache`` (both [E, d_out] when given), ``training`` and
+    ``constrain`` are forwarded so expert/layer stacks hit the same cached
+    base-norm fast path — and the same SPMD-aware matmul-fused compose —
+    as the unstacked call. ``constrain`` is a per-slice plan/callable (the
+    stack dim is the vmap axis; specs describe the unstacked shapes)."""
     def one(xe, we, ad, be, bq):
         return dora_linear(xe, we, ad, cfg, bias=be, training=training,
-                           base_sq_cache=bq)
+                           base_sq_cache=bq, constrain=constrain)
 
     return jax.vmap(
         one,

@@ -22,6 +22,18 @@ def _env_flag(name: str) -> str | None:
     return v if v not in (None, "") else None
 
 
+def shrink_block_rows(block_m: int, rows: int | None) -> int:
+    """Decode-aware row-tile shrink: the block never exceeds the
+    sublane-rounded row count, so small-M grids pad to the next multiple
+    of 8 rows instead of a full tile. The ONE source of this rule — the
+    config resolver, the shard-local kernel wrapper
+    (``kernels.dora_compose.local_block_shape``) and the bench bytes
+    model all derive their block_m through it."""
+    if rows is None:
+        return block_m
+    return min(block_m, max(8, (rows + 7) // 8 * 8))
+
+
 # Tier names (dispatch-table keys) → config modes. "tpu"/"pallas"/"fused"
 # all mean the compiled-kernel path; dispatch degrades it to the
 # interpreter on non-TPU hosts.
@@ -72,16 +84,22 @@ class DoRAConfig:
     # written to HBM. Only taken on the fused backends when the (128-padded)
     # rank stays below the crossover — above it the per-row-tile re-reads
     # of B exceed the y_lora write+read the fusion saves (B traffic ≈
-    # (M/block_rows)·d_out·r vs 2·M·d_out, i.e. profitable while
-    # r ≲ 2·block_rows). ``mm_fused_max_rank=None`` derives exactly that
-    # 2·block_rows bound, so tuning block_rows re-calibrates the guard;
-    # set an int to pin it explicitly.
+    # (M/block_m)·d_out·r vs 2·M·d_out, i.e. profitable while
+    # r ≲ 2·block_m). ``mm_fused_max_rank=None`` derives exactly that
+    # 2·block_m bound from the bytes model at the CONFIGURED matmul-fused
+    # block rows (``mm_block_rows``, falling back to ``block_rows``), so
+    # tuning either knob re-calibrates the guard; set an int to pin it.
     compose_matmul_fused: bool = True
     mm_fused_max_rank: int | None = None
 
     # --- kernel block shapes (perf-tunable; see EXPERIMENTS.md §Perf) ---
     block_rows: int = 256
     block_cols: int = 1024
+    # block_m of the matmul-fused compose grid; None → ``block_rows``.
+    # Decode-shaped call sites (rows « block_rows) additionally shrink the
+    # grid to the sublane-rounded row count via ``resolve_mm_block_rows``
+    # so a 2-row decode batch is padded to 8 kernel rows, not 256.
+    mm_block_rows: int | None = None
     norm_block_rows: int = 256
     norm_block_k: int = 512
 
@@ -97,6 +115,9 @@ class DoRAConfig:
                 f"'tpu'/'fused', 'interpret', 'eager')")
         if self.norm_impl not in ("factored", "dense_ba", "peft_eye"):
             raise ValueError(f"unknown norm_impl {self.norm_impl!r}")
+        if self.mm_block_rows is not None and self.mm_block_rows <= 0:
+            raise ValueError(
+                f"mm_block_rows must be positive, got {self.mm_block_rows}")
         if self.dropout != 0.0:
             raise NotImplementedError(
                 "dropout routes to the chunked eager path (paper App. B); "
@@ -140,12 +161,30 @@ class DoRAConfig:
             return _normalize_tier(self.force_tier)
         return self.mode
 
-    def resolve_mm_fused_max_rank(self) -> int:
+    def resolve_mm_block_rows(self, rows: int | None = None) -> int:
+        """block_m of the matmul-fused compose grid.
+
+        ``rows`` (the call site's flattened row count, when known) shrinks
+        the grid for decode-shaped shapes: the block never exceeds the
+        sublane-rounded row count, so small-M calls pad to the next
+        multiple of 8 rows instead of a full ``block_rows`` tile.
+        """
+        bm = self.mm_block_rows if self.mm_block_rows is not None \
+            else self.block_rows
+        return shrink_block_rows(bm, rows)
+
+    def resolve_mm_fused_max_rank(self, rows: int | None = None) -> int:
         """Rank crossover for the matmul-fused compose: explicit override
-        or the bytes-model bound 2·block_rows (see the field comment)."""
+        or the bytes-model bound 2·block_m at the configured matmul-fused
+        block rows (see the ``compose_matmul_fused`` field comment).
+        ``rows`` prices the bound at the block the call site actually
+        executes: decode-shaped calls shrink the grid, which shrinks the
+        profitable rank range with it (the B re-reads stop amortizing) —
+        the committed BENCH_compose.json decode row records exactly that
+        regression."""
         if self.mm_fused_max_rank is not None:
             return self.mm_fused_max_rank
-        return 2 * self.block_rows
+        return 2 * self.resolve_mm_block_rows(rows)
 
     def resolve_chunk_mb(self) -> int | None:
         env = _env_flag("REPRO_DORA_NORM_CHUNK_MB")

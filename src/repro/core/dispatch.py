@@ -24,6 +24,7 @@ from typing import Callable
 
 from repro.compat import probes
 from repro.core.config import DoRAConfig
+from repro.core.sharding import ComposeSharding
 
 
 class Tier(enum.Enum):
@@ -66,6 +67,12 @@ class KernelPlan:
     # compose kernel (y_lora never materialized). Only ever True on a fused
     # tier with a crossover-eligible rank (see ``mm_fused_eligible``).
     matmul_fused: bool = False
+    # SPMD plan for the call site (None = unsharded / legacy constraint).
+    # When set together with ``matmul_fused``, the kernel wrapper runs the
+    # compose shard-local under shard_map with block specs derived from the
+    # mesh axis sizes; the plan is only ever attached when
+    # ``sharding.kernel_expressible(d_out)`` holds.
+    sharding: ComposeSharding | None = None
 
     @property
     def fused(self) -> bool:
@@ -114,31 +121,59 @@ def shape_supported(d_out: int) -> bool:
     return d_out % 128 == 0
 
 
-def mm_fused_eligible(rank: int | None, cfg: DoRAConfig) -> bool:
+def mm_fused_eligible(rank: int | None, cfg: DoRAConfig,
+                      rows: int | None = None) -> bool:
     """Crossover guard for the matmul-fused compose: the kernel re-reads the
-    B tile once per row-tile, so its extra traffic is ~(rows/block_rows)·
+    B tile once per row-tile, so its extra traffic is ~(rows/block_m)·
     d_out·r bytes vs the 2·rows·d_out the fusion saves — profitable while
-    the (lane-padded) rank stays below ``mm_fused_max_rank`` (≈2·block_rows
-    by the bytes model). ``rank=None`` (call sites composing an already
-    materialized y_lora) is never eligible."""
+    the (lane-padded) rank stays below ``mm_fused_max_rank`` (≈2·block_m
+    by the bytes model, derived at the block the call site actually
+    executes — see ``DoRAConfig.resolve_mm_fused_max_rank``). ``rows``
+    prices decode-shaped calls at their shrunken grid, where the B
+    re-read stops amortizing and the materialized path wins (the
+    committed decode row of BENCH_compose.json records the 0.67x ratio).
+    ``rank=None`` (call sites composing an already materialized y_lora)
+    is never eligible."""
     if rank is None or not cfg.compose_matmul_fused:
         return False
     rank_padded = (rank + 127) // 128 * 128
-    return rank_padded <= cfg.resolve_mm_fused_max_rank()
+    return rank_padded <= cfg.resolve_mm_fused_max_rank(rows)
 
 
 def plan_compose(cfg: DoRAConfig, *, training: bool, rows: int,
-                 d_out: int, rank: int | None = None) -> KernelPlan:
-    """Resolve the compose call site to (Tier, backend, interpret, mm-fused).
+                 d_out: int, rank: int | None = None,
+                 sharding: ComposeSharding | None = None) -> KernelPlan:
+    """Resolve the compose call site to (Tier, backend, interpret, mm-fused,
+    sharding).
 
     The shape constraint outranks even a forced tier: d_out % 128 != 0 is
     inexpressible in the 128-lane kernels, and the paper (App. B/C)
     specifies the eager fallback for it — same precedence the seed
     dispatch had. ``rank``: the adapter rank when the caller still holds
     the factored ``h = x@Aᵀ`` (enables the matmul-fused kernel); None when
-    only the materialized y_lora is available.
+    only the materialized y_lora is available. ``sharding``: the call
+    site's :class:`ComposeSharding` plan; when the plan is expressible for
+    the kernels (even d_out shards, 128-lane local blocks) the matmul-fused
+    route runs shard-local under it, and the shape constraint is evaluated
+    on the LOCAL d_out shard — the unsharded path is just the one-device
+    instance. An inexpressible plan drops the matmul fusion (the
+    materialized-lora route honours the constraint instead); it never
+    errors.
     """
-    if not shape_supported(d_out):
+    rows_local = rows
+    if sharding is not None:
+        row_shards = max(sharding.row_shards, 1)
+        if not sharding.kernel_expressible(d_out) \
+                or rows % row_shards != 0:
+            # The d_out shard breaks the 128-lane block constraint, or
+            # the rows do not divide the row axes: inexpressible for the
+            # shard-local kernels, eager fallback (the caller still
+            # applies the constraints; GSPMD partitions jnp).
+            return KernelPlan(Tier.EAGER, "eager", False)
+        rows_local = rows // row_shards
+    local_dout = sharding.local_dout(d_out) if sharding is not None \
+        else d_out
+    if not shape_supported(local_dout):
         return KernelPlan(Tier.EAGER, "eager", False)
     mode = cfg.resolve_mode()
     backend = resolve_backend(cfg)
@@ -147,8 +182,9 @@ def plan_compose(cfg: DoRAConfig, *, training: bool, rows: int,
     if mode == "auto" and not above_crossover(rows, d_out, cfg):
         return KernelPlan(Tier.EAGER, "eager", False)
     tier = Tier.FUSED_BWD if training else Tier.FUSED_FWD
+    mm = mm_fused_eligible(rank, cfg, rows_local)
     return KernelPlan(tier, backend.name, backend.interpret,
-                      matmul_fused=mm_fused_eligible(rank, cfg))
+                      matmul_fused=mm, sharding=sharding if mm else None)
 
 
 def plan_norm(cfg: DoRAConfig, *, d_out: int) -> KernelPlan:

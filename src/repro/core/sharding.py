@@ -1,0 +1,181 @@
+"""SPMD sharding plans for the DoRA compose hot path.
+
+The PR-2 matmul-fused compose only fired on the unsharded path: call sites
+passing a sharding ``constrain`` materialized ``y_lora = h @ Bᵀ`` just so
+the constraint had a tensor to pin. This module closes that gap (ROADMAP
+open item #1) by making the *rank-space* intermediate the thing that gets
+constrained: for an output ``y [..., d_out]`` with PartitionSpec
+``out_spec``, the factored activation ``h = x @ Aᵀ [..., r]`` is pinned to
+``out_spec`` with the feature entry dropped (rows sharded identically,
+rank replicated), and ``B`` / ``g`` are pinned congruent with ``d_out``.
+The compose kernel then runs fully shard-local — each device composes its
+``[rows_local, d_out_local]`` tile from its replicated-rank ``h`` shard —
+and the ``[M, d_out]`` ``y_lora`` tensor never exists, sharded or not.
+The unsharded path is simply the one-device-mesh instance of this plan.
+
+:class:`ComposeSharding` is the per-module plan threaded through
+``KernelPlan`` (see :mod:`repro.core.dispatch`) down to the shard_map'd
+kernel wrappers in :mod:`repro.kernels.ops`. It is a frozen, hashable
+value object so kernel makers can key lru-caches on it.
+
+Supported output specs (see README "Sharding semantics"):
+
+  - **row-sharded rows** (sequence/batch parallelism): any leading entry
+    may name mesh axes; the rank dim of ``h`` stays replicated and the
+    kernel needs no collectives in the forward.
+  - **row-sharded d_out** (tensor parallelism): the last entry names mesh
+    axes; ``B``/``g`` shard congruently and the backward psums ``d_h``
+    over those axes (the one collective the contraction over a sharded
+    ``d_out`` cannot avoid).
+  - any combination of the two, provided the local ``d_out`` shard keeps
+    the 128-lane kernel constraint (:meth:`kernel_expressible`); plans
+    that fail it fall back to the materialized-lora route, never error.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _entry_axes(entry) -> tuple[str, ...]:
+    """Mesh axes named by one PartitionSpec entry (None → ())."""
+    if entry is None:
+        return ()
+    if isinstance(entry, (tuple, list)):
+        return tuple(entry)
+    return (entry,)
+
+
+def _axes_size(mesh, axes: tuple[str, ...]) -> int:
+    size = 1
+    shape = dict(mesh.shape)
+    for a in axes:
+        size *= shape[a]
+    return size
+
+
+@dataclasses.dataclass(frozen=True)
+class ComposeSharding:
+    """Sharding plan for one adapted-linear call site.
+
+    ``out_spec`` is the PartitionSpec of the module output ``y [..., d_out]``
+    (one entry per output dim). Everything else — the spec of ``h``, ``B``,
+    ``g``, the flattened-2D kernel specs, the collective axes of the
+    backward — is derived from it.
+    """
+
+    mesh: Any                 # jax.sharding.Mesh (duck-typed in logic tests)
+    out_spec: P               # spec of the [..., d_out] output
+
+    # -- derived specs ------------------------------------------------------
+
+    @property
+    def row_axes(self) -> tuple[str, ...]:
+        """Mesh axes sharding the (flattened) row dims, in dim order."""
+        axes: list[str] = []
+        for entry in tuple(self.out_spec)[:-1]:
+            axes.extend(_entry_axes(entry))
+        return tuple(axes)
+
+    @property
+    def dout_axes(self) -> tuple[str, ...]:
+        """Mesh axes sharding the d_out (feature) dim."""
+        spec = tuple(self.out_spec)
+        return _entry_axes(spec[-1]) if spec else ()
+
+    @property
+    def dout_shards(self) -> int:
+        return _axes_size(self.mesh, self.dout_axes)
+
+    @property
+    def row_shards(self) -> int:
+        return _axes_size(self.mesh, self.row_axes)
+
+    @property
+    def h_spec(self) -> P:
+        """Spec of the rank-space intermediate ``h [..., r]``: rows shard
+        exactly like the output, the rank dim is always replicated."""
+        return P(*(tuple(self.out_spec)[:-1] + (None,)))
+
+    @property
+    def b_spec(self) -> P:
+        """Spec of ``B [d_out, r]``: congruent with the output d_out."""
+        spec = tuple(self.out_spec)
+        return P(spec[-1] if spec else None, None)
+
+    @property
+    def vec_spec(self) -> P:
+        """Spec of per-feature vectors (``g``/``m``/``w_norm`` [d_out])."""
+        spec = tuple(self.out_spec)
+        return P(spec[-1] if spec else None)
+
+    def flat2d(self) -> tuple[Any, Any]:
+        """(row_entry, dout_entry) for the kernel's flattened [M, d_out]
+        view: all leading entries merge into one row entry (valid because
+        the flatten collapses dims in row-major order, outer axes first)."""
+        row = self.row_axes
+        spec = tuple(self.out_spec)
+        return (row if len(row) > 1 else (row[0] if row else None),
+                spec[-1] if spec else None)
+
+    # -- expressibility -----------------------------------------------------
+
+    def local_dout(self, d_out: int) -> int:
+        return d_out // max(self.dout_shards, 1)
+
+    def kernel_expressible(self, d_out: int) -> bool:
+        """Can the fused kernels run shard-local under this plan? Needs the
+        d_out shard to be even and to keep the 128-lane block constraint
+        (paper App. C, applied to the LOCAL shard)."""
+        shards = self.dout_shards
+        return d_out % max(shards, 1) == 0 and \
+            self.local_dout(d_out) % 128 == 0
+
+    # -- constraint application --------------------------------------------
+
+    def _constrain(self, x, spec: P):
+        if len(spec) > x.ndim:
+            raise ValueError(
+                f"ComposeSharding built for a rank-{len(self.out_spec)} "
+                f"output cannot constrain a rank-{x.ndim} tensor "
+                f"(spec {spec})")
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def __call__(self, y):
+        """Pin a [..., d_out] tensor (y_base / delta / y) to ``out_spec`` —
+        makes the plan a drop-in for the legacy ``constrain`` callables."""
+        return self._constrain(y, self.out_spec)
+
+    def constrain_h(self, h):
+        """Pin the rank-space intermediate (rows like y, rank replicated)."""
+        return self._constrain(h, self.h_spec)
+
+    def constrain_vec(self, v):
+        """Pin a per-feature [d_out] vector (g, w_norm)."""
+        return self._constrain(v, self.vec_spec)
+
+
+def plan_for_output(mesh, out_spec) -> ComposeSharding:
+    """Build the compose plan for a module whose output carries
+    ``out_spec`` on ``mesh``."""
+    return ComposeSharding(mesh, P(*tuple(out_spec)))
+
+
+def as_compose_sharding(constrain) -> ComposeSharding | None:
+    """Extract the plan from a ``constrain`` argument: either a
+    :class:`ComposeSharding` itself or a legacy callable carrying one as
+    its ``.plan`` attribute (``launch.sharding.make_boundary_constraint``
+    attaches it). Bare callables without a plan return None — they are
+    applied as opaque row constraints by the caller."""
+    if constrain is None:
+        return None
+    if isinstance(constrain, ComposeSharding):
+        return constrain
+    plan = getattr(constrain, "plan", None)
+    if plan is not None and isinstance(plan, ComposeSharding):
+        return plan
+    return None

@@ -36,6 +36,15 @@ single pass over dY, accumulating the ``[bm, r]`` d_h tile across the
 sequential d_out-chunk grid dimension (same accumulation pattern as the
 factored-norm kernel). r is zero-padded to the 128-lane width by the ops
 wrapper; zero columns perturb neither contraction.
+
+Under SPMD the same kernels run SHARD-LOCAL inside shard_map (the ops
+wrapper takes a ``ComposeSharding`` plan): each device composes its
+``[rows_local, d_out_local]`` tile from a rank-replicated ``h`` shard, with
+block specs derived from the mesh axis sizes via :func:`local_block_shape`
+(row-sharded d_out shrinks block_n to the local shard; r stays replicated).
+The forward needs no collectives; the backward psums the accumulated d_h
+tile over the d_out axes — the one collective a contraction over a sharded
+d_out cannot avoid — and d_B/d_g over the row axes.
 """
 from __future__ import annotations
 
@@ -45,8 +54,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat.pallas import pl, tpu_compiler_params
+from repro.core.config import shrink_block_rows
 
 _F32 = jnp.float32
+
+
+def pick_block_n(n: int, cap: int) -> int:
+    """Largest multiple of 128 (the lane width) that divides n, at most
+    cap — the feature-dim block every compose/norm grid uses."""
+    if n % 128 != 0:
+        raise ValueError(f"feature dim {n} not divisible by 128 "
+                         "(paper App. C shape constraint)")
+    for t in range(max(1, cap // 128), 0, -1):
+        if n % (128 * t) == 0:
+            return 128 * t
+    return 128
 
 
 def _fwd_kernel(base_ref, lora_ref, gm1_ref, delta_ref, *, s: float):
@@ -131,6 +153,32 @@ def compose_bwd_pallas(dy, gm1, gs, *, block_m: int, block_n: int,
 # ---------------------------------------------------------------------------
 # Matmul-fused compose: the LoRA up-projection h @ Bᵀ never leaves VMEM.
 # ---------------------------------------------------------------------------
+
+def local_block_shape(m: int, n: int, *, row_shards: int = 1,
+                      dout_shards: int = 1, block_m: int = 256,
+                      block_n: int = 1024) -> tuple[int, int]:
+    """Block specs for a shard-local kernel invocation, derived from the
+    mesh axis sizes: the grid tiles the LOCAL ``[m/row_shards,
+    n/dout_shards]`` shard, so the caps shrink to the shard before the
+    usual largest-divisible-multiple-of-128 (lanes) / row rules apply.
+    ``row_shards``/``dout_shards`` are the products of the mesh axis sizes
+    sharding the row and feature dims (1 = unsharded — the trivial mesh).
+
+    Shares one derivation with the dispatch crossover and the bench bytes
+    model: the row rule is :func:`repro.core.config.shrink_block_rows`
+    (the same one ``DoRAConfig.resolve_mm_block_rows`` applies) and the
+    feature rule is :func:`pick_block_n` — so the crossover guard, the
+    kernel, and the bench all price the same tiles.
+    """
+    if n % dout_shards != 0 or (n // dout_shards) % 128 != 0:
+        raise ValueError(
+            f"d_out={n} over {dout_shards} shards breaks the 128-lane "
+            f"block constraint (paper App. C, applied per shard)")
+    n_local = n // dout_shards
+    m_local = -(-m // row_shards)
+    return (shrink_block_rows(block_m, m_local),
+            pick_block_n(n_local, block_n))
+
 
 def _mm_fwd_kernel(base_ref, h_ref, b_ref, gm1_ref, delta_ref, *, s: float):
     b = base_ref[...].astype(_F32)                 # [bm, bn]

@@ -20,6 +20,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as _P
 
 from repro.compat.pallas import resolve_interpret
 from repro.kernels import dora_compose as _ck
@@ -33,15 +34,9 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-def pick_block_n(n: int, cap: int) -> int:
-    """Largest multiple of 128 that divides n, at most cap."""
-    if n % 128 != 0:
-        raise ValueError(f"feature dim {n} not divisible by 128 "
-                         "(paper App. C shape constraint)")
-    for t in range(max(1, cap // 128), 0, -1):
-        if n % (128 * t) == 0:
-            return 128 * t
-    return 128
+# Single source of the feature-dim block rule (re-exported: direct
+# callers and the factored-norm wrapper use it through this module).
+pick_block_n = _ck.pick_block_n
 
 
 def _pad_rows(x, bm: int):
@@ -229,10 +224,117 @@ def _make_compose_mm(s: float, mag_grad: bool, block_m: int, block_n: int,
     return compose
 
 
+@functools.lru_cache(maxsize=None)
+def _make_compose_mm_sharded(s: float, mag_grad: bool, block_m: int,
+                             block_n: int, interpret: bool, mesh,
+                             row_entry, dout_entry):
+    """Shard-local matmul-fused compose: the same Pallas kernels as
+    :func:`_make_compose_mm`, run per-device under shard_map with block
+    specs derived from the mesh axis sizes (:func:`dora_compose.
+    local_block_shape`). Forward is collective-free; the backward psums
+    d_h over the d_out axes and d_B/d_g over the row axes (deterministic
+    fp32 reductions, same .sum()-over-atomics discipline as the rest of
+    the backward)."""
+    from repro.compat.mesh import shard_map_unchecked
+    from repro.core.sharding import _entry_axes
+
+    row_axes = _entry_axes(row_entry)
+    dout_axes = _entry_axes(dout_entry)
+    p_mat = _P(row_entry, dout_entry)    # base / delta / dY  [M, N]
+    p_h = _P(row_entry, None)            # h [M, rp] — rank replicated
+    p_b = _P(dout_entry, None)           # B [N, rp]
+    p_g = _P(dout_entry)                 # g [N]
+
+    def _flatten(x):
+        return x.reshape(-1, x.shape[-1])
+
+    def _local_blocks(m_l: int, n_l: int):
+        # Shards are already local here, so shard counts are 1.
+        return _ck.local_block_shape(m_l, n_l, block_m=block_m,
+                                     block_n=block_n)
+
+    def _local_fwd(b2, h2, Bl, g32):
+        m_l, n_l = b2.shape
+        bm, bn = _local_blocks(m_l, n_l)
+        gm1 = (g32 - 1.0).reshape(1, n_l)
+        b2p, m = _pad_rows(b2, bm)
+        h2p, _ = _pad_rows(h2, bm)
+        delta = _ck.compose_mm_fwd_pallas(
+            b2p, h2p, Bl, gm1, s, block_m=bm, block_n=bn,
+            interpret=interpret)
+        return delta[:m]
+
+    def _local_bwd(dy, h2, Bl, g32, b2):
+        m_l, n_l = dy.shape
+        bm, bn = _local_blocks(m_l, n_l)
+        gm1 = (g32 - 1.0).reshape(1, n_l)
+        gs = (g32 * s).reshape(1, n_l)
+        dy_p, m = _pad_rows(dy, bm)
+        d_base, d_h = _ck.compose_mm_bwd_pallas(
+            dy_p, Bl, gm1, gs, block_m=bm, block_n=bn, interpret=interpret)
+        d_base, d_h = d_base[:m], d_h[:m]
+        if dout_axes:
+            d_h = jax.lax.psum(d_h, dout_axes)
+        dy32 = dy.astype(_F32)
+        T = jax.lax.dot_general(
+            dy32, h2.astype(_F32), (((0,), (0,)), ((), ())),
+            preferred_element_type=_F32)                     # [n_l, rp]
+        if row_axes:
+            T = jax.lax.psum(T, row_axes)
+        d_B = (g32 * s)[:, None] * T
+        if not mag_grad:
+            return d_base, d_h, d_B, jnp.zeros_like(g32)
+        d_g_base = jnp.sum(dy32 * b2.astype(_F32), axis=0)
+        if row_axes:
+            d_g_base = jax.lax.psum(d_g_base, row_axes)
+        d_g = d_g_base + s * jnp.sum(Bl.astype(_F32) * T, axis=1)
+        return d_base, d_h, d_B, d_g
+
+    smap_fwd = shard_map_unchecked(
+        _local_fwd, mesh, in_specs=(p_mat, p_h, p_b, p_g), out_specs=p_mat)
+    smap_bwd = shard_map_unchecked(
+        _local_bwd, mesh, in_specs=(p_mat, p_h, p_b, p_g, p_mat),
+        out_specs=(p_mat, p_h, p_b, p_g))
+
+    @jax.custom_vjp
+    def compose(base, h, B, g):
+        out, _ = fwd(base, h, B, g)
+        return out
+
+    def fwd(base, h, B, g):
+        shape = base.shape
+        r = B.shape[-1]
+        rp = _round_up(r, 128)
+        g32 = g.astype(_F32)
+        delta2 = smap_fwd(_flatten(base),
+                          _pad_rank(_flatten(h), rp),
+                          _pad_rank(B, rp), g32)
+        res = (g32, h, B, base if mag_grad else None)
+        return delta2.reshape(shape), res
+
+    def _bwd(res, dy):
+        g32, h, B, base = res
+        shape = dy.shape
+        r = B.shape[-1]
+        rp = _round_up(r, 128)
+        dy2 = _flatten(dy)
+        b2 = _flatten(base) if mag_grad else jnp.zeros_like(dy2)
+        d_base, d_h, d_B, d_g = smap_bwd(
+            dy2, _pad_rank(_flatten(h), rp), _pad_rank(B, rp), g32, b2)
+        d_base = d_base.reshape(shape)
+        d_h = d_h[:, :r].reshape(h.shape).astype(h.dtype)
+        d_B = d_B[:, :r].astype(B.dtype)
+        return d_base, d_h, d_B, d_g
+
+    compose.defvjp(fwd, _bwd)
+    return compose
+
+
 def fused_compose_mm(base, h, B, g, s: float, *,
                      mag_grad: bool = True,
                      block_m: int = 256, block_n: int = 1024,
-                     interpret: bool | None = None):
+                     interpret: bool | None = None,
+                     sharding=None):
     """delta = (g-1)⊙base + g⊙s⊙(h @ Bᵀ) with the up-projection fused.
 
     base: [..., d_out]; h = x@Aᵀ: [..., r]; B: [d_out, r]; g: fp32 [d_out].
@@ -240,10 +342,29 @@ def fused_compose_mm(base, h, B, g, s: float, *,
     forward reads (base, h, B) and writes delta only; backward reads dY
     once for both d_base and d_h (plus the unavoidable dYᵀ@h cross matmul
     for d_B / the magnitude gradient).
+
+    ``sharding``: a :class:`repro.core.sharding.ComposeSharding` plan; when
+    the operand shapes divide its mesh axes, the kernels run SHARD-LOCAL
+    under shard_map (block specs derived from the local shard sizes) — the
+    unsharded call is the trivial one-device instance. A plan the shapes
+    cannot divide is dropped silently (the global-kernel path still
+    computes the same values).
     """
     if base.shape[:-1] != h.shape[:-1]:
         raise ValueError(f"base leading dims {base.shape[:-1]} != h leading "
                          f"dims {h.shape[:-1]}")
+    if sharding is not None:
+        rows = 1
+        for d in base.shape[:-1]:
+            rows *= d
+        if (rows % max(sharding.row_shards, 1) == 0
+                and sharding.kernel_expressible(base.shape[-1])):
+            row_entry, dout_entry = sharding.flat2d()
+            fn = _make_compose_mm_sharded(
+                float(s), bool(mag_grad), int(block_m), int(block_n),
+                resolve_interpret(interpret), sharding.mesh,
+                row_entry, dout_entry)
+            return fn(base, h, B, g)
     fn = _make_compose_mm(float(s), bool(mag_grad), int(block_m),
                           int(block_n), resolve_interpret(interpret))
     return fn(base, h, B, g)

@@ -34,20 +34,24 @@ from repro.launch.train import build_state
 def generate(mcfg, params, adapters, scfg: StepConfig, prompts, *,
              gen_len: int, max_len: int, temperature: float = 0.0,
              seed: int = 0, cache_adapters: bool = True,
-             fold_gsb: bool = False):
+             fold_gsb: bool = False, mesh=None):
     """prompts: int32 [B, P]. Returns tokens [B, P+gen_len].
 
     ``cache_adapters``: precompute the frozen-adapter serving state (cached
     g) before prefill — bitwise-identical tokens, no per-token norm work.
     ``fold_gsb``: additionally fold g·s into B (broadcast-free decode
     compose; last-ulp numerics difference, so off by default).
+    ``mesh``: SPMD serving — the precompute pins the cached state to the
+    serving shardings (gsB row-sharded like B) and prefill/decode attach
+    the boundary constraints, so the sharded steps run the same
+    matmul-fused compose as the single-device loop.
     """
     B, P = prompts.shape
     if max_len < P + gen_len:
         raise ValueError(f"max_len={max_len} < P+gen_len={P + gen_len}")
     if cache_adapters:
         adapters = jax.jit(make_precompute_step(
-            mcfg, scfg, fold_gsb=fold_gsb))(params, adapters)
+            mcfg, scfg, mesh, fold_gsb=fold_gsb))(params, adapters)
 
     # Padded prefill (attention-only archs): pad the prompt to max_len and
     # pass the true P as a traced scalar — ONE compiled prefill covers
@@ -57,8 +61,8 @@ def generate(mcfg, params, adapters, scfg: StepConfig, prompts, *,
     can_pad = all(k == "attn" for k in mcfg.layer_kinds())
     pad = max_len - P if can_pad else 0
     prefill = jax.jit(make_prefill_step(
-        mcfg, scfg, None, batch=B, seq=max_len, padded=bool(pad)))
-    decode = jax.jit(make_decode_step(mcfg, scfg, None, batch=B),
+        mcfg, scfg, mesh, batch=B, seq=max_len, padded=bool(pad)))
+    decode = jax.jit(make_decode_step(mcfg, scfg, mesh, batch=B),
                      donate_argnums=(2,))
 
     toks = jnp.asarray(prompts, jnp.int32)

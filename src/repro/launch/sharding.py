@@ -31,6 +31,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import tree as ctree
 from repro.core import DoRAConfig
+from repro.core import sharding as _csh
 from repro.models import lm as _lm
 from repro.models.config import ModelConfig
 
@@ -184,7 +185,8 @@ def param_sharding(mcfg: ModelConfig, mesh):
 
 
 def adapter_sharding(mcfg: ModelConfig, dcfg: DoRAConfig, mesh,
-                     targets=_lm.DEFAULT_DORA_TARGETS):
+                     targets=_lm.DEFAULT_DORA_TARGETS, *,
+                     serving: bool = False):
     """NamedSharding tree matching ``adapter_shapes``.
 
     Adapters shard CONGRUENT with their base weight on the matching dim
@@ -194,6 +196,13 @@ def adapter_sharding(mcfg: ModelConfig, dcfg: DoRAConfig, mesh,
     16 GB chips; the factored norm's distributed accumulation (DESIGN.md
     §5, the paper's FSDP2 future-work item) is what makes the d_in
     sharding of A/W work without an all-gather.
+
+    ``serving=True`` additionally emits the frozen-adapter serving-state
+    leaves written by ``precompute_adapter_state``: ``"g"`` [n_scan,
+    d_out] shards like ``m`` (congruent with W's d_out), and ``"gsB"``
+    [n_scan, d_out, r] shards like ``B`` — the folded cached B must land
+    row-sharded exactly where the raw B lives, or the broadcast-free
+    decode compose would all-gather it every token.
     """
     shapes = _lm.adapter_shapes(mcfg, dcfg, targets)
 
@@ -218,6 +227,11 @@ def adapter_sharding(mcfg: ModelConfig, dcfg: DoRAConfig, mesh,
             if "base_sq" in v:  # H3.2 cached ||W||²_row: like m
                 out[k]["base_sq"] = NamedSharding(mesh, spec_for(
                     v["base_sq"].shape, ("repl", roles[0]), mesh))
+            if serving:
+                out[k]["g"] = NamedSharding(mesh, spec_for(
+                    v["m"].shape, ("repl", roles[0]), mesh))
+                out[k]["gsB"] = NamedSharding(mesh, spec_for(
+                    v["B"].shape, ("repl", roles[0], "repl"), mesh))
         return out
 
     return {"stack": walk(shapes["stack"])}
@@ -300,9 +314,13 @@ def make_boundary_constraint(mesh, *, batch: int, seq: int):
     """SP constraint for [B, S, D] activations; carries ``.heads`` — the
     head-parallel constraint for [B, S, H, hd] attention tensors (H3.4:
     forces the SP→head transition to all-to-all the small q/k/v instead
-    of the fp32 score tiles)."""
-    sharding = NamedSharding(mesh, activation_spec(mesh, batch=batch,
-                                                   seq=seq))
+    of the fp32 score tiles) — and ``.plan``, the
+    :class:`~repro.core.sharding.ComposeSharding` the adapted linears use
+    to pin the rank-space LoRA intermediate and run the matmul-fused
+    compose shard-local (no y_lora materialization under SPMD)."""
+    spec = activation_spec(mesh, batch=batch, seq=seq)
+    sharding = NamedSharding(mesh, spec)
+    plan = _csh.plan_for_output(mesh, spec)
 
     def constrain(x):
         return jax.lax.with_sharding_constraint(x, sharding)
@@ -317,6 +335,7 @@ def make_boundary_constraint(mesh, *, batch: int, seq: int):
             q, NamedSharding(mesh, spec))
 
     constrain.heads = heads
+    constrain.plan = plan
     return constrain
 
 

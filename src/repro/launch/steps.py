@@ -168,7 +168,7 @@ def make_prefill_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
     return prefill_step
 
 
-def make_precompute_step(mcfg: ModelConfig, scfg: StepConfig, *,
+def make_precompute_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
                          fold_gsb: bool = False):
     """(params, adapters) -> serving adapter tree (jit-able).
 
@@ -180,13 +180,31 @@ def make_precompute_step(mcfg: ModelConfig, scfg: StepConfig, *,
     cached g is bitwise-identical to the one the uncached forward would
     compute. Invalidation: any training step on the adapters makes the
     returned tree stale; rebuild it (cheap — one norm per adapted layer)
-    before serving the updated weights."""
+    before serving the updated weights.
+
+    ``mesh``: when set, the cached leaves are pinned to the serving
+    shardings (``sharding.adapter_sharding(serving=True)``): ``g``
+    congruent with ``m``, and the folded ``gsB`` row-sharded exactly like
+    the raw ``B`` — so the broadcast-free decode compose consumes a
+    correctly-sharded cached B instead of all-gathering it per token."""
     from repro.core import precompute_adapter_state
 
+    serving_sh = (S.adapter_sharding(mcfg, scfg.dora, mesh, serving=True)
+                  if mesh is not None else None)
+
+    def constrain_tree(vals, sh):
+        if isinstance(vals, dict):
+            return {k: (constrain_tree(v, sh[k]) if k in sh else v)
+                    for k, v in vals.items()}
+        return jax.lax.with_sharding_constraint(vals, sh)
+
     def precompute_step(params, adapters):
-        return precompute_adapter_state(params, adapters, scfg.dora,
+        tree = precompute_adapter_state(params, adapters, scfg.dora,
                                         act_dtype=mcfg.dtype,
                                         fold_gsb=fold_gsb)
+        if serving_sh is not None:
+            tree = constrain_tree(tree, serving_sh)
+        return tree
 
     return precompute_step
 

@@ -33,7 +33,11 @@ def maybe_dora(x, w, dora: dict | None, cfg: DoRAConfig | None, *,
 
     Base weights are *always* stop-gradiented here: in this framework the
     base model is frozen and only adapters train (PEFT semantics).
-    ``constrain``: sharding constraint for row-parallel outputs (H1.4).
+    ``constrain``: sharding for row-parallel outputs (H1.4) — a
+    ``ComposeSharding`` plan or a plan-carrying/bare row-constraint
+    callable; adapted linears pin the rank-space LoRA intermediate under
+    it so the matmul-fused compose keeps firing under SPMD (no y_lora
+    materialization — see ``repro.core.sharding``).
     ``base_sq_cache``: precomputed ||W||²_row (paper §2.3 future work —
     implemented here; see H3.2): skips the rank-independent base-norm
     term, the only part of the norm that re-reads W.

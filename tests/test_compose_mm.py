@@ -142,8 +142,11 @@ def test_mm_grads_vs_fp64_oracle():
 def test_dora_linear_tier_equivalence(mode):
     """dora_linear through the matmul-fused plan == the mathematical
     definition — the same closed form TestDoraLinear checks for the other
-    tiers (d_out=128 with rank 8 resolves matmul-fused under interpret)."""
-    cfg = DoRAConfig(rank=8, alpha=16, mode=mode)
+    tiers (d_out=128 with rank 8 resolves matmul-fused under interpret;
+    max rank pinned: at these tiny test rows the rows-aware bytes-model
+    guard would otherwise route the small-M call to the materialized
+    path)."""
+    cfg = DoRAConfig(rank=8, alpha=16, mode=mode, mm_fused_max_rank=128)
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(42), 3)
     d_in, d_out = 96, 128
     x = jax.random.normal(k1, (4, 7, d_in), jnp.float32)
@@ -170,7 +173,8 @@ def test_dora_linear_mm_grads_match_eager_tier():
     """Adapter gradients through the matmul-fused plan == eager tier
     (extends test_compose.test_eager_vs_fused_grads one fusion deeper)."""
     cfg_e = DoRAConfig(rank=8, alpha=16, mode="eager")
-    cfg_f = DoRAConfig(rank=8, alpha=16, mode="interpret")
+    cfg_f = DoRAConfig(rank=8, alpha=16, mode="interpret",
+                       mm_fused_max_rank=128)  # small-M: keep mm route on
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
     x = jax.random.normal(k1, (16, 128), jnp.float32)
     W = jax.random.normal(k2, (128, 128), jnp.float32)
@@ -210,6 +214,23 @@ class TestDispatchFlag:
         # 384 pads to 384 ≤ 512: eligible.
         assert dp.mm_fused_eligible(384, cfg)
         assert not dp.mm_fused_eligible(None, cfg)
+
+    def test_rows_aware_guard_decode_shaped(self):
+        """Decode-shaped rows shrink the grid AND the profitable rank
+        range (the B re-read stops amortizing — the committed 0.67x
+        decode row of BENCH_compose.json): the bytes-model bound is
+        priced at the block the call actually executes."""
+        cfg = DoRAConfig(mode="interpret")
+        # steady-state rows: bound 2*256 = 512, rank 64 (pads 128) fires
+        assert dp.mm_fused_eligible(64, cfg, rows=4096)
+        # decode rows=8: block shrinks to 8, bound 16 < 128 -> off
+        assert not dp.mm_fused_eligible(64, cfg, rows=8)
+        plan = dp.plan_compose(cfg, training=False, rows=8, d_out=4096,
+                               rank=64)
+        assert plan.fused and not plan.matmul_fused
+        # an explicit pin overrides the bytes model (operator's call)
+        cfg_pin = DoRAConfig(mode="interpret", mm_fused_max_rank=512)
+        assert dp.mm_fused_eligible(64, cfg_pin, rows=8)
 
     def test_config_kill_switch(self):
         cfg = DoRAConfig(mode="interpret", compose_matmul_fused=False)

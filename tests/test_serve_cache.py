@@ -116,6 +116,24 @@ class TestCachedG:
         np.testing.assert_allclose(np.asarray(y_srv), np.asarray(y_raw),
                                    rtol=1e-6, atol=1e-6)
 
+    def test_precompute_step_with_mesh_pins_serving_shardings(self):
+        """make_precompute_step(mesh=...) constrains the cached leaves to
+        the serving shardings (gsB row-sharded like B); on the trivial
+        1-device mesh the values are bitwise the unconstrained ones."""
+        from repro.launch.mesh import make_debug_mesh
+        mcfg, scfg, params, adapters = _state(self.DCFG)
+        mesh = make_debug_mesh(1, 1)
+        srv_m = jax.jit(make_precompute_step(mcfg, scfg, mesh,
+                                             fold_gsb=True))(params,
+                                                             adapters)
+        srv_n = jax.jit(make_precompute_step(mcfg, scfg, None,
+                                             fold_gsb=True))(params,
+                                                             adapters)
+        assert "gsB" in srv_m["stack"]["l0"]["mixer"]["wq"]
+        assert jax.tree.structure(srv_m) == jax.tree.structure(srv_n)
+        for a, b in zip(jax.tree.leaves(srv_m), jax.tree.leaves(srv_n)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
     def test_fold_gsb_matches_unfolded(self):
         key = jax.random.PRNGKey(5)
         W = jax.random.normal(key, (128, 64))
@@ -134,6 +152,29 @@ class TestCachedG:
         refolded = precompute_adapter_state(W, folded, self.DCFG,
                                             fold_gsb=False)
         assert "gsB" not in refolded and "g" in refolded
+
+    def test_gsb_fast_path_runs_under_sharding_constraint(self):
+        """Sharded call sites used to fall off the broadcast-free decode
+        compose (the constraint needed a y_lora to pin); with the
+        rank-space constraint they take it too — on the trivial 1-device
+        mesh the output is bitwise the unconstrained folded one."""
+        from jax.sharding import PartitionSpec as P
+        from repro.compat.mesh import make_mesh
+        from repro.core.sharding import plan_for_output
+        key = jax.random.PRNGKey(9)
+        W = jax.random.normal(key, (128, 64))
+        x = jax.random.normal(jax.random.fold_in(key, 2), (4, 64))
+        adp = init_dora_params(jax.random.fold_in(key, 1), W, self.DCFG)
+        adp["B"] = 0.2 * jax.random.normal(jax.random.fold_in(key, 3),
+                                           adp["B"].shape)
+        folded = precompute_adapter_state(W, adp, self.DCFG, fold_gsb=True)
+        plan = plan_for_output(make_mesh((1,), ("model",)), P(None, "model"))
+        y_c = jax.jit(lambda x: dora_linear(x, W, folded, self.DCFG,
+                                            training=False,
+                                            constrain=plan))(x)
+        y_n = jax.jit(lambda x: dora_linear(x, W, folded, self.DCFG,
+                                            training=False))(x)
+        np.testing.assert_array_equal(np.asarray(y_c), np.asarray(y_n))
 
 
 class TestPaddedPrefill:

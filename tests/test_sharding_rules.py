@@ -138,6 +138,39 @@ def test_adapter_tp_congruence_rules():
     assert unit["ffn"]["w_down"]["B"].spec == P(None, "data", None)
 
 
+def test_serving_state_sharding_congruent():
+    """serving=True emits the frozen-adapter cache leaves: g shards like m
+    (congruent with W's d_out) and the folded gsB row-shards exactly like
+    the raw B — the broadcast-free decode compose must consume a
+    correctly-sharded cached B, not all-gather it per token."""
+    mcfg = get_config("qwen3-32b")
+    dcfg = DoRAConfig(rank=384)
+    mesh = FakeMeshAsReal()
+    sh = S.adapter_sharding(mcfg, dcfg, mesh, serving=True)
+    unit = sh["stack"]["l0"]
+    for leaf in (unit["mixer"]["wq"], unit["ffn"]["w_down"]):
+        assert leaf["g"].spec == leaf["m"].spec
+        assert leaf["gsB"].spec == leaf["B"].spec
+    # wq is TP out-sharded on this mesh: the cached B lands model-sharded
+    assert unit["mixer"]["wq"]["gsB"].spec == P(None, "model", None)
+    # default (serving=False) trees stay exactly as before
+    raw = S.adapter_sharding(mcfg, dcfg, mesh)
+    assert "g" not in raw["stack"]["l0"]["mixer"]["wq"]
+    assert "gsB" not in raw["stack"]["l0"]["mixer"]["wq"]
+
+
+def test_boundary_constraint_carries_compose_plan():
+    """make_boundary_constraint attaches the ComposeSharding plan the
+    adapted linears use to pin the rank-space LoRA intermediate."""
+    from repro.core.sharding import as_compose_sharding
+    mesh = FakeMeshAsReal()
+    cst = S.make_boundary_constraint(mesh, batch=256, seq=4096)
+    plan = as_compose_sharding(cst)
+    assert plan is not None and plan.mesh is mesh
+    assert plan.out_spec == S.activation_spec(mesh, batch=256, seq=4096)
+    assert plan.h_spec == P(*(tuple(plan.out_spec)[:-1] + (None,)))
+
+
 def test_adapter_pod_fsdp_on_multipod_mesh():
     mcfg = get_config("qwen3-32b")
     dcfg = DoRAConfig(rank=384)
