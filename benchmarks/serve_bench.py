@@ -10,6 +10,15 @@ three configurations on a CPU-runnable smoke config:
   - ``cached+gsB`` — g·s additionally folded into B (broadcast-free
     compose; allclose, not bitwise).
 
+The multi-tenant section prices the request-routed server: ``mt-warm``
+(every adapter state an LRU hit) and ``mt-cold`` (empty cache: the first
+batch pays one precompute per tenant) against the single-tenant
+``cached+gsB`` decode, plus the ANALYTIC per-token adapter-path bytes
+model (``adapter_decode_bytes_model``) — where the cache-hit grouped path
+prices IDENTICALLY to single-tenant cached decode by construction (each
+row reads its own A/gsB/g once, no norm reads); the equality is gated in
+``scripts/check_bench_drift.py``.
+
 Absolute tok/s on this CPU is meaningless for TPU; the *ratio* isolates
 exactly the per-token norm work the cache removes, and is recorded in the
 committed ``BENCH_serve.json`` to seed the perf trajectory.
@@ -30,22 +39,25 @@ import numpy as np
 
 from benchmarks.common import save
 from repro.configs import get_config
-from repro.core import DoRAConfig
+from repro.core import AdapterStateCache, DoRAConfig
 from repro.launch.steps import (StepConfig, make_decode_step,
                                 make_precompute_step, make_prefill_step)
 from repro.launch.train import build_state
 
 
 def bench_decode(mcfg, scfg, params, adapters, *, batch, prompt_len,
-                 max_len, gen_len, warmup=2):
+                 max_len, gen_len, warmup=2, tenant_groups=None):
     """Time ``gen_len`` decode steps against a prefilled cache; returns
-    (tok_s, ms_per_token)."""
+    (tok_s, ms_per_token). ``tenant_groups``: time the GROUPED multi-
+    tenant decode step instead (same loop, adapter routing inside)."""
     rng = np.random.default_rng(0)
     toks = jnp.asarray(rng.integers(0, mcfg.vocab_size,
                                     (batch, prompt_len)), jnp.int32)
     prefill = jax.jit(make_prefill_step(mcfg, scfg, None, batch=batch,
-                                        seq=max_len))
-    decode = jax.jit(make_decode_step(mcfg, scfg, None, batch=batch))
+                                        seq=max_len,
+                                        tenant_groups=tenant_groups))
+    decode = jax.jit(make_decode_step(mcfg, scfg, None, batch=batch,
+                                      tenant_groups=tenant_groups))
     logits, cache = jax.block_until_ready(
         prefill(params, adapters, {"tokens": toks}))
     nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
@@ -103,12 +115,146 @@ def run(arch="qwen2-7b", *, smoke=True, rank=64, batch=4, prompt_len=16,
     return rows
 
 
-def write_artifact(rows, path="BENCH_serve.json") -> str:
+# ---------------------------------------------------------------------------
+# Multi-tenant serving (LRU adapter-state cache + grouped decode).
+# ---------------------------------------------------------------------------
+
+def adapter_decode_bytes_model(d_out: int, d_in: int, rank: int,
+                               dtype_size: int = 4) -> dict:
+    """ANALYTIC per-token, per-row, per-adapted-layer HBM reads of the
+    ADAPTER path (the base y = x@Wᵀ is mode-independent and excluded):
+
+      - ``uncached``: the factored norm re-reads W [d_out, d_in] (the
+        base-squared term) + A + B + m every token, then the compose
+        reads A + B + g again — the W read dominates;
+      - ``cached``: A + B + the cached g (no W, no norm);
+      - ``cached_gsb``: A + the folded gsB (same size as B) + g;
+      - ``mt_hit``: the multi-tenant grouped path on a cache HIT — each
+        row reads ITS OWN A[k]/gsB[k]/g[k] exactly once, so it prices
+        IDENTICALLY to ``cached_gsb`` (gated: a multi-tenant design that
+        priced worse than single-tenant cached decode would be a
+        regression, not a feature).
+
+    Pure integer arithmetic — machine-independent, transfers to TPU, and
+    is the committed "model" section of BENCH_serve.json that
+    ``scripts/check_bench_drift.py`` re-prices.
+    """
+    a = rank * d_in * dtype_size
+    b = d_out * rank * dtype_size
+    vec = d_out * dtype_size          # m / g / w_norm row vectors (fp32)
+    w = d_out * d_in * dtype_size
+    # uncached = the norm pass (W, A, B, m) PLUS the compose pass
+    # (A, B, g) — A/B are read twice per token; the W read dominates.
+    uncached = (w + a + b + vec) + (a + b + vec)
+    cached = a + b + vec              # compose reads A, B + cached g
+    cached_gsb = a + b + vec          # A + gsB (|gsB| == |B|) + g
+    return {
+        "d_out": d_out, "d_in": d_in, "rank": rank,
+        "dtype_size": dtype_size,
+        "uncached_bytes": uncached,
+        "cached_bytes": cached,
+        "cached_gsb_bytes": cached_gsb,
+        "mt_hit_bytes": cached_gsb,   # identical pricing BY CONSTRUCTION
+        "model_ratio_uncached_over_cached": uncached / cached,
+    }
+
+
+def run_multitenant(arch="qwen2-7b", *, smoke=True, rank=64, tenants=3,
+                    rows_per=2, prompt_len=16, gen_len=32,
+                    verbose=True) -> dict:
+    """Cold-miss vs warm-hit multi-tenant serving vs single-tenant cached
+    decode; returns {"rows": [...], "model": {...}, "cache": stats}.
+
+    All three rows time the SAME decode loop (``bench_decode``), so the
+    ratio isolates exactly the grouped adapter routing: warm-hit pays the
+    per-row gsB gather, cold-miss additionally amortizes one LRU
+    precompute per tenant over the batch's tokens."""
+    mcfg = get_config(arch, smoke=smoke)
+    dcfg = DoRAConfig(rank=rank, alpha=2.0 * rank, mode="auto")
+    scfg = StepConfig(dora=dcfg)
+    params, adapters, _ = build_state(mcfg, dcfg, 0)
+    max_len = prompt_len + gen_len + 4
+    B = tenants * rows_per
+    rng = np.random.default_rng(0)
+
+    cache = AdapterStateCache.for_serving(mcfg, scfg)
+    handles = []
+    for t in range(tenants):
+        _, ad_t, _ = build_state(mcfg, dcfg, 10 + t)
+        handles.append(cache.register(f"tenant-{t}", ad_t))
+
+    # Single-tenant baseline: the SAME batch size, one adapter, folded
+    # state — the tok/s the grouped cache-hit path must not fall behind.
+    folded = jax.block_until_ready(jax.jit(make_precompute_step(
+        mcfg, scfg, fold_gsb=True))(params, adapters))
+    st_tok_s, st_ms = bench_decode(mcfg, scfg, params, folded, batch=B,
+                                   prompt_len=prompt_len, max_len=max_len,
+                                   gen_len=gen_len)
+
+    # Warm-hit: every state an LRU hit; time the grouped decode loop.
+    from repro.core import stack_adapter_states
+    groups = tuple((t * rows_per, rows_per) for t in range(tenants))
+    states = [cache.get_state(params, h) for h in handles]   # cold misses
+    stacked = stack_adapter_states(states, axis=1)
+    warm_tok_s, warm_ms = bench_decode(mcfg, scfg, params, stacked,
+                                       batch=B, prompt_len=prompt_len,
+                                       max_len=max_len, gen_len=gen_len,
+                                       tenant_groups=groups)
+
+    # Cold-miss: drop the cached states (registry intact) and re-derive
+    # them through the LRU — the recompute cost amortized over this
+    # batch's tokens is the miss penalty.
+    cache.invalidate()
+    t0 = time.perf_counter()
+    states = [cache.get_state(params, h) for h in handles]
+    stacked = jax.block_until_ready(
+        stack_adapter_states(states, axis=1))
+    t_miss = time.perf_counter() - t0
+    dt_decode = B * gen_len / warm_tok_s
+    cold_tok_s = B * gen_len / (dt_decode + t_miss)
+    cold_ms = 1e3 * (dt_decode + t_miss) / gen_len
+
+    rows = [
+        {"mode": "single-tenant cached+gsB", "tok_s": st_tok_s,
+         "ms_per_token": st_ms},
+        {"mode": "mt-warm", "tok_s": warm_tok_s, "ms_per_token": warm_ms,
+         "vs_single_tenant": warm_tok_s / st_tok_s},
+        {"mode": "mt-cold", "tok_s": cold_tok_s, "ms_per_token": cold_ms,
+         "vs_single_tenant": cold_tok_s / st_tok_s,
+         "miss_precompute_ms": 1e3 * t_miss},
+    ]
+    for r in rows:
+        r.update(arch=mcfg.name, rank=rank, tenants=tenants,
+                 batch=B, gen_len=gen_len)
+    model = adapter_decode_bytes_model(mcfg.d_model, mcfg.d_model, rank)
+    stats = cache.stats().as_dict()
+    if verbose:
+        for r in rows:
+            extra = (f" ({r['vs_single_tenant']:.2f}x vs single-tenant)"
+                     if "vs_single_tenant" in r else "")
+            print(f"  {r['mode']:>26}: {r['tok_s']:8.1f} tok/s "
+                  f"({r['ms_per_token']:6.2f} ms/tok){extra}")
+        print(f"  cache: {stats['hits']} hits / {stats['misses']} misses "
+              f"/ {stats['current_bytes']} state bytes; analytic "
+              f"mt_hit == cached_gsb: "
+              f"{model['mt_hit_bytes'] == model['cached_gsb_bytes']}")
+    save("serve_bench_multitenant", rows)
+    return {"rows": rows, "model": model, "cache": stats}
+
+
+def write_artifact(rows, multi_tenant=None, path="BENCH_serve.json") -> str:
     payload = {"bench": "serve_decode",
                "rows": rows,
                "notes": "smoke-config CPU decode; the cached/uncached "
                         "ratio isolates the per-token factored-norm work "
-                        "removed by precompute_adapter_state."}
+                        "removed by precompute_adapter_state. "
+                        "multi_tenant: LRU-routed grouped decode "
+                        "(cold-miss vs warm-hit); its 'model' section is "
+                        "the analytic per-token adapter-path bytes gated "
+                        "by scripts/check_bench_drift.py (mt_hit must "
+                        "price identically to cached_gsb)."}
+    if multi_tenant is not None:
+        payload["multi_tenant"] = multi_tenant
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float)
         f.write("\n")
@@ -133,8 +279,11 @@ def main() -> None:
     print("# Decode tok/s before/after the frozen-adapter cache")
     rows = run(args.arch, smoke=True, rank=args.rank, batch=batch,
                gen_len=gen)
+    print("# Multi-tenant: LRU cache cold-miss vs warm-hit vs single-tenant")
+    mt = run_multitenant(args.arch, smoke=True, rank=args.rank,
+                         gen_len=gen)
     if args.artifact:
-        print(f"wrote {os.path.abspath(write_artifact(rows, args.artifact))}")
+        print(f"wrote {os.path.abspath(write_artifact(rows, mt, args.artifact))}")
 
 
 if __name__ == "__main__":

@@ -2,19 +2,26 @@
 """Bench-drift gate: the analytic bytes models must not regress.
 
 Re-runs the *deterministic* bytes-model sections of
-``benchmarks/compose_bench.py`` — the analytic HBM-traffic numbers that
-transfer to TPU — at the current code's defaults, and fails when the
-prediction REGRESSES versus the committed ``BENCH_compose.json``:
+``benchmarks/compose_bench.py`` and ``benchmarks/serve_bench.py`` — the
+analytic HBM-traffic numbers that transfer to TPU — at the current code's
+defaults, and fails when the prediction REGRESSES versus the committed
+artifacts:
 
-  - ``bytes_fused_model`` (matmul-fused kernel traffic) grew, or
-  - ``model_ratio`` (unfused/fused traffic, the headline win) shrank.
+  - ``BENCH_compose.json``: ``bytes_fused_model`` (matmul-fused kernel
+    traffic) grew, or ``model_ratio`` (unfused/fused traffic, the
+    headline win) shrank;
+  - ``BENCH_serve.json`` (``multi_tenant.model`` section): any per-token
+    adapter-path bytes grew, or the multi-tenant cache-hit path stopped
+    pricing IDENTICALLY to single-tenant cached decode (``mt_hit_bytes ==
+    cached_gsb_bytes`` — the grouped path must not cost extra per token).
 
-Measured sections (HLO bytes-accessed, wall clocks) are machine-dependent
-and stay informational — they are never gated here.
+Measured sections (HLO bytes-accessed, wall clocks, tok/s) are
+machine-dependent and stay informational — they are never gated here.
 
 An *improvement* (prediction strictly better than committed) passes but
 prints a reminder to regenerate the artifact
-(``python -m benchmarks.compose_bench --artifact BENCH_compose.json``)
+(``python -m benchmarks.compose_bench --artifact BENCH_compose.json`` /
+``python -m benchmarks.serve_bench --smoke --artifact BENCH_serve.json``)
 so the committed trajectory keeps up with the code.
 
 Exit status: 0 clean, 1 on regression (CI fails the PR).
@@ -100,7 +107,68 @@ def check(artifact_path: str) -> int:
     return 0
 
 
+def check_serve(artifact_path: str) -> int:
+    """Gate the serve bench's analytic adapter-path model: re-price from
+    the committed shape, fail on growth, and enforce the multi-tenant
+    invariant mt_hit == cached_gsb (a cache hit adds no per-token cost)."""
+    from benchmarks.serve_bench import adapter_decode_bytes_model
+
+    with open(artifact_path) as f:
+        committed = json.load(f)
+    model = committed.get("multi_tenant", {}).get("model")
+    if not model:
+        print(f"ERROR: no multi_tenant.model section in {artifact_path} — "
+              f"regenerate: python -m benchmarks.serve_bench --smoke "
+              f"--artifact BENCH_serve.json")
+        return 1
+    got = adapter_decode_bytes_model(model["d_out"], model["d_in"],
+                                     model["rank"], model["dtype_size"])
+    failures = []
+    improvements = []
+    for field in ("uncached_bytes", "cached_bytes", "cached_gsb_bytes",
+                  "mt_hit_bytes"):
+        want, now = model[field], got[field]
+        status = "ok"
+        if now > want * (1 + EPS):
+            status = "REGRESSION"
+            failures.append(f"{field}: predicted per-token adapter bytes "
+                            f"grew {want:.0f} -> {now:.0f}")
+        elif now < want * (1 - EPS):
+            status = "improved"
+            improvements.append(field)
+        print(f"  {field:>18}: {want:>10.0f} -> {now:>10.0f} B  [{status}]")
+    if got["mt_hit_bytes"] != got["cached_gsb_bytes"]:
+        failures.append(
+            f"multi-tenant cache-hit path no longer prices identically to "
+            f"single-tenant cached decode: mt_hit={got['mt_hit_bytes']} != "
+            f"cached_gsb={got['cached_gsb_bytes']} — the grouped decode "
+            f"must read each row's A/gsB/g exactly once")
+    if failures:
+        print("\nserve-drift FAIL:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        print("If intentional, regenerate and justify in the PR:\n"
+              "  python -m benchmarks.serve_bench --smoke --artifact "
+              "BENCH_serve.json")
+        return 1
+    if improvements:
+        print(f"\nserve-drift OK (improved: {', '.join(improvements)}) — "
+              f"regenerate BENCH_serve.json to record the better model.")
+    else:
+        print("\nserve-drift OK: analytic adapter-path model matches the "
+              "committed artifact (mt_hit == cached_gsb).")
+    return 0
+
+
 if __name__ == "__main__":
-    path = sys.argv[1] if len(sys.argv) > 1 else \
-        os.path.join(ROOT, "BENCH_compose.json")
-    sys.exit(check(path))
+    if len(sys.argv) > 1:
+        compose_path, serve_path = sys.argv[1], (
+            sys.argv[2] if len(sys.argv) > 2 else
+            os.path.join(ROOT, "BENCH_serve.json"))
+    else:
+        compose_path = os.path.join(ROOT, "BENCH_compose.json")
+        serve_path = os.path.join(ROOT, "BENCH_serve.json")
+    rc = check(compose_path)
+    print()
+    rc = check_serve(serve_path) or rc
+    sys.exit(rc)

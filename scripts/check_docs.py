@@ -1,0 +1,156 @@
+#!/usr/bin/env python
+"""Docs gate: the guides in docs/ cannot rot.
+
+Two checks over every ``docs/*.md``:
+
+1. **Executable blocks** — every fenced ```python block is extracted and
+   executed (all blocks of one file concatenated, in order, in one fresh
+   subprocess) on a CPU host with the interpret tier forced
+   (``JAX_PLATFORMS=cpu``, ``REPRO_FORCE_TIER=interpret``) — the same
+   environment the CI tier matrix runs. A block that stops matching the
+   code fails CI with the doc file and block number named.
+
+2. **Module references** — every dotted ``repro.*`` reference and every
+   literal ``src/repro/**`` path mentioned anywhere in the docs must
+   resolve: paths must exist on disk; dotted references are resolved by
+   importing their longest importable module prefix and walking the
+   remaining segments with getattr — so renaming a module, class,
+   function, or config field breaks the doc check, not a reader.
+
+Wired into ``scripts/run_tier1.sh`` and the CI workflow. Exit status: 0
+clean, 1 on any failure.
+"""
+from __future__ import annotations
+
+import importlib
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = os.path.join(ROOT, "docs")
+SRC = os.path.join(ROOT, "src")
+
+_FENCE_RE = re.compile(r"^```(\S*)\s*$")
+_DOTTED_RE = re.compile(r"\brepro(?:\.[A-Za-z_]\w*)+")
+_PATH_RE = re.compile(r"\bsrc/repro/[\w/.\-]+")
+
+
+def extract_blocks(text: str) -> list[tuple[int, str]]:
+    """(starting line number, code) for every fenced ``python`` block."""
+    blocks, in_block, lang, buf, start = [], False, "", [], 0
+    for i, line in enumerate(text.splitlines(), 1):
+        m = _FENCE_RE.match(line)
+        if m and not in_block:
+            in_block, lang, buf, start = True, m.group(1), [], i + 1
+        elif m and in_block:
+            if lang == "python":
+                blocks.append((start, "\n".join(buf)))
+            in_block = False
+        elif in_block:
+            buf.append(line)
+    return blocks
+
+
+def run_doc_blocks(path: str) -> list[str]:
+    """Execute a doc's python blocks (concatenated, one subprocess)."""
+    with open(path) as f:
+        text = f.read()
+    blocks = extract_blocks(text)
+    if not blocks:
+        return []
+    code = "\n\n".join(
+        f"# --- {os.path.basename(path)} block {i + 1} (line {ln}) ---\n"
+        f"{src}" for i, (ln, src) in enumerate(blocks))
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["REPRO_FORCE_TIER"] = "interpret"
+    env["PYTHONPATH"] = SRC + os.pathsep + ROOT + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run([sys.executable, "-c", code], cwd=ROOT,
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    if out.returncode != 0:
+        return [f"{os.path.relpath(path, ROOT)}: python blocks failed "
+                f"(exit {out.returncode}):\n--- stdout ---\n{out.stdout}"
+                f"\n--- stderr ---\n{out.stderr.strip()[-3000:]}"]
+    print(f"  {os.path.relpath(path, ROOT)}: {len(blocks)} python "
+          f"block(s) executed ok")
+    return []
+
+
+def check_reference(ref: str) -> str | None:
+    """Resolve ``repro.a.b.C`` — import the longest importable module
+    prefix, getattr-walk the rest. Returns an error string or None."""
+    parts = ref.split(".")
+    mod, k = None, 0
+    for k in range(len(parts), 0, -1):
+        name = ".".join(parts[:k])
+        try:
+            mod = importlib.import_module(name)
+            break
+        except ImportError:
+            continue
+        except Exception as e:                      # pragma: no cover
+            return f"{ref}: importing {name} raised {type(e).__name__}: {e}"
+    if mod is None or k < 2:
+        return f"{ref}: no importable module prefix under 'repro'"
+    obj = mod
+    for attr in parts[k:]:
+        if not hasattr(obj, attr):
+            return (f"{ref}: {'.'.join(parts[:k])} has no attribute "
+                    f"{attr!r}")
+        obj = getattr(obj, attr)
+    return None
+
+
+def check_doc_references(path: str) -> list[str]:
+    with open(path) as f:
+        text = f.read()
+    errors = []
+    rel = os.path.relpath(path, ROOT)
+    refs = sorted(set(_DOTTED_RE.findall(text)))
+    for ref in refs:
+        err = check_reference(ref)
+        if err:
+            errors.append(f"{rel}: {err}")
+    paths = sorted(set(p.rstrip(".,)") for p in _PATH_RE.findall(text)))
+    for p in paths:
+        full = os.path.join(ROOT, p)
+        # bare directories may be referenced with or without a trailing /
+        if not (os.path.exists(full) or os.path.isdir(full.rstrip("/"))):
+            errors.append(f"{rel}: referenced path {p} does not exist")
+    if not errors:
+        print(f"  {rel}: {len(refs)} module refs + {len(paths)} paths ok")
+    return errors
+
+
+def main() -> int:
+    sys.path[:0] = [SRC, ROOT]
+    docs = sorted(
+        os.path.join(DOCS, f) for f in os.listdir(DOCS)
+        if f.endswith(".md")) if os.path.isdir(DOCS) else []
+    if not docs:
+        print(f"ERROR: no docs/*.md found under {DOCS}")
+        return 1
+    errors = []
+    print(f"docs gate: {len(docs)} guide(s)")
+    print("— module/path references —")
+    for d in docs:
+        errors += check_doc_references(d)
+    print("— executable python blocks (CPU, interpret tier) —")
+    for d in docs:
+        errors += run_doc_blocks(d)
+    if errors:
+        print("\ndocs gate FAIL:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print("\ndocs gate OK: every fenced python block executes and every "
+          "referenced module resolves.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,10 +17,11 @@
 #            seed failure was JAX API drift, absorbed by src/repro/compat/
 #   post-PR2 292 passed / 0 failed / 2 skipped
 #   post-PR3 317 passed / 0 failed / 2 skipped (SPMD compose + CI gates)
+#   post-PR4 358 passed / 0 failed / 2 skipped (multi-tenant serving + docs)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-MIN_PASS="${REPRO_TIER1_MIN_PASS:-317}"
+MIN_PASS="${REPRO_TIER1_MIN_PASS:-358}"
 MAX_FAIL="${REPRO_TIER1_MAX_FAIL:-0}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 TIER="${REPRO_FORCE_TIER:-interpret}"
@@ -69,10 +70,17 @@ echo "serve smoke (tier ${TIER}): adapter cache + padded prefill"
 python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \
     --prompt-len 16 --gen-len 4
 echo
+echo "multi-tenant serve smoke (tier ${TIER}): LRU cache + grouped decode"
+python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \
+    --prompt-len 16 --gen-len 4 --tenants 3
+echo
 echo "bench smoke: compose kernels (incl. matmul-fused) + serving cache"
 python -m benchmarks.compose_bench --smoke
 python -m benchmarks.serve_bench --smoke
 echo
-echo "bench-drift gate: analytic bytes models vs committed BENCH_compose.json"
+echo "bench-drift gate: analytic bytes models vs committed BENCH_*.json"
 python scripts/check_bench_drift.py
+echo
+echo "docs gate: executable guides + module references (docs/*.md)"
+python scripts/check_docs.py
 echo "tier-1 smokes OK"

@@ -1,9 +1,14 @@
 """Core DoRA library — the paper's contribution as composable JAX modules."""
 from repro.core.config import DoRAConfig
 from repro.core.adapter import (
-    dora_linear, dora_linear_stacked, init_dora_params,
-    compute_weight_norm, compose_delta, compose_delta_factored,
-    precompute_adapter_state, invalidate_adapter_state,
+    dora_linear, dora_linear_grouped, dora_linear_stacked,
+    init_dora_params, compute_weight_norm, compose_delta,
+    compose_delta_factored, precompute_adapter_state,
+    invalidate_adapter_state, stack_adapter_states,
+)
+from repro.core.adapter_cache import (
+    AdapterCacheMiss, AdapterHandle, AdapterKey, AdapterStateCache,
+    CacheStats,
 )
 # NOTE: the factored_norm *function* is deliberately not re-exported at
 # package level — it would shadow the repro.core.factored_norm submodule.
@@ -17,9 +22,13 @@ from repro.core.compose import (
 from repro.core.dispatch import Tier, select_tier
 
 __all__ = [
-    "DoRAConfig", "dora_linear", "dora_linear_stacked", "init_dora_params",
+    "DoRAConfig", "dora_linear", "dora_linear_grouped",
+    "dora_linear_stacked", "init_dora_params",
     "compute_weight_norm", "compose_delta", "compose_delta_factored",
     "precompute_adapter_state", "invalidate_adapter_state",
+    "stack_adapter_states",
+    "AdapterCacheMiss", "AdapterHandle", "AdapterKey", "AdapterStateCache",
+    "CacheStats",
     "factored_norm_terms", "factored_norm_sharded", "assemble_norm",
     "norm_peft_eye", "norm_dense_ba", "dtype_eps", "compose_stable",
     "compose_naive", "magnitude_scale", "Tier", "select_tier",

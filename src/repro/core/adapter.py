@@ -190,7 +190,7 @@ def compose_delta_factored(y_base, h, B, g, cfg: DoRAConfig, *,
 
 def dora_linear(x, W, adapter: dict[str, Any], cfg: DoRAConfig, *,
                 bias=None, training: bool = True, axis_name=None,
-                base_sq_cache=None, constrain=None):
+                base_sq_cache=None, constrain=None, tenant_groups=None):
     """Adapted linear: x [..., d_in] → y [..., d_out].
 
     W: frozen [d_out, d_in]; adapter: {"A": [r, d_in], "B": [d_out, r],
@@ -212,7 +212,16 @@ def dora_linear(x, W, adapter: dict[str, Any], cfg: DoRAConfig, *,
     shard-local under shard_map; a bare callable must be a row-only
     constraint (its feature entry replicated), which every
     sequence-parallel boundary constraint is.
+
+    ``tenant_groups``: multi-tenant serving (static, trace-time). A tuple
+    of ``(start, size)`` row blocks partitioning x's leading (batch) dim,
+    one per tenant, with adapter leaves carrying a leading tenant dim K =
+    ``len(tenant_groups)`` — see :func:`dora_linear_grouped`.
     """
+    if tenant_groups is not None:
+        return dora_linear_grouped(x, W, adapter, cfg, tenant_groups,
+                                   bias=bias, training=training,
+                                   constrain=constrain)
     A, B, m = adapter["A"], adapter["B"], adapter["m"]
     plan_sh = as_compose_sharding(constrain)
     cfn = plan_sh if plan_sh is not None else constrain
@@ -255,6 +264,12 @@ def dora_linear(x, W, adapter: dict[str, Any], cfg: DoRAConfig, *,
         # above, and the folded up-projection output inherits the output
         # constraint like any row-parallel matmul.
         gsB = jax.lax.stop_gradient(adapter["gsB"])
+        if plan_sh is not None and plan_sh.b_dout_axes and gsB.ndim == 2:
+            # B's d_out carries FSDP axes beyond the output's (the ROADMAP
+            # b_spec gap): declare the true layout so GSPMD reshards the
+            # small [d_out, r] folded weight explicitly, not the
+            # activations.
+            gsB = plan_sh.constrain_b(gsB)
         t = jax.lax.dot_general(
             h.astype(_F32), gsB.astype(_F32),
             (((x.ndim - 1,), (1,)), ((), ())), preferred_element_type=_F32)
@@ -289,6 +304,117 @@ def dora_linear_stacked(x, W, adapter, cfg: DoRAConfig, *, bias=None,
                  None if bias is None else 0,
                  None if base_sq_cache is None else 0),
     )(x, W, adapter, bias, base_sq_cache)
+
+
+def check_tenant_groups(tenant_groups, batch: int) -> tuple:
+    """Validate a multi-tenant grouping: a tuple of ``(start, size)`` row
+    blocks that tile ``[0, batch)`` contiguously in order (the server sorts
+    request rows by adapter before building the step). Static — runs at
+    trace time, so a bad grouping fails at step-build, not mid-decode."""
+    groups = tuple((int(s), int(n)) for s, n in tenant_groups)
+    if not groups:
+        raise ValueError("tenant_groups must name at least one group")
+    expect = 0
+    for k, (start, size) in enumerate(groups):
+        if start != expect or size < 1:
+            raise ValueError(
+                f"tenant_groups must tile the batch contiguously: group "
+                f"{k} is (start={start}, size={size}) but rows 0..{expect} "
+                f"are covered so far (groups={groups})")
+        expect = start + size
+    if expect != batch:
+        raise ValueError(
+            f"tenant_groups {groups} cover {expect} rows, batch has {batch}")
+    return groups
+
+
+def dora_linear_grouped(x, W, adapter: dict[str, Any], cfg: DoRAConfig,
+                        tenant_groups, *, bias=None, training: bool = False,
+                        constrain=None):
+    """Multi-tenant adapted linear: one call serves a batch whose rows are
+    grouped by adapter (x [B, ..., d_in], rows ``start:start+size`` of
+    group k using adapter k).
+
+    ``adapter`` leaves carry a leading tenant dim K (``stack_adapter_
+    states``) and MUST be a folded serving tree — ``"g"`` and ``"gsB"``
+    from ``precompute_adapter_state(fold_gsb=True)`` — so the per-group
+    work is exactly the homogeneous broadcast-free decode compose: zero
+    factored-norm work per token, and each row reads its own adapter state
+    once (the cache-hit path prices identically to single-tenant cached
+    decode — gated in ``scripts/check_bench_drift.py``).
+
+    Grouping is STATIC (a compile-time signature): each group's rows are a
+    contiguous static slice run through the *same ops as the homogeneous
+    path*, so a mixed-adapter batch is bitwise-equal (fp32) to serving each
+    tenant sequentially with its own precomputed state — for groups of
+    ≥ 2 rows (XLA's single-row matmuls take a gemv path whose reduction
+    order differs; 1-row groups are allclose, see docs/numerics.md).
+    """
+    if training:
+        raise ValueError(
+            "dora_linear_grouped is a serving-only path: the grouped "
+            "compose consumes precomputed per-tenant state ('g'/'gsB') "
+            "that is stale the moment A/B/m change. Train per-tenant on "
+            "the raw adapter trees.")
+    missing = [k for k in ("g", "gsB") if k not in adapter]
+    if missing:
+        raise ValueError(
+            f"multi-tenant grouped serving needs the FOLDED per-tenant "
+            f"state (missing {missing!r} leaves): precompute each "
+            f"tenant with precompute_adapter_state(..., fold_gsb=True) "
+            f"(AdapterStateCache.for_serving does) and stack with "
+            f"stack_adapter_states before building the grouped step.")
+    A, g, gsB = adapter["A"], adapter["g"], adapter["gsB"]
+    if W.ndim > 2:
+        raise NotImplementedError(
+            "grouped multi-tenant serving of stacked/expert weights "
+            f"(W rank {W.ndim}) is not supported")
+    groups = check_tenant_groups(tenant_groups, x.shape[0])
+    K = A.shape[0]
+    if len(groups) != K:
+        raise ValueError(
+            f"{len(groups)} tenant groups but the stacked adapter tree "
+            f"carries K={K} tenants")
+    plan_sh = as_compose_sharding(constrain)
+    cfn = plan_sh if plan_sh is not None else constrain
+
+    W = jax.lax.stop_gradient(W)
+    y_base = x @ W.T
+    if cfn is not None:
+        y_base = cfn(y_base)
+    y32 = y_base.astype(_F32)
+    contract = (((x.ndim - 1,), (1,)), ((), ()))
+    deltas = []
+    for k, (start, size) in enumerate(groups):
+        # Static row block, static tenant index: the ops below are the
+        # SAME dots/elementwise the homogeneous gsB fast path runs on a
+        # batch of `size` rows — bitwise parity by construction.
+        xk = jax.lax.slice_in_dim(x, start, start + size, axis=0)
+        hk = xk @ jax.lax.stop_gradient(A[k]).T
+        gk = jax.lax.stop_gradient(g[k]).astype(_F32)
+        gsBk = jax.lax.stop_gradient(gsB[k])
+        if plan_sh is not None and plan_sh.b_dout_axes and gsBk.ndim == 2:
+            gsBk = plan_sh.constrain_b(gsBk)
+        tk = jax.lax.dot_general(hk.astype(_F32), gsBk.astype(_F32),
+                                 contract, preferred_element_type=_F32)
+        yk = jax.lax.slice_in_dim(y32, start, start + size, axis=0)
+        deltas.append(((gk - 1.0) * yk + tk).astype(y_base.dtype))
+    y = y_base + jnp.concatenate(deltas, axis=0)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def stack_adapter_states(states, *, axis: int = 0):
+    """Stack K congruent per-tenant serving trees leaf-wise along a new
+    tenant dim at ``axis`` (0 for bare adapter leaves; the model-level
+    trees from ``make_precompute_step`` use axis=1 so the scan dim stays
+    leading: leaves go [n_scan, ...] → [n_scan, K, ...])."""
+    states = list(states)
+    if not states:
+        raise ValueError("need at least one per-tenant state to stack")
+    return jax.tree_util.tree_map(
+        lambda *leaves: jnp.stack(leaves, axis=axis), *states)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,287 @@
+"""Multi-tenant adapter-state cache: an LRU of precomputed serving states.
+
+The frozen-adapter serving state (:func:`repro.core.precompute_adapter_
+state`) makes decode do zero factored-norm work per token — but it is
+computed for ONE adapter set. A multi-tenant server swaps adapter sets per
+request, so this module keeps an LRU of precomputed states keyed by
+:class:`AdapterKey` — (adapter id, version, activation dtype, gsB folding,
+sharding fingerprint) — with explicit byte accounting (``max_bytes``
+eviction over the full resident state trees) and hit/miss/evict counters
+surfaced as a :class:`CacheStats` struct.
+
+Why those key fields (see PAPERS.md): the rsLoRA scaling ``s`` interacts
+with the rank and is folded into both the norm and ``gsB`` — it rides in
+via the precompute fn's ``DoRAConfig``, so one cache is bound to one
+config; the activation dtype picks the ``eps`` the cached ``g`` was
+computed with (a state precomputed for the wrong dtype is NOT bitwise);
+the sharding fingerprint pins which mesh the cached leaves were laid out
+for (EDoRA-style cheap re-derivation makes eviction-and-recompute an
+acceptable miss path, so we never serve a state pinned for the wrong
+mesh).
+
+Versioning composes with the training contract: ``register``/``update``
+strip any serving leaves via :func:`repro.core.invalidate_adapter_state`
+(so the registry always holds the raw trainable tree), ``update`` bumps
+the version and drops every cached state of older versions, and a request
+carrying a stale :class:`AdapterHandle` is ALWAYS rejected with an error
+naming the key fields — the failure mode this subsystem exists to kill is
+a caller swapping adapters without re-precomputing and silently serving
+wrong logits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.adapter import invalidate_adapter_state
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterHandle:
+    """What a request carries: which adapter set, at which version."""
+    adapter_id: str
+    version: int
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterKey:
+    """Full LRU key for one precomputed serving state."""
+    adapter_id: str
+    version: int
+    act_dtype: str
+    fold_gsb: bool
+    sharding: Any = None          # hashable mesh fingerprint or None
+
+    def describe(self) -> str:
+        return (f"adapter_id={self.adapter_id!r} version={self.version} "
+                f"act_dtype={self.act_dtype} fold_gsb={self.fold_gsb} "
+                f"sharding={self.sharding}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheStats:
+    """Point-in-time counters (returned by :meth:`AdapterStateCache.stats`;
+    the cache keeps mutating its own tallies)."""
+    hits: int
+    misses: int
+    evictions: int
+    invalidations: int
+    entries: int
+    current_bytes: int
+    max_bytes: int | None
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class AdapterCacheMiss(LookupError):
+    """A request's adapter state is not servable from the cache. ``key``
+    carries the full :class:`AdapterKey`; the message names every field so
+    the operator can see exactly which precompute is missing."""
+
+    def __init__(self, message: str, key: AdapterKey):
+        super().__init__(message)
+        self.key = key
+
+
+def mesh_fingerprint(mesh) -> tuple | None:
+    """Hashable identity of a mesh's layout (axis names x sizes) — enough
+    to distinguish states pinned to different serving shardings."""
+    if mesh is None:
+        return None
+    shape = dict(mesh.shape)
+    return tuple((a, shape[a]) for a in mesh.axis_names)
+
+
+def serving_state_nbytes(tree) -> int:
+    """Bytes a cached serving tree HOLDS: every array leaf, raw adapter
+    weights included. A jitted precompute returns fresh device buffers
+    for A/B/m too (jit outputs never alias their inputs), so counting
+    only the ``g``/``gsB`` leaves would understate resident memory ~3x
+    and fire ``max_bytes`` eviction far too late."""
+    total = 0
+    if isinstance(tree, dict):
+        for v in tree.values():
+            if isinstance(v, dict):
+                total += serving_state_nbytes(v)
+            elif hasattr(v, "shape"):
+                total += int(np.prod(v.shape)) * np.dtype(v.dtype).itemsize
+    return total
+
+
+class AdapterStateCache:
+    """LRU of precomputed per-tenant serving states with byte accounting.
+
+    ``precompute(params, raw_adapters) -> serving tree`` is the (usually
+    jitted) state builder — :func:`repro.launch.steps.make_precompute_step`
+    for model-level trees, or a thin ``precompute_adapter_state`` wrapper
+    in unit tests. One compiled precompute is reused across tenants (same
+    tree shapes → one trace), and a mesh-aware precompute lands the cached
+    ``g``/``gsB`` pre-pinned to the serving shardings, so a cache hit hands
+    decode a correctly-placed state with zero per-request layout work.
+
+    ``max_bytes`` bounds the bytes of the cached state trees (every
+    leaf — the jitted precompute materializes fresh A/B/m buffers
+    alongside ``g``/``gsB``, so the whole tree is resident memory); the
+    least-recently-used states are evicted past it. A single state larger
+    than the whole budget is kept (serving must proceed) and everything
+    else is evicted around it.
+    """
+
+    def __init__(self, precompute: Callable[[Any, Any], Any], *,
+                 max_bytes: int | None = None,
+                 act_dtype: Any = np.float32,
+                 fold_gsb: bool = True,
+                 sharding: Any = None):
+        self._precompute = precompute
+        self.max_bytes = max_bytes
+        self.act_dtype = np.dtype(act_dtype).name
+        self.fold_gsb = bool(fold_gsb)
+        self.sharding = sharding
+        self._registry: dict[str, tuple[int, Any]] = {}
+        self._lru: "OrderedDict[AdapterKey, tuple[Any, int]]" = OrderedDict()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+        self._invalidations = 0
+        self._current_bytes = 0
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def for_serving(cls, mcfg, scfg, mesh=None, *, max_bytes=None,
+                    fold_gsb: bool = True) -> "AdapterStateCache":
+        """Model-level cache: precompute = jitted ``make_precompute_step``
+        (mesh-aware — cached leaves land pinned to the serving shardings),
+        act_dtype = the model dtype, key fingerprint = the mesh layout."""
+        import jax
+        from repro.launch.steps import make_precompute_step
+        fn = jax.jit(make_precompute_step(mcfg, scfg, mesh,
+                                          fold_gsb=fold_gsb))
+        return cls(fn, max_bytes=max_bytes, act_dtype=mcfg.dtype,
+                   fold_gsb=fold_gsb, sharding=mesh_fingerprint(mesh))
+
+    # -- registry (raw trainable trees + versions) --------------------------
+
+    def register(self, adapter_id: str, adapters) -> AdapterHandle:
+        """Register a NEW adapter set at version 0. Serving leaves are
+        stripped (``invalidate_adapter_state``): the registry always holds
+        the raw trainable tree; states are (re)derived through the cache."""
+        if adapter_id in self._registry:
+            raise ValueError(
+                f"adapter_id {adapter_id!r} is already registered "
+                f"(version {self._registry[adapter_id][0]}); use "
+                f"update() to publish new weights")
+        self._registry[adapter_id] = (0, invalidate_adapter_state(adapters))
+        return AdapterHandle(adapter_id, 0)
+
+    def update(self, adapter_id: str, adapters) -> AdapterHandle:
+        """Publish updated weights for a registered adapter set: bumps the
+        version and drops every cached state of older versions — the LRU
+        face of the training invalidation contract (any update to A/B/m
+        invalidates the precomputed state)."""
+        if adapter_id not in self._registry:
+            raise KeyError(f"adapter_id {adapter_id!r} is not registered")
+        version = self._registry[adapter_id][0] + 1
+        self._registry[adapter_id] = (version,
+                                      invalidate_adapter_state(adapters))
+        self.invalidate(adapter_id)
+        return AdapterHandle(adapter_id, version)
+
+    def current_handle(self, adapter_id: str) -> AdapterHandle:
+        if adapter_id not in self._registry:
+            raise KeyError(f"adapter_id {adapter_id!r} is not registered")
+        return AdapterHandle(adapter_id, self._registry[adapter_id][0])
+
+    def adapters(self, adapter_id: str):
+        """The registered raw (trainable) tree at the current version."""
+        return self._registry[adapter_id][1]
+
+    # -- the LRU ------------------------------------------------------------
+
+    def make_key(self, handle: AdapterHandle) -> AdapterKey:
+        return AdapterKey(handle.adapter_id, handle.version,
+                          self.act_dtype, self.fold_gsb, self.sharding)
+
+    def get_state(self, params, handle: AdapterHandle, *,
+                  allow_miss: bool = True):
+        """The precomputed serving tree for ``handle``.
+
+        A stale handle (version != the registered current version) is
+        ALWAYS an error — precomputing from the current raw tree would
+        serve different weights than the caller asked for. A current
+        handle whose state is not cached is a miss: recomputed and
+        inserted when ``allow_miss`` (evicting LRU states past
+        ``max_bytes``), or :class:`AdapterCacheMiss` naming every key
+        field when the caller demanded warm-only serving.
+        """
+        if handle.adapter_id not in self._registry:
+            raise AdapterCacheMiss(
+                f"adapter_id {handle.adapter_id!r} is not registered with "
+                f"this cache (key: {self.make_key(handle).describe()}); "
+                f"register(adapter_id, adapters) first",
+                self.make_key(handle))
+        current, raw = self._registry[handle.adapter_id]
+        if handle.version != current:
+            raise AdapterCacheMiss(
+                f"stale adapter handle: request pinned "
+                f"{self.make_key(handle).describe()} but the registered "
+                f"version is {current} — the adapter was updated after "
+                f"this handle was issued; re-resolve with "
+                f"current_handle({handle.adapter_id!r}) (a stale state "
+                f"would silently serve the wrong weights)",
+                self.make_key(handle))
+        key = self.make_key(handle)
+        if key in self._lru:
+            self._lru.move_to_end(key)
+            self._hits += 1
+            return self._lru[key][0]
+        if not allow_miss:
+            raise AdapterCacheMiss(
+                f"adapter state not precomputed and allow_miss=False: "
+                f"{key.describe()} — warm the cache with "
+                f"get_state(params, handle) (or precompute at publish "
+                f"time) before serving with warm-only routing",
+                key)
+        self._misses += 1
+        state = self._precompute(params, raw)
+        nbytes = serving_state_nbytes(state)
+        self._lru[key] = (state, nbytes)
+        self._current_bytes += nbytes
+        self._evict_over_budget()
+        return state
+
+    def _evict_over_budget(self) -> None:
+        if self.max_bytes is None:
+            return
+        while self._current_bytes > self.max_bytes and len(self._lru) > 1:
+            _, (_, nbytes) = self._lru.popitem(last=False)
+            self._current_bytes -= nbytes
+            self._evictions += 1
+
+    def invalidate(self, adapter_id: str | None = None) -> int:
+        """Drop cached states (all of one adapter's versions, or the whole
+        cache). The registry (raw trees) is untouched. Returns the number
+        of states dropped."""
+        doomed = [k for k in self._lru
+                  if adapter_id is None or k.adapter_id == adapter_id]
+        for k in doomed:
+            _, nbytes = self._lru.pop(k)
+            self._current_bytes -= nbytes
+        self._invalidations += len(doomed)
+        return len(doomed)
+
+    def cached_keys(self) -> tuple[AdapterKey, ...]:
+        """LRU order, least recently used first (eviction order)."""
+        return tuple(self._lru.keys())
+
+    def stats(self) -> CacheStats:
+        return CacheStats(hits=self._hits, misses=self._misses,
+                          evictions=self._evictions,
+                          invalidations=self._invalidations,
+                          entries=len(self._lru),
+                          current_bytes=self._current_bytes,
+                          max_bytes=self.max_bytes)

@@ -69,6 +69,19 @@ class ComposeSharding:
 
     mesh: Any                 # jax.sharding.Mesh (duck-typed in logic tests)
     out_spec: P               # spec of the [..., d_out] output
+    # Extra mesh axes FSDP-sharding B's (and g/m's) d_out BEYOND the axes
+    # the output itself carries (ROADMAP `b_spec` gap): wo/w_down shard
+    # their d_out over the FSDP axes, but the module output's feature dim
+    # only names the TP axis. Declaring them here makes the plan honest
+    # about B's true layout — the folded-gsB serving path constrains the
+    # [d_out, r] cached weight to it (so GSPMD reshards the SMALL tensor,
+    # explicitly, instead of silently misplacing it at a shard_map
+    # boundary), and the shard-local kernel path becomes *inexpressible*
+    # (each device holds a smaller B piece than the output shard it must
+    # produce) — dispatch falls back to the constrained materialized
+    # route, and :func:`repro.kernels.ops.fused_compose_mm` raises a
+    # clear error naming the spec if handed such a plan directly.
+    b_dout_axes: tuple[str, ...] = ()
 
     # -- derived specs ------------------------------------------------------
 
@@ -100,17 +113,27 @@ class ComposeSharding:
         exactly like the output, the rank dim is always replicated."""
         return P(*(tuple(self.out_spec)[:-1] + (None,)))
 
+    def _b_dout_entry(self):
+        """The d_out PartitionSpec entry for B/g/m: the output's d_out axes
+        widened by the declared FSDP axes (``b_dout_axes``)."""
+        axes = self.dout_axes + tuple(
+            a for a in self.b_dout_axes if a not in self.dout_axes)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
     @property
     def b_spec(self) -> P:
-        """Spec of ``B [d_out, r]``: congruent with the output d_out."""
-        spec = tuple(self.out_spec)
-        return P(spec[-1] if spec else None, None)
+        """Spec of ``B [d_out, r]``: congruent with the output d_out, plus
+        any declared FSDP axes on d_out (``b_dout_axes``)."""
+        return P(self._b_dout_entry(), None)
 
     @property
     def vec_spec(self) -> P:
-        """Spec of per-feature vectors (``g``/``m``/``w_norm`` [d_out])."""
-        spec = tuple(self.out_spec)
-        return P(spec[-1] if spec else None)
+        """Spec of per-feature vectors (``g``/``m``/``w_norm`` [d_out]) —
+        sharded like B's d_out (they live with the weight, not the
+        activation)."""
+        return P(self._b_dout_entry())
 
     def flat2d(self) -> tuple[Any, Any]:
         """(row_entry, dout_entry) for the kernel's flattened [M, d_out]
@@ -129,7 +152,13 @@ class ComposeSharding:
     def kernel_expressible(self, d_out: int) -> bool:
         """Can the fused kernels run shard-local under this plan? Needs the
         d_out shard to be even and to keep the 128-lane block constraint
-        (paper App. C, applied to the LOCAL shard)."""
+        (paper App. C, applied to the LOCAL shard) — and B congruent with
+        the output d_out: declared FSDP axes on B (``b_dout_axes``) leave
+        each device with a smaller B piece than the output shard it must
+        produce, so the shard-local kernel cannot run without a gather and
+        dispatch falls back to the constrained materialized route."""
+        if any(a not in self.dout_axes for a in self.b_dout_axes):
+            return False
         shards = self.dout_shards
         return d_out % max(shards, 1) == 0 and \
             self.local_dout(d_out) % 128 == 0
@@ -158,11 +187,28 @@ class ComposeSharding:
         """Pin a per-feature [d_out] vector (g, w_norm)."""
         return self._constrain(v, self.vec_spec)
 
+    def constrain_b(self, b):
+        """Pin a ``B``-shaped [d_out, r] weight (the raw B or the folded
+        serving ``gsB``) to its TRUE layout — the output-congruent d_out
+        axes widened by the declared FSDP axes. The folded-gsB decode path
+        applies this before its up-projection so a B whose d_out is
+        FSDP-sharded is resharded EXPLICITLY on the small [d_out, r]
+        tensor (GSPMD's visible choice) rather than silently misplaced."""
+        if b.ndim != 2:
+            raise ValueError(
+                f"constrain_b expects an unstacked [d_out, r] weight, got "
+                f"rank-{b.ndim}")
+        return self._constrain(b, self.b_spec)
 
-def plan_for_output(mesh, out_spec) -> ComposeSharding:
+
+def plan_for_output(mesh, out_spec,
+                    b_dout_axes: tuple[str, ...] = ()) -> ComposeSharding:
     """Build the compose plan for a module whose output carries
-    ``out_spec`` on ``mesh``."""
-    return ComposeSharding(mesh, P(*tuple(out_spec)))
+    ``out_spec`` on ``mesh``. ``b_dout_axes``: mesh axes FSDP-sharding the
+    adapted weight's d_out beyond the output spec's own feature axes (the
+    ROADMAP ``b_spec`` gap — see :class:`ComposeSharding.b_dout_axes`)."""
+    return ComposeSharding(mesh, P(*tuple(out_spec)),
+                           b_dout_axes=tuple(b_dout_axes))
 
 
 def as_compose_sharding(constrain) -> ComposeSharding | None:

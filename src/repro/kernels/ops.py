@@ -353,6 +353,19 @@ def fused_compose_mm(base, h, B, g, s: float, *,
     if base.shape[:-1] != h.shape[:-1]:
         raise ValueError(f"base leading dims {base.shape[:-1]} != h leading "
                          f"dims {h.shape[:-1]}")
+    if sharding is not None and any(
+            a not in sharding.dout_axes for a in sharding.b_dout_axes):
+        # A B whose d_out carries FSDP axes beyond the output's own would
+        # have to be all-gathered at the shard_map boundary to run the
+        # kernel shard-local — refuse loudly instead of hiding the gather
+        # (dispatch routes such plans to the materialized fallback; see
+        # ComposeSharding.b_dout_axes).
+        raise ValueError(
+            f"fused_compose_mm cannot run shard-local with B sharded "
+            f"beyond the output d_out: b_spec={sharding.b_spec} "
+            f"(b_dout_axes={sharding.b_dout_axes}) vs output spec "
+            f"{sharding.out_spec} — the plan is inexpressible; use the "
+            f"materialized-lora route with the output constraint instead")
     if sharding is not None:
         rows = 1
         for d in base.shape[:-1]:

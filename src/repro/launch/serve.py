@@ -1,24 +1,35 @@
-"""Serving driver: batched prefill + decode loop with a KV/SSM cache.
+"""Serving driver: batched prefill + decode with per-request adapter routing.
 
 CPU-runnable with a smoke config::
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
-        --batch 2 --prompt-len 32 --gen-len 16
+        --batch 2 --prompt-len 32 --gen-len 16 [--tenants 3]
 
-Implements the minimal production serving shape: one jitted precompute of
-the frozen-adapter state (w_norm/g cached once per adapter set — the
-decode loop does zero factored-norm work per token), one jitted prefill
-step (prompt → cache + first logits; right-padded to ``max_len`` on
-attention-only archs so a single compiled prefill serves every prompt
-length, with the cache length rewound to the true P) and one jitted decode
-step re-used per token (the cache is donated, so decode runs in place).
+Implements the production serving shape (docs/serving.md):
+
+  - **one jitted precompute per adapter set** — the frozen-adapter state
+    (w_norm/g cached once; the decode loop does zero factored-norm work
+    per token), held in an :class:`repro.core.AdapterStateCache` LRU keyed
+    by (adapter id, version, dtype, sharding) with byte-bounded eviction;
+  - **request-routed batches** — every request carries an adapter handle;
+    :class:`MultiTenantServer` groups the batch's rows by adapter and
+    serves heterogeneous-adapter batches in ONE prefill/decode step via
+    the grouped gsB-folded compose (``repro.core.dora_linear_grouped``).
+    Homogeneous batches take today's single-tenant path bitwise;
+  - **shape-bucketed prefill** — one jitted prefill (prompt right-padded
+    to ``max_len``, true P traced) serves every prompt length on
+    attention-only archs, with the cache length rewound to P; one jitted
+    decode step is re-used per token (cache donated = in place).
+
 Sampling is greedy/temperature on the host — the device step is exactly
 the ``serve_step`` the ``decode_*``/``long_*`` dry-run cells lower.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -26,46 +37,41 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import DoRAConfig
+from repro.core.adapter import stack_adapter_states
+from repro.core.adapter_cache import (AdapterHandle, AdapterStateCache,
+                                      mesh_fingerprint)
 from repro.launch.steps import StepConfig, make_decode_step, \
     make_precompute_step, make_prefill_step
 from repro.launch.train import build_state
 
 
-def generate(mcfg, params, adapters, scfg: StepConfig, prompts, *,
-             gen_len: int, max_len: int, temperature: float = 0.0,
-             seed: int = 0, cache_adapters: bool = True,
-             fold_gsb: bool = False, mesh=None):
-    """prompts: int32 [B, P]. Returns tokens [B, P+gen_len].
+def _check_cache_mesh(cache: AdapterStateCache, mesh) -> None:
+    """The cache keys states on the mesh they were pinned for — serving
+    them under a DIFFERENT mesh would re-lay-out g/gsB every step, the
+    exact per-token work the cache exists to remove. Refuse loudly."""
+    want = mesh_fingerprint(mesh)
+    if cache.sharding != want:
+        raise ValueError(
+            f"adapter cache is keyed for sharding {cache.sharding} but "
+            f"serving runs on mesh {want} — build the cache with "
+            f"AdapterStateCache.for_serving(mcfg, scfg, mesh) for THIS "
+            f"mesh so cached states land pre-pinned to its shardings")
 
-    ``cache_adapters``: precompute the frozen-adapter serving state (cached
-    g) before prefill — bitwise-identical tokens, no per-token norm work.
-    ``fold_gsb``: additionally fold g·s into B (broadcast-free decode
-    compose; last-ulp numerics difference, so off by default).
-    ``mesh``: SPMD serving — the precompute pins the cached state to the
-    serving shardings (gsB row-sharded like B) and prefill/decode attach
-    the boundary constraints, so the sharded steps run the same
-    matmul-fused compose as the single-device loop.
-    """
-    B, P = prompts.shape
-    if max_len < P + gen_len:
-        raise ValueError(f"max_len={max_len} < P+gen_len={P + gen_len}")
-    if cache_adapters:
-        adapters = jax.jit(make_precompute_step(
-            mcfg, scfg, mesh, fold_gsb=fold_gsb))(params, adapters)
 
-    # Padded prefill (attention-only archs): pad the prompt to max_len and
-    # pass the true P as a traced scalar — ONE compiled prefill covers
-    # every prompt length in the bucket; the step rewinds the cache length
-    # to P. SSM states integrate every processed token and cannot rewind,
-    # so hybrid/Mamba archs prefill at the exact P.
-    can_pad = all(k == "attn" for k in mcfg.layer_kinds())
-    pad = max_len - P if can_pad else 0
-    prefill = jax.jit(make_prefill_step(
-        mcfg, scfg, mesh, batch=B, seq=max_len, padded=bool(pad)))
-    decode = jax.jit(make_decode_step(mcfg, scfg, mesh, batch=B),
-                     donate_argnums=(2,))
+def _sample(last, temperature, key):
+    if temperature > 0.0:
+        key, sub = jax.random.split(key)
+        nxt = jax.random.categorical(sub, last / temperature, axis=-1)
+    else:
+        nxt = jnp.argmax(last, axis=-1)
+    return nxt.astype(jnp.int32)[:, None], key
 
-    toks = jnp.asarray(prompts, jnp.int32)
+
+def _decode_loop(prefill, decode, params, adapters, toks, *, prompt_len,
+                 gen_len, pad, temperature, seed, collect_logits=False):
+    """The shared prefill → sample → decode loop. Returns (tokens
+    [B, P+gen_len], logits-per-sampled-token list or None)."""
+    P = prompt_len
     batch_in = {"tokens": toks}
     if pad:
         batch_in = {"tokens": jnp.pad(toks, ((0, 0), (0, pad))),
@@ -80,20 +86,216 @@ def generate(mcfg, params, adapters, scfg: StepConfig, prompts, *,
 
     key = jax.random.PRNGKey(seed)
     out = [toks]
+    steps_logits = [] if collect_logits else None
     last = logits
     for i in range(gen_len):
-        if temperature > 0.0:
-            key, sub = jax.random.split(key)
-            nxt = jax.random.categorical(sub, last / temperature, axis=-1)
-        else:
-            nxt = jnp.argmax(last, axis=-1)
-        nxt = nxt.astype(jnp.int32)[:, None]
+        if collect_logits:
+            steps_logits.append(np.asarray(last))
+        nxt, key = _sample(last, temperature, key)
         out.append(nxt)
         last, cache = decode(params, adapters, cache, {"tokens": nxt})
         if i == 0 and int(cache["len"]) != P + 1:
             raise RuntimeError(
                 f"decode wrote at {int(cache['len']) - 1}, expected {P}")
-    return jnp.concatenate(out, axis=1)
+    return jnp.concatenate(out, axis=1), steps_logits
+
+
+def generate(mcfg, params, adapters, scfg: StepConfig, prompts, *,
+             gen_len: int, max_len: int, temperature: float = 0.0,
+             seed: int = 0, cache_adapters: bool = True,
+             fold_gsb: bool = False, mesh=None, adapter_cache=None,
+             allow_miss: bool = True, return_logits: bool = False):
+    """prompts: int32 [B, P]. Returns tokens [B, P+gen_len] (or
+    (tokens, per-step logits) when ``return_logits``).
+
+    ``adapters`` is either an adapter tree (single-tenant, as before) or
+    an :class:`~repro.core.AdapterHandle` resolved through
+    ``adapter_cache`` (an :class:`~repro.core.AdapterStateCache`). A
+    handle that misses the cache while ``allow_miss=False`` is rejected
+    with an error naming the key fields — the guard against a caller
+    swapping adapters without re-precomputing and silently serving stale
+    logits. A stale handle (version behind the registry) is ALWAYS
+    rejected.
+
+    ``cache_adapters``: precompute the frozen-adapter serving state (cached
+    g) before prefill — bitwise-identical tokens, no per-token norm work.
+    ``fold_gsb``: additionally fold g·s into B (broadcast-free decode
+    compose; last-ulp numerics difference, so off by default).
+    ``mesh``: SPMD serving — the precompute pins the cached state to the
+    serving shardings (gsB row-sharded like B) and prefill/decode attach
+    the boundary constraints, so the sharded steps run the same
+    matmul-fused compose as the single-device loop.
+    """
+    if isinstance(adapters, AdapterHandle):
+        if adapter_cache is None:
+            raise ValueError(
+                f"generate() was handed the adapter handle {adapters} but "
+                f"no adapter_cache to resolve it against")
+        _check_cache_mesh(adapter_cache, mesh)
+        adapters = adapter_cache.get_state(params, adapters,
+                                           allow_miss=allow_miss)
+    elif cache_adapters:
+        adapters = jax.jit(make_precompute_step(
+            mcfg, scfg, mesh, fold_gsb=fold_gsb))(params, adapters)
+
+    B, P = prompts.shape
+    if max_len < P + gen_len:
+        raise ValueError(f"max_len={max_len} < P+gen_len={P + gen_len}")
+
+    # Padded prefill (attention-only archs): pad the prompt to max_len and
+    # pass the true P as a traced scalar — ONE compiled prefill covers
+    # every prompt length in the bucket; the step rewinds the cache length
+    # to P. SSM states integrate every processed token and cannot rewind,
+    # so hybrid/Mamba archs prefill at the exact P.
+    can_pad = all(k == "attn" for k in mcfg.layer_kinds())
+    pad = max_len - P if can_pad else 0
+    prefill = jax.jit(make_prefill_step(
+        mcfg, scfg, mesh, batch=B, seq=max_len, padded=bool(pad)))
+    decode = jax.jit(make_decode_step(mcfg, scfg, mesh, batch=B),
+                     donate_argnums=(2,))
+    toks = jnp.asarray(prompts, jnp.int32)
+    tokens, logits = _decode_loop(
+        prefill, decode, params, adapters, toks, prompt_len=P,
+        gen_len=gen_len, pad=pad, temperature=temperature, seed=seed,
+        collect_logits=return_logits)
+    return (tokens, logits) if return_logits else tokens
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant request routing.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One serving request: a prompt row and the adapter it runs under
+    (an :class:`AdapterHandle`, or a bare adapter-id string meaning "the
+    current registered version")."""
+    prompt: Any                        # int32 [P]
+    adapter: AdapterHandle | str
+
+
+class MultiTenantServer:
+    """Request-routed serving over an :class:`AdapterStateCache`.
+
+    ``serve(requests)`` resolves each request's adapter handle through the
+    LRU (precomputing on a miss unless ``allow_miss=False``), sorts the
+    batch's rows so same-adapter rows are contiguous, and runs ONE
+    prefill + decode loop for the whole heterogeneous batch:
+
+      - one distinct adapter → the single-tenant path, byte-for-byte
+        today's serve loop (bitwise fast path);
+      - K > 1 adapters → the per-tenant states are stacked leaf-wise
+        ([n_scan, K, ...]) and the steps are compiled against the STATIC
+        group signature ((start, size) per tenant); each group's rows run
+        the same gsB-folded ops as the homogeneous path, so mixed batches
+        are bitwise-equal (fp32) to per-tenant sequential serving for
+        groups of ≥ 2 rows, and the grouped decode step's jaxpr has zero
+        ``dora_wnorm`` ops (no norm work per token).
+
+    Steps are cached per (batch, bucket, signature) — a new grouping
+    signature compiles once, like a new prompt-length bucket.
+    """
+
+    def __init__(self, mcfg, scfg: StepConfig, params, *,
+                 cache: AdapterStateCache, mesh=None,
+                 max_cached_steps: int = 32):
+        _check_cache_mesh(cache, mesh)
+        self.mcfg = mcfg
+        self.scfg = scfg
+        self.params = params
+        self.cache = cache
+        self.mesh = mesh
+        # Compiled (prefill, decode) pairs per (batch, bucket, grouping
+        # signature), LRU-bounded: churny request mixes produce many
+        # signatures, and each entry pins two jitted executables — the
+        # step cache must not grow unboundedly while the adapter states
+        # one field away are carefully byte-bounded.
+        self.max_cached_steps = max_cached_steps
+        from collections import OrderedDict
+        self._steps: "OrderedDict" = OrderedDict()
+
+    def _resolve(self, req: Request) -> AdapterHandle:
+        if isinstance(req.adapter, AdapterHandle):
+            return req.adapter
+        return self.cache.current_handle(req.adapter)
+
+    def _get_steps(self, *, batch: int, max_len: int, pad: bool,
+                   groups):
+        key = (batch, max_len, pad, groups)
+        if key in self._steps:
+            self._steps.move_to_end(key)
+            return self._steps[key]
+        prefill = jax.jit(make_prefill_step(
+            self.mcfg, self.scfg, self.mesh, batch=batch, seq=max_len,
+            padded=pad, tenant_groups=groups))
+        decode = jax.jit(make_decode_step(
+            self.mcfg, self.scfg, self.mesh, batch=batch,
+            tenant_groups=groups), donate_argnums=(2,))
+        self._steps[key] = (prefill, decode)
+        while len(self._steps) > self.max_cached_steps:
+            self._steps.popitem(last=False)
+        return self._steps[key]
+
+    def serve(self, requests: Sequence[Request], *, gen_len: int,
+              max_len: int, temperature: float = 0.0, seed: int = 0,
+              allow_miss: bool = True, return_logits: bool = False):
+        """Serve one batch. Returns tokens [B, P+gen_len] in REQUEST order
+        (or (tokens, per-step logits) when ``return_logits``)."""
+        if not requests:
+            raise ValueError("empty request batch")
+        prompts = [np.asarray(r.prompt, np.int32) for r in requests]
+        P = prompts[0].shape[-1]
+        if any(p.shape[-1] != P for p in prompts):
+            raise ValueError(
+                f"all prompts in one batch must share a length bucket; got "
+                f"{sorted({p.shape[-1] for p in prompts})} — bucket "
+                f"requests by prompt length before batching")
+        if max_len < P + gen_len:
+            raise ValueError(f"max_len={max_len} < P+gen_len={P + gen_len}")
+
+        # Resolve handles (LRU hit / precompute-on-miss / reject), then
+        # group rows by adapter: stable sort by first appearance, so
+        # same-adapter rows are contiguous and the grouping signature is
+        # deterministic in request order.
+        handles = [self._resolve(r) for r in requests]
+        order: dict[AdapterHandle, int] = {}
+        for h in handles:
+            order.setdefault(h, len(order))
+        perm = sorted(range(len(requests)), key=lambda i: order[handles[i]])
+        inv = np.argsort(perm)
+        states = {h: self.cache.get_state(self.params, h,
+                                          allow_miss=allow_miss)
+                  for h in order}
+
+        toks = jnp.asarray(np.stack([prompts[i] for i in perm]), jnp.int32)
+        B = toks.shape[0]
+        if len(order) == 1:
+            adapters = next(iter(states.values()))
+            groups = None          # single tenant: today's bitwise path
+        else:
+            adapters = stack_adapter_states(
+                [states[h] for h in order], axis=1)
+            sizes = [0] * len(order)
+            for h in handles:
+                sizes[order[h]] += 1
+            groups, start = [], 0
+            for n in sizes:
+                groups.append((start, n))
+                start += n
+            groups = tuple(groups)
+
+        can_pad = all(k == "attn" for k in self.mcfg.layer_kinds())
+        pad = max_len - P if can_pad else 0
+        prefill, decode = self._get_steps(batch=B, max_len=max_len,
+                                          pad=bool(pad), groups=groups)
+        tokens, logits = _decode_loop(
+            prefill, decode, self.params, adapters, toks, prompt_len=P,
+            gen_len=gen_len, pad=pad, temperature=temperature, seed=seed,
+            collect_logits=return_logits)
+        tokens = jnp.asarray(np.asarray(tokens)[inv])
+        if return_logits:
+            return tokens, [step[inv] for step in logits]
+        return tokens
 
 
 def main() -> None:
@@ -113,6 +315,10 @@ def main() -> None:
     ap.add_argument("--fold-gsb", action="store_true",
                     help="fold g*s into B in the serving state "
                          "(broadcast-free decode compose)")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="N>1: multi-tenant demo — N adapter sets in one "
+                         "LRU-cached batch, --batch rows EACH, served in "
+                         "one grouped decode loop")
     args = ap.parse_args()
 
     mcfg = get_config(args.arch, smoke=args.smoke)
@@ -121,10 +327,36 @@ def main() -> None:
     params, adapters, _ = build_state(mcfg, dcfg, args.seed)
 
     rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(0, mcfg.vocab_size,
-                           (args.batch, args.prompt_len), dtype=np.int32)
     max_len = args.prompt_len + args.gen_len
 
+    if args.tenants > 1:
+        cache = AdapterStateCache.for_serving(mcfg, scfg)
+        requests = []
+        for t in range(args.tenants):
+            _, ad_t, _ = build_state(mcfg, dcfg, args.seed + t)
+            cache.register(f"tenant-{t}", ad_t)
+            for _ in range(args.batch):
+                requests.append(Request(
+                    rng.integers(0, mcfg.vocab_size, args.prompt_len,
+                                 dtype=np.int32), f"tenant-{t}"))
+        server = MultiTenantServer(mcfg, scfg, params, cache=cache)
+        t0 = time.time()
+        toks = np.asarray(server.serve(requests, gen_len=args.gen_len,
+                                       max_len=max_len,
+                                       temperature=args.temperature,
+                                       seed=args.seed))
+        dt = time.time() - t0
+        st = cache.stats()
+        print(f"served {len(requests)} requests x {args.tenants} tenants "
+              f"in {dt:.2f}s ({len(requests) * args.gen_len / dt:.1f} "
+              f"tok/s); cache: {st.hits} hits / {st.misses} misses / "
+              f"{st.current_bytes} state bytes")
+        for b in range(min(len(requests), 2)):
+            print(f"  req{b}: ...{toks[b, args.prompt_len - 4:].tolist()}")
+        return
+
+    prompts = rng.integers(0, mcfg.vocab_size,
+                           (args.batch, args.prompt_len), dtype=np.int32)
     t0 = time.time()
     toks = generate(mcfg, params, adapters, scfg, prompts,
                     gen_len=args.gen_len, max_len=max_len,

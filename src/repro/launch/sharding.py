@@ -310,17 +310,52 @@ def activation_spec(mesh, *, batch: int, seq: int) -> P:
     return P(bdim, sdim, None)
 
 
-def make_boundary_constraint(mesh, *, batch: int, seq: int):
+def row_parallel_b_axes(mcfg: ModelConfig, mesh) -> tuple[str, ...]:
+    """Mesh axes FSDP-sharding the d_out of the ROW-PARALLEL adapted
+    weights (wo / w_down — the only call sites that receive the boundary
+    constraint). Their adapters' B/m shard d_out over these axes
+    (``adapter_sharding`` uses the weight's dim-0 role), but the module
+    output's feature dim does not — the ROADMAP ``b_spec`` gap. The axes
+    are threaded into the compose plan (``ComposeSharding.b_dout_axes``)
+    so the folded-gsB serving path declares B's true layout and the
+    shard-local kernel path falls back cleanly instead of silently
+    gathering at the shard_map boundary.
+
+    Derived from each weight's ACTUAL dim-0 role (wo degrades to
+    'fsdp_gather' when the heads don't divide the model axis — a
+    different axis set than w_down's 'fsdp'). The one boundary-constraint
+    plan is shared by both call sites, so when the two weights disagree
+    the declaration is dropped entirely (legacy behavior, never a WRONG
+    pin). Size-1 axes are dropped too (replication in disguise — they
+    must not flip kernel expressibility)."""
+    per_weight = []
+    for name in ("wo", "w_down"):
+        role = leaf_roles(mcfg, name, 2, mesh)[0]
+        axes = pick_axes(mcfg.d_model, role, mesh, set())
+        if axes is None:
+            axes = ()
+        elif not isinstance(axes, tuple):
+            axes = (axes,)
+        per_weight.append(tuple(a for a in axes if mesh.shape[a] > 1))
+    if per_weight[0] != per_weight[1]:
+        return ()
+    return per_weight[0]
+
+
+def make_boundary_constraint(mesh, *, batch: int, seq: int,
+                             b_dout_axes: tuple[str, ...] = ()):
     """SP constraint for [B, S, D] activations; carries ``.heads`` — the
     head-parallel constraint for [B, S, H, hd] attention tensors (H3.4:
     forces the SP→head transition to all-to-all the small q/k/v instead
     of the fp32 score tiles) — and ``.plan``, the
     :class:`~repro.core.sharding.ComposeSharding` the adapted linears use
     to pin the rank-space LoRA intermediate and run the matmul-fused
-    compose shard-local (no y_lora materialization under SPMD)."""
+    compose shard-local (no y_lora materialization under SPMD).
+    ``b_dout_axes`` (usually :func:`row_parallel_b_axes`): extra FSDP axes
+    on the constrained layers' B d_out, threaded into the plan."""
     spec = activation_spec(mesh, batch=batch, seq=seq)
     sharding = NamedSharding(mesh, spec)
-    plan = _csh.plan_for_output(mesh, spec)
+    plan = _csh.plan_for_output(mesh, spec, b_dout_axes=tuple(b_dout_axes))
 
     def constrain(x):
         return jax.lax.with_sharding_constraint(x, sharding)

@@ -67,8 +67,10 @@ def make_train_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
     """(params, adapters, opt_state, batch) -> (adapters', opt_state',
     metrics). Frozen base params receive no gradient and no optimizer
     state."""
-    constraint = (S.make_boundary_constraint(mesh, batch=batch, seq=seq)
-                  if mesh is not None else None)
+    constraint = (S.make_boundary_constraint(
+        mesh, batch=batch, seq=seq,
+        b_dout_axes=S.row_parallel_b_axes(mcfg, mesh))
+        if mesh is not None else None)
     lt = scfg.loss_tokens
 
     def loss_fn(adapters, params, tokens_or_embeds, labels, is_embeds):
@@ -122,7 +124,8 @@ def make_train_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
 
 
 def make_prefill_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
-                      batch: int, seq: int, padded: bool = False):
+                      batch: int, seq: int, padded: bool = False,
+                      tenant_groups=None):
     """(params, adapters, batch) -> (last_logits [B, V], cache).
 
     Processes the full prompt and materializes the KV/SSM cache sized to
@@ -137,9 +140,15 @@ def make_prefill_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
     decode token overwrites the first padded row — without the rewind,
     decode appends after the pad garbage. Only valid for attention caches
     (a rewound "len" masks the stale K/V rows via causality; an SSM state
-    has already integrated the pad tokens and cannot rewind)."""
-    constraint = (S.make_boundary_constraint(mesh, batch=batch, seq=seq)
-                  if mesh is not None else None)
+    has already integrated the pad tokens and cannot rewind).
+
+    ``tenant_groups``: multi-tenant serving — static (start, size) row
+    blocks grouping the batch by adapter; the adapter tree must be the
+    stacked folded serving state (see ``repro.launch.serve``)."""
+    constraint = (S.make_boundary_constraint(
+        mesh, batch=batch, seq=seq,
+        b_dout_axes=S.row_parallel_b_axes(mcfg, mesh))
+        if mesh is not None else None)
     if padded and any(k != "attn" for k in mcfg.layer_kinds()):
         raise ValueError(
             "padded prefill requires attention-only caches: SSM layer "
@@ -159,7 +168,8 @@ def make_prefill_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
             kw["loss_slice"] = 1
         logits, new_cache, _ = forward(
             mcfg, params, adapters, scfg.dora, cache=cache, training=False,
-            boundary_constraint=constraint, **kw)
+            boundary_constraint=constraint, tenant_groups=tenant_groups,
+            **kw)
         if padded and new_cache is not None:
             new_cache = dict(new_cache)
             new_cache["len"] = p_len.astype(new_cache["len"].dtype)
@@ -210,11 +220,17 @@ def make_precompute_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
 
 
 def make_decode_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
-                     batch: int):
+                     batch: int, tenant_groups=None):
     """(params, adapters, cache, tokens [B,1]) -> (logits [B,V], cache').
 
     One new token against a pre-filled cache (the ``decode_*`` /
-    ``long_*`` shapes lower THIS, not train_step)."""
+    ``long_*`` shapes lower THIS, not train_step).
+
+    ``tenant_groups``: multi-tenant serving — the decode batch's rows are
+    grouped by adapter (static compile-time signature); the adapter tree
+    must be the stacked folded serving state. The grouped step's jaxpr
+    contains zero ``dora_wnorm``-tagged ops: a cache hit does no norm
+    work (asserted in ``tests/test_serve_multitenant.py``)."""
 
     def decode_step(params, adapters, cache, batch_in):
         is_embeds = "embeds" in batch_in
@@ -222,7 +238,7 @@ def make_decode_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
               else {"tokens": batch_in["tokens"]})
         logits, new_cache, _ = forward(
             mcfg, params, adapters, scfg.dora, cache=cache,
-            training=False, **kw)
+            training=False, tenant_groups=tenant_groups, **kw)
         return logits[:, -1], new_cache
 
     return decode_step

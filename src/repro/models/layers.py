@@ -28,7 +28,7 @@ def linear(x, w, bias=None):
 
 def maybe_dora(x, w, dora: dict | None, cfg: DoRAConfig | None, *,
                bias=None, training: bool = True, constrain=None,
-               base_sq_cache=None):
+               base_sq_cache=None, tenant_groups=None):
     """Adapted linear if a DoRA adapter is present, frozen linear otherwise.
 
     Base weights are *always* stop-gradiented here: in this framework the
@@ -41,12 +41,17 @@ def maybe_dora(x, w, dora: dict | None, cfg: DoRAConfig | None, *,
     ``base_sq_cache``: precomputed ||W||²_row (paper §2.3 future work —
     implemented here; see H3.2): skips the rank-independent base-norm
     term, the only part of the norm that re-reads W.
+    ``tenant_groups``: multi-tenant serving — static (start, size) row
+    blocks grouping the batch by adapter, with ``dora`` leaves carrying a
+    leading tenant dim (see ``repro.core.dora_linear_grouped``). The base
+    weight is shared across tenants, so the unadapted branch ignores it.
     """
     if dora is None:
         y = linear(x, jax.lax.stop_gradient(w), bias)
         return constrain(y) if constrain is not None else y
     return dora_linear(x, w, dora, cfg, bias=bias, training=training,
-                       constrain=constrain, base_sq_cache=base_sq_cache)
+                       constrain=constrain, base_sq_cache=base_sq_cache,
+                       tenant_groups=tenant_groups)
 
 
 def rms_norm(x, scale, eps: float = 1e-5):
@@ -207,12 +212,15 @@ def attention_core(q, k, v, *, offset=0, chunk: int | None = None):
 
 
 def attention(x, params, dora, mcfg, dcfg: DoRAConfig | None, *,
-              positions, cache=None, training=True, constrain=None):
+              positions, cache=None, training=True, constrain=None,
+              tenant_groups=None):
     """Full attention block: QKV (DoRA-adapted), rope, core, O-proj.
 
     Returns (out, new_cache). ``cache`` = {"k","v","len"} for decode; when
     provided, new K/V rows are written at position ``len`` and attention
-    runs over the cache prefix.
+    runs over the cache prefix. ``tenant_groups``: multi-tenant serving —
+    forwarded to every adapted projection (the attention core itself is
+    row-local and adapter-free).
     """
     b, s, _ = x.shape
     hq, hkv, hd = mcfg.num_heads, mcfg.num_kv_heads, mcfg.head_dim
@@ -221,7 +229,8 @@ def attention(x, params, dora, mcfg, dcfg: DoRAConfig | None, *,
         w = params[name]
         bias = params.get(name + "_bias")
         return maybe_dora(x, w, (dora or {}).get(name), dcfg,
-                          bias=bias, training=training)
+                          bias=bias, training=training,
+                          tenant_groups=tenant_groups)
 
     q = proj("wq", hq * hd).reshape(b, s, hq, hd)
     k = proj("wk", hkv * hd).reshape(b, s, hkv, hd)
@@ -276,18 +285,20 @@ def attention(x, params, dora, mcfg, dcfg: DoRAConfig | None, *,
     wo = params["wo"]
     # row-parallel projection: constrain output to SP sharding (H1.4)
     y = maybe_dora(out, wo, (dora or {}).get("wo"), dcfg,
-                   training=training, constrain=constrain)
+                   training=training, constrain=constrain,
+                   tenant_groups=tenant_groups)
     return y, new_cache
 
 
 def mlp_swiglu(x, params, dora, dcfg: DoRAConfig | None, *, training=True,
-               act=jax.nn.silu, constrain=None):
+               act=jax.nn.silu, constrain=None, tenant_groups=None):
     d = dora or {}
     gate = maybe_dora(x, params["w_gate"], d.get("w_gate"), dcfg,
-                      training=training)
+                      training=training, tenant_groups=tenant_groups)
     up = maybe_dora(x, params["w_up"], d.get("w_up"), dcfg,
-                    training=training)
+                    training=training, tenant_groups=tenant_groups)
     h = act(gate) * up
     # row-parallel projection: constrain output to SP sharding (H1.4)
     return maybe_dora(h, params["w_down"], d.get("w_down"), dcfg,
-                      training=training, constrain=constrain)
+                      training=training, constrain=constrain,
+                      tenant_groups=tenant_groups)

@@ -315,15 +315,22 @@ def _apply_norm(x, p, mcfg: ModelConfig):
 
 
 def _layer_apply(x, p, a, c, mcfg, dcfg, *, kind, ffn, positions, length,
-                 training, constrain=None):
+                 training, constrain=None, tenant_groups=None):
     """One layer: pre-norm mixer + pre-norm FFN, residual adds.
 
     c: None (no cache) or this layer's cache dict. Returns (x, new_cache,
     aux_loss). ``constrain`` pins the sublayer outputs to the
     sequence-parallel sharding so the row-parallel TP partial sums lower
-    to reduce-scatter instead of all-reduce (EXPERIMENTS.md §Perf H1.4)."""
+    to reduce-scatter instead of all-reduce (EXPERIMENTS.md §Perf H1.4).
+    ``tenant_groups``: multi-tenant serving — adapted linears apply the
+    per-group folded adapter state (attention/dense-MLP archs only)."""
     aux = jnp.asarray(0.0, _F32)
     cst = constrain or (lambda t: t)
+    if tenant_groups is not None and (kind != "attn" or ffn == "moe"):
+        raise NotImplementedError(
+            f"multi-tenant grouped serving supports attention + dense-MLP "
+            f"layers only; arch {mcfg.name!r} has a "
+            f"{'moe ffn' if ffn == 'moe' else kind} layer")
     h = _apply_norm(x, p["ln1"], mcfg)
     if kind == "attn":
         attn_cache = None
@@ -331,7 +338,8 @@ def _layer_apply(x, p, a, c, mcfg, dcfg, *, kind, ffn, positions, length,
             attn_cache = {"k": c["k"], "v": c["v"], "len": length}
         y, new_c = L.attention(h, p["mixer"], (a or {}).get("mixer"), mcfg,
                                dcfg, positions=positions, cache=attn_cache,
-                               training=training, constrain=constrain)
+                               training=training, constrain=constrain,
+                               tenant_groups=tenant_groups)
         if new_c is not None:
             new_c = {"k": new_c["k"], "v": new_c["v"]}
     else:
@@ -347,14 +355,17 @@ def _layer_apply(x, p, a, c, mcfg, dcfg, *, kind, ffn, positions, length,
                                  dcfg, training=training)
         elif mcfg.mlp_kind == "swiglu":
             y = L.mlp_swiglu(h, p["ffn"], (a or {}).get("ffn"), dcfg,
-                             training=training, constrain=constrain)
+                             training=training, constrain=constrain,
+                             tenant_groups=tenant_groups)
         else:
             d = (a or {}).get("ffn") or {}
             y = L.maybe_dora(h, p["ffn"]["w_up"], d.get("w_up"), dcfg,
-                             bias=p["ffn"]["w_up_bias"], training=training)
+                             bias=p["ffn"]["w_up_bias"], training=training,
+                             tenant_groups=tenant_groups)
             y = jax.nn.gelu(y)
             y = L.maybe_dora(y, p["ffn"]["w_down"], d.get("w_down"), dcfg,
-                             bias=p["ffn"]["w_down_bias"], training=training)
+                             bias=p["ffn"]["w_down_bias"], training=training,
+                             tenant_groups=tenant_groups)
         x = x + cst(y)
     return x, new_c, aux
 
@@ -362,7 +373,8 @@ def _layer_apply(x, p, a, c, mcfg, dcfg, *, kind, ffn, positions, length,
 def forward(mcfg: ModelConfig, params, adapters, dcfg: DoRAConfig | None,
             *, tokens=None, embeds=None, cache=None, positions=None,
             training: bool = True, boundary_constraint=None,
-            loss_slice: int | None = None, gather_position=None):
+            loss_slice: int | None = None, gather_position=None,
+            tenant_groups=None):
     """Returns (logits [B,S,V], new_cache, aux_loss).
 
     tokens [B,S] int32 OR embeds [B,S,D] (modality-frontend stubs feed
@@ -378,7 +390,15 @@ def forward(mcfg: ModelConfig, params, adapters, dcfg: DoRAConfig | None,
     shape-bucketed prefill uses it so the full-vocab head runs on exactly
     one row regardless of how much right-padding the bucket added.
     Overrides ``loss_slice``.
+    ``tenant_groups``: multi-tenant serving — STATIC (start, size) row
+    blocks grouping the batch by adapter; ``adapters`` must be a stacked
+    folded serving tree (leaves [n_scan, K, ...], see
+    ``repro.core.stack_adapter_states``). Serving-only: requires
+    ``training=False``.
     """
+    if tenant_groups is not None and training:
+        raise ValueError("tenant_groups is a serving-only path "
+                         "(training=False required)")
     kinds, ffns = mcfg.layer_kinds(), mcfg.ffn_kinds()
     p = mcfg.period
     adapters = adapters or {}
@@ -416,7 +436,8 @@ def forward(mcfg: ModelConfig, params, adapters, dcfg: DoRAConfig | None,
                 x, unit_p[li], unit_a.get(li), c_i, mcfg, dcfg,
                 kind=kinds[i], ffn=ffns[i], positions=positions,
                 length=length, training=training,
-                constrain=boundary_constraint)
+                constrain=boundary_constraint,
+                tenant_groups=tenant_groups)
             if new_c is not None:
                 new_cs[li] = new_c
             aux_total = aux_total + aux

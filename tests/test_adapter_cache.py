@@ -1,0 +1,209 @@
+"""Multi-tenant adapter-state LRU: eviction order and byte accounting
+under forced tiny ``max_bytes``, bitwise hit-vs-recompute parity per
+tenant, invalidation-on-version-bump, the warm-only (``allow_miss=False``)
+rejection contract, and composition with ``invalidate_adapter_state``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdapterCacheMiss, AdapterHandle, AdapterStateCache,
+                        DoRAConfig, init_dora_params,
+                        invalidate_adapter_state, precompute_adapter_state)
+from repro.core.adapter_cache import mesh_fingerprint, serving_state_nbytes
+
+DCFG = DoRAConfig(rank=4, alpha=8.0, mode="eager")
+D_OUT, D_IN = 32, 24
+
+
+def _precompute(params, adapters):
+    return precompute_adapter_state(params, adapters, DCFG,
+                                    act_dtype=jnp.float32, fold_gsb=True)
+
+
+def _tenant(seed: int):
+    # dtypes pinned to fp32: other test modules flip jax_enable_x64 at
+    # import (collection) time, and the byte-accounting assertions below
+    # must not depend on suite composition.
+    key = jax.random.PRNGKey(seed)
+    W = jax.random.normal(key, (D_OUT, D_IN), jnp.float32)
+    adp = init_dora_params(jax.random.fold_in(key, 1), W, DCFG)
+    adp["B"] = 0.2 * jax.random.normal(jax.random.fold_in(key, 2),
+                                       adp["B"].shape, jnp.float32)
+    return adp
+
+
+@pytest.fixture()
+def setup():
+    W = jax.random.normal(jax.random.PRNGKey(99), (D_OUT, D_IN),
+                          jnp.float32)
+    cache = AdapterStateCache(_precompute, act_dtype=jnp.float32,
+                              fold_gsb=True)
+    return W, cache
+
+
+# One tenant's resident cached bytes — the FULL state tree, fp32: a
+# jitted precompute materializes fresh A/B/m buffers alongside g/gsB, so
+# the whole tree is what max_bytes must bound.
+R = DCFG.rank
+STATE_BYTES = 4 * (R * D_IN          # A
+                   + D_OUT * R       # B
+                   + D_OUT           # m
+                   + D_OUT           # g
+                   + D_OUT * R)      # gsB
+
+
+class TestAccounting:
+    def test_state_bytes_counts_the_full_tree(self, setup):
+        W, cache = setup
+        h = cache.register("a", _tenant(0))
+        state = cache.get_state(W, h)
+        assert serving_state_nbytes(state) == STATE_BYTES
+        assert cache.stats().current_bytes == STATE_BYTES
+        # stripping the serving leaves leaves the raw-weight bytes
+        raw_only = invalidate_adapter_state(state)
+        assert serving_state_nbytes(raw_only) == \
+            STATE_BYTES - 4 * (D_OUT + D_OUT * R)
+
+    def test_lru_eviction_order_under_tiny_budget(self, setup):
+        W, _ = setup
+        cache = AdapterStateCache(_precompute, act_dtype=jnp.float32,
+                                  fold_gsb=True,
+                                  max_bytes=2 * STATE_BYTES)
+        hs = [cache.register(f"t{i}", _tenant(i)) for i in range(3)]
+        cache.get_state(W, hs[0])
+        cache.get_state(W, hs[1])
+        # touch t0 so t1 becomes the LRU victim
+        cache.get_state(W, hs[0])
+        cache.get_state(W, hs[2])            # evicts t1, not t0
+        keys = [k.adapter_id for k in cache.cached_keys()]
+        assert keys == ["t0", "t2"]
+        st = cache.stats()
+        assert st.evictions == 1 and st.entries == 2
+        assert st.current_bytes == 2 * STATE_BYTES
+
+    def test_single_oversized_entry_is_kept(self, setup):
+        W, _ = setup
+        cache = AdapterStateCache(_precompute, act_dtype=jnp.float32,
+                                  fold_gsb=True, max_bytes=STATE_BYTES // 2)
+        h = cache.register("big", _tenant(0))
+        cache.get_state(W, h)
+        st = cache.stats()
+        assert st.entries == 1 and st.current_bytes == STATE_BYTES
+        h2 = cache.register("big2", _tenant(1))
+        cache.get_state(W, h2)               # evicts 'big', keeps 'big2'
+        assert [k.adapter_id for k in cache.cached_keys()] == ["big2"]
+
+
+class TestHitParity:
+    def test_hit_is_bitwise_the_recomputed_state(self, setup):
+        W, cache = setup
+        adp = _tenant(3)
+        h = cache.register("t", adp)
+        miss = cache.get_state(W, h)
+        hit = cache.get_state(W, h)
+        assert cache.stats().hits == 1 and cache.stats().misses == 1
+        fresh = _precompute(W, adp)
+        for k in ("g", "gsB"):
+            np.testing.assert_array_equal(np.asarray(hit[k]),
+                                          np.asarray(fresh[k]))
+        assert hit is miss                   # the same resident tree
+
+    def test_per_tenant_states_are_independent(self, setup):
+        W, cache = setup
+        h0 = cache.register("t0", _tenant(0))
+        h1 = cache.register("t1", _tenant(1))
+        g0 = np.asarray(cache.get_state(W, h0)["g"])
+        g1 = np.asarray(cache.get_state(W, h1)["g"])
+        assert not np.array_equal(g0, g1)
+
+
+class TestInvalidation:
+    def test_register_strips_serving_state(self, setup):
+        """Registering a tree that already carries g/gsB composes with the
+        invalidate_adapter_state training contract: the registry holds the
+        RAW tree, and the state is re-derived through the cache."""
+        W, cache = setup
+        adp = _tenant(0)
+        served = _precompute(W, adp)
+        cache.register("t", served)
+        raw = cache.adapters("t")
+        assert "g" not in raw and "gsB" not in raw
+        assert set(raw.keys()) == set(adp.keys())
+
+    def test_version_bump_drops_old_states_and_rejects_old_handles(
+            self, setup):
+        W, cache = setup
+        adp = _tenant(0)
+        h0 = cache.register("t", adp)
+        g_v0 = np.asarray(cache.get_state(W, h0)["g"])
+        adp2 = dict(adp)
+        adp2["B"] = adp["B"] + 0.1
+        h1 = cache.update("t", adp2)
+        assert h1.version == 1
+        assert cache.stats().entries == 0     # v0 state dropped
+        assert cache.stats().invalidations == 1
+        with pytest.raises(AdapterCacheMiss, match="stale adapter handle"):
+            cache.get_state(W, h0)
+        g_v1 = np.asarray(cache.get_state(W, h1)["g"])
+        assert not np.array_equal(g_v0, g_v1)
+        # the fresh v1 state matches a from-scratch precompute bitwise
+        np.testing.assert_array_equal(
+            g_v1, np.asarray(_precompute(W, adp2)["g"]))
+
+    def test_explicit_invalidate_keeps_registry(self, setup):
+        W, cache = setup
+        h = cache.register("t", _tenant(0))
+        cache.get_state(W, h)
+        assert cache.invalidate("t") == 1
+        assert cache.stats().entries == 0
+        cache.get_state(W, h)                 # re-derivable: still registered
+        assert cache.stats().misses == 2
+
+
+class TestWarmOnlyRouting:
+    def test_allow_miss_false_names_every_key_field(self, setup):
+        W, cache = setup
+        h = cache.register("prod-adapter", _tenant(0))
+        with pytest.raises(AdapterCacheMiss) as ei:
+            cache.get_state(W, h, allow_miss=False)
+        msg = str(ei.value)
+        for field in ("prod-adapter", "version=0", "act_dtype=float32",
+                      "fold_gsb=True", "sharding=None", "allow_miss"):
+            assert field in msg, (field, msg)
+        assert ei.value.key.adapter_id == "prod-adapter"
+        # warming the cache makes the same call succeed
+        cache.get_state(W, h)
+        cache.get_state(W, h, allow_miss=False)
+
+    def test_unregistered_id_rejected(self, setup):
+        W, cache = setup
+        with pytest.raises(AdapterCacheMiss, match="not registered"):
+            cache.get_state(W, AdapterHandle("ghost", 0))
+
+    def test_duplicate_register_rejected(self, setup):
+        _, cache = setup
+        cache.register("t", _tenant(0))
+        with pytest.raises(ValueError, match="already registered"):
+            cache.register("t", _tenant(1))
+
+
+class TestKeying:
+    def test_key_carries_dtype_fold_and_sharding(self):
+        cache = AdapterStateCache(_precompute, act_dtype=jnp.bfloat16,
+                                  fold_gsb=False, sharding=(("model", 4),))
+        cache.register("t", _tenant(0))
+        key = cache.make_key(cache.current_handle("t"))
+        assert key.act_dtype == "bfloat16"
+        assert key.fold_gsb is False
+        assert key.sharding == (("model", 4),)
+        assert hash(key) == hash(key)
+
+    def test_mesh_fingerprint(self):
+        from repro.compat.mesh import make_mesh
+        assert mesh_fingerprint(None) is None
+        mesh = make_mesh((1, 1), ("data", "model"))
+        assert mesh_fingerprint(mesh) == (("data", 1), ("model", 1))

@@ -108,6 +108,110 @@ class TestComposeSharding:
             ("data", "model"), None)
 
 
+class TestBDoutAxes:
+    """The ROADMAP ``b_spec`` gap: a B whose d_out is FSDP-sharded beyond
+    the output's feature axes. Declared axes widen b_spec/vec_spec, make
+    the shard-local kernel inexpressible (clean materialized fallback),
+    and fused_compose_mm refuses such a plan loudly."""
+
+    def test_b_spec_widened(self):
+        plan = ComposeSharding(MESH, P(None, None, "model"),
+                               b_dout_axes=("data",))
+        assert plan.b_spec == P(("model", "data"), None)
+        assert plan.vec_spec == P(("model", "data"))
+        # output-side derivations are untouched
+        assert plan.dout_axes == ("model",)
+        assert plan.h_spec == P(None, None, None)
+
+    def test_b_spec_unchanged_without_declaration(self):
+        plan = ComposeSharding(MESH, P(None, None, "model"))
+        assert plan.b_spec == P("model", None)
+
+    def test_congruent_axes_dedup(self):
+        """b_dout_axes already carried by the output d_out are harmless
+        (no double-naming, still kernel-expressible)."""
+        plan = ComposeSharding(MESH, P(None, None, "model"),
+                               b_dout_axes=("model",))
+        assert plan.b_spec == P("model", None)
+        assert plan.kernel_expressible(512)
+
+    def test_extra_axes_break_kernel_expressibility(self):
+        plan = ComposeSharding(MESH, P(None, None, "model"),
+                               b_dout_axes=("data",))
+        assert not plan.kernel_expressible(512)
+
+    def test_dispatch_falls_back_cleanly(self):
+        cfg = DoRAConfig(mode="interpret", rank=8)
+        plan = ComposeSharding(MESH, P(None, "model"),
+                               b_dout_axes=("data",))
+        kp = dp.plan_compose(cfg, training=True, rows=4096, d_out=512,
+                             rank=8, sharding=plan)
+        assert kp.tier is dp.Tier.EAGER and kp.sharding is None
+
+    def test_fused_compose_mm_refuses_plan_naming_spec(self):
+        from repro.kernels import ops
+        plan = ComposeSharding(MESH, P(None, "model"),
+                               b_dout_axes=("data",))
+        base = jnp.zeros((8, 512), jnp.float32)
+        h = jnp.zeros((8, 8), jnp.float32)
+        B = jnp.zeros((512, 8), jnp.float32)
+        g = jnp.ones((512,), jnp.float32)
+        with pytest.raises(ValueError) as ei:
+            ops.fused_compose_mm(base, h, B, g, 2.0, interpret=True,
+                                 sharding=plan)
+        assert "b_spec" in str(ei.value) and "data" in str(ei.value)
+
+    def test_plan_for_output_threads_axes(self):
+        from repro.core.sharding import plan_for_output
+        plan = plan_for_output(MESH, P(None, "model"),
+                               b_dout_axes=("data",))
+        assert plan.b_dout_axes == ("data",)
+        assert hash(plan) == hash(plan)   # still lru-cache keyable
+
+    def test_row_parallel_b_axes_derivation(self):
+        from repro.launch import sharding as LS
+        mcfg = __import__("repro.configs", fromlist=["get_config"]) \
+            .get_config("qwen2-7b", smoke=True)
+        # no FSDP axes on the debug mesh (fsdp prefers the absent 'pod',
+        # and size-1 axes are dropped): the plan stays unchanged
+        assert LS.row_parallel_b_axes(mcfg, FakeMesh(data=1, model=1)) == ()
+        assert LS.row_parallel_b_axes(mcfg, FakeMesh(data=8, model=4)) == ()
+        # a multi-pod mesh FSDP-shards d_model over pod (wo and w_down
+        # agree: heads divide model=4, so wo keeps the plain fsdp role)
+        pod_mesh = FakeMesh(pod=2, data=8, model=4)
+        if mcfg.d_model % 2 == 0:
+            assert LS.row_parallel_b_axes(mcfg, pod_mesh) == ("pod",)
+        # heads do NOT divide model=3: wo degrades to fsdp_gather
+        # (('pod','data')) while w_down stays fsdp (('pod',)) — the one
+        # shared plan cannot declare both, so the declaration is dropped
+        # rather than pinning either weight to a WRONG layout
+        assert LS.row_parallel_b_axes(
+            mcfg, FakeMesh(pod=2, data=8, model=3)) == ()
+
+    def test_gsb_path_constrains_b_on_trivial_mesh(self):
+        """The folded-gsB serving path applies constrain_b under a
+        declared-FSDP plan; on a trivial mesh values are bitwise."""
+        from repro.compat.mesh import make_mesh
+        from repro.core import precompute_adapter_state
+        from repro.core.sharding import plan_for_output
+        cfg = DoRAConfig(rank=8, alpha=16, mode="eager")
+        key = jax.random.PRNGKey(3)
+        W = jax.random.normal(key, (128, 64))
+        x = jax.random.normal(jax.random.fold_in(key, 1), (4, 64))
+        adp = init_dora_params(jax.random.fold_in(key, 2), W, cfg)
+        adp["B"] = 0.2 * jax.random.normal(jax.random.fold_in(key, 3),
+                                           adp["B"].shape)
+        folded = precompute_adapter_state(W, adp, cfg, fold_gsb=True)
+        mesh = make_mesh((1, 1), ("data", "model"))
+        plan = plan_for_output(mesh, P(None, "model"),
+                               b_dout_axes=("data",))
+        y_c = jax.jit(lambda x: ad.dora_linear(
+            x, W, folded, cfg, training=False, constrain=plan))(x)
+        y_n = jax.jit(lambda x: ad.dora_linear(
+            x, W, folded, cfg, training=False))(x)
+        np.testing.assert_array_equal(np.asarray(y_c), np.asarray(y_n))
+
+
 class TestDispatchWithSharding:
     @pytest.fixture(autouse=True)
     def _own_env(self, monkeypatch):
