@@ -1,0 +1,98 @@
+"""Continuous-batching serving example: requests join and leave a
+RUNNING decode batch.
+
+    PYTHONPATH=src python examples/serve_continuous.py
+
+Eight mixed-length requests arrive over time (a deterministic
+Poisson-ish trace) at a 3-slot engine: each is prefilled into a free row
+of the live batch at its TRUE prompt length (per-row cache state, no
+length bucketing), decodes alongside whatever else is running, and
+retires individually — EOS, its own token budget, or the cache bound —
+handing the row to the next waiting request. Tokens stream per request
+as they are sampled, and every request's greedy output is checked
+against serving it alone through ``generate()`` (the oracle contract
+``tests/test_engine.py`` locks).
+"""
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config                      # noqa: E402
+from repro.core import AdapterStateCache, DoRAConfig      # noqa: E402
+from repro.launch.engine import DecodeEngine              # noqa: E402
+from repro.launch.serve import generate                   # noqa: E402
+from repro.launch.steps import StepConfig                 # noqa: E402
+from repro.launch.train import build_state                # noqa: E402
+
+
+def main() -> None:
+    mcfg = get_config("qwen2-7b", smoke=True)
+    dcfg = DoRAConfig(rank=8, alpha=16.0, mode="auto")
+    scfg = StepConfig(dora=dcfg)
+    params, _, _ = build_state(mcfg, dcfg, seed=0)
+
+    cache = AdapterStateCache.for_serving(mcfg, scfg)
+    _, adapters, _ = build_state(mcfg, dcfg, seed=1)
+    cache.register("tenant-0", adapters)
+
+    slots, max_len = 3, 20
+    rng = np.random.default_rng(0)
+    # (arrival step, prompt, token budget) — mixed lengths on purpose
+    trace = []
+    t = 0
+    for _ in range(8):
+        t += int(rng.integers(0, 3))
+        trace.append((t,
+                      rng.integers(0, mcfg.vocab_size,
+                                   int(rng.integers(4, 11)),
+                                   dtype=np.int32),
+                      int(rng.integers(3, 8))))
+
+    engine = DecodeEngine(mcfg, scfg, params, slots=slots, max_len=max_len,
+                          adapter_cache=cache)
+    streamed: dict[int, list[int]] = {}
+
+    def on_token(rid: int, tok: int) -> None:
+        streamed.setdefault(rid, []).append(tok)
+
+    t0 = time.time()
+    i, step = 0, 0
+    while i < len(trace) or engine.has_work():
+        while i < len(trace) and trace[i][0] <= step:
+            engine.submit(trace[i][1], adapter="tenant-0",
+                          max_new_tokens=trace[i][2])
+            i += 1
+        for r in engine.step(on_token):
+            print(f"  step {step:>2}: req{r.request_id} retired "
+                  f"({r.finish_reason}) -> {r.tokens.tolist()}")
+        step += 1
+    dt = time.time() - t0
+
+    st = engine.stats()
+    print(f"served {st.admitted} mixed-length requests through {slots} "
+          f"slots in {dt:.1f}s: {st.decode_steps} decode steps, mean "
+          f"occupancy {st.mean_occupancy:.2f}, "
+          f"{st.generated_tokens / dt:.1f} tok/s")
+    counts = engine.compile_counts()
+    assert counts["prefill_into_slot"] == 1, counts
+    assert counts["decode"] == {None: 1}, counts
+    print("compiled surface: 1 prefill-into-slot + 1 decode "
+          "(join/leave never recompiled)")
+
+    # Oracle: every request's tokens equal serving it alone.
+    for r, (_, prompt, budget) in zip(engine.results(), trace):
+        alone = np.asarray(generate(
+            mcfg, params, cache.current_handle("tenant-0"), scfg,
+            np.asarray(prompt)[None], gen_len=len(r.tokens),
+            max_len=max_len, adapter_cache=cache))
+        assert np.array_equal(r.tokens, alone[0, len(prompt):]), \
+            f"req{r.request_id} diverged from serving it alone"
+        assert streamed[r.request_id] == r.tokens.tolist()
+    print("every mid-stream request == served alone: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,14 @@ artifacts:
   - ``BENCH_serve.json`` (``multi_tenant.model`` section): any per-token
     adapter-path bytes grew, or the multi-tenant cache-hit path stopped
     pricing IDENTICALLY to single-tenant cached decode (``mt_hit_bytes ==
-    cached_gsb_bytes`` — the grouped path must not cost extra per token).
+    cached_gsb_bytes`` — the grouped path must not cost extra per token);
+  - ``BENCH_serve.json`` (``continuous`` section): the deterministic
+    schedule model re-simulated from the committed arrival trace — the
+    continuous-batching engine must need NO MORE decode steps than
+    committed and must keep beating the static baseline (fewer decode
+    steps, higher mean slot occupancy) for the same trace: the static
+    batch pays idle-row decode, and a scheduler change that loses that
+    win is a serving regression.
 
 Measured sections (HLO bytes-accessed, wall clocks, tok/s) are
 machine-dependent and stay informational — they are never gated here.
@@ -160,6 +167,83 @@ def check_serve(artifact_path: str) -> int:
     return 0
 
 
+def check_continuous(artifact_path: str) -> int:
+    """Gate the continuous-batching schedule model: re-simulate the
+    committed arrival trace (pure host arithmetic — the scheduling is
+    model-independent) and fail when the engine needs more decode steps /
+    less occupancy than committed, or stops beating the static baseline."""
+    from benchmarks.serve_bench import (make_arrival_trace,
+                                        simulate_continuous,
+                                        simulate_static)
+
+    with open(artifact_path) as f:
+        committed = json.load(f)
+    section = committed.get("continuous")
+    if not section:
+        print(f"ERROR: no continuous section in {artifact_path} — "
+              f"regenerate: python -m benchmarks.serve_bench --smoke "
+              f"--artifact BENCH_serve.json")
+        return 1
+    tp = dict(section["trace"])
+    slots = tp.pop("slots")
+    tp.pop("max_len", None)
+    tp["gen_lens"] = tuple(tp["gen_lens"])
+    trace = make_arrival_trace(**tp)
+    sim_e = simulate_continuous(trace, slots=slots)
+    sim_s = simulate_static(trace, slots=slots)
+
+    failures = []
+    improvements = []
+    rows = [("engine decode_steps", sim_e["decode_steps"],
+             section["engine_model"]["decode_steps"], False),
+            ("engine mean_occupancy", sim_e["mean_occupancy"],
+             section["engine_model"]["mean_occupancy"], True),
+            ("static decode_steps", sim_s["decode_steps"],
+             section["static_model"]["decode_steps"], None)]
+    for name, now, want, higher_is_better in rows:
+        status = "ok"
+        if higher_is_better is None:
+            pass  # informational context row, never gated
+        elif higher_is_better and now < want * (1 - EPS):
+            status = "REGRESSION"
+            failures.append(f"{name}: {want:.4f} -> {now:.4f}")
+        elif higher_is_better is False and now > want * (1 + EPS):
+            status = "REGRESSION"
+            failures.append(f"{name}: {want:.4f} -> {now:.4f}")
+        elif (higher_is_better and now > want * (1 + EPS)) or \
+                (higher_is_better is False and now < want * (1 - EPS)):
+            status = "improved"
+            improvements.append(name)
+        print(f"  {name:>24}: {want:>10.4f} -> {now:>10.4f}  [{status}]")
+    if sim_e["decode_steps"] > sim_s["decode_steps"]:
+        failures.append(
+            f"the engine no longer beats static batching on the trace: "
+            f"{sim_e['decode_steps']} engine decode steps > "
+            f"{sim_s['decode_steps']} static — continuous batching must "
+            f"not pay MORE decode row-work than the idle-row baseline")
+    if sim_e["mean_occupancy"] < sim_s["mean_occupancy"] - EPS:
+        failures.append(
+            f"engine occupancy {sim_e['mean_occupancy']:.4f} fell below "
+            f"the static baseline's {sim_s['mean_occupancy']:.4f}")
+    if failures:
+        print("\ncontinuous-drift FAIL:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        print("If intentional, regenerate and justify in the PR:\n"
+              "  python -m benchmarks.serve_bench --smoke --artifact "
+              "BENCH_serve.json")
+        return 1
+    if improvements:
+        print(f"\ncontinuous-drift OK (improved: "
+              f"{', '.join(improvements)}) — regenerate BENCH_serve.json "
+              f"to record the better schedule.")
+    else:
+        print("\ncontinuous-drift OK: the re-simulated schedule matches "
+              "the committed artifact and the engine still beats the "
+              "static baseline.")
+    return 0
+
+
 if __name__ == "__main__":
     if len(sys.argv) > 1:
         compose_path, serve_path = sys.argv[1], (
@@ -171,4 +255,6 @@ if __name__ == "__main__":
     rc = check(compose_path)
     print()
     rc = check_serve(serve_path) or rc
+    print()
+    rc = check_continuous(serve_path) or rc
     sys.exit(rc)

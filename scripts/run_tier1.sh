@@ -18,10 +18,11 @@
 #   post-PR2 292 passed / 0 failed / 2 skipped
 #   post-PR3 317 passed / 0 failed / 2 skipped (SPMD compose + CI gates)
 #   post-PR4 358 passed / 0 failed / 2 skipped (multi-tenant serving + docs)
+#   post-PR5 385 passed / 0 failed / 2 skipped (continuous-batching engine)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-MIN_PASS="${REPRO_TIER1_MIN_PASS:-358}"
+MIN_PASS="${REPRO_TIER1_MIN_PASS:-385}"
 MAX_FAIL="${REPRO_TIER1_MAX_FAIL:-0}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 TIER="${REPRO_FORCE_TIER:-interpret}"
@@ -73,6 +74,10 @@ echo
 echo "multi-tenant serve smoke (tier ${TIER}): LRU cache + grouped decode"
 python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \
     --prompt-len 16 --gen-len 4 --tenants 3
+echo
+echo "continuous serve smoke (tier ${TIER}): slot-scheduled engine"
+python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \
+    --prompt-len 16 --gen-len 4 --continuous
 echo
 echo "bench smoke: compose kernels (incl. matmul-fused) + serving cache"
 python -m benchmarks.compose_bench --smoke

@@ -1,0 +1,548 @@
+"""Continuous-batching decode engine: slot-scheduled serving with per-row
+cache state.
+
+The static serve loop (``repro.launch.serve``) retires a batch only when
+EVERY row is done: a request that finishes early keeps burning its row,
+and a waiting request cannot start until the whole batch drains. This
+module adds the scheduler subsystem that keeps the decode batch full:
+
+  - **slot table** — the decode batch is ``slots`` fixed rows over ONE
+    persistent cache whose ``"len"`` is a per-row vector
+    (``init_cache(..., row_lens=True)``): every row stands at its own
+    position, attends under its own causal frontier, and writes its new
+    K/V at its own depth;
+  - **admission** — a waiting request is prefilled INTO a free row of the
+    running batch (``make_prefill_into_slot_step``: slot and prompt
+    length both traced, so joining never recompiles) while the other
+    rows' state is untouched;
+  - **retirement** — a row retires the moment its request finishes (EOS,
+    its token budget, or the cache's ``max_len``); the freed slot admits
+    the next queued request at the next engine step — no idle decode
+    rows while work is waiting;
+  - **fixed-shape steps** — the compiled surface is exactly one
+    (prefill-into-slot, decode) pair per (slots, max_len,
+    group-signature): join/leave traffic changes VALUES (slot index,
+    per-row lengths, tokens), never shapes. The decode step's jaxpr
+    contains zero ``dora_wnorm`` ops (the frozen-adapter serving state —
+    which also carries the rsLoRA scale — does all norm work at
+    precompute time, exactly as in the static path);
+  - **per-slot adapters** — requests carry
+    :class:`~repro.core.AdapterHandle`\\ s resolved through the PR-4
+    :class:`~repro.core.AdapterStateCache` LRU. Slots whose handles
+    coincide take the single-tenant bitwise path (``groups=None``);
+    mixed-handle slot tables group contiguous same-handle runs through
+    ``dora_linear_grouped`` (the PR-4 grouped gsB-folded compose, ≥2-row
+    groups bitwise) with free slots absorbed into a neighbouring run.
+
+Scheduling is HOST logic over host mirrors (per-slot position/budget
+counters): the engine never reads ``cache["len"]`` back from the device,
+so the only per-step sync is the logits fetch that sampling needs anyway.
+Scheduling is also deterministic and model-independent when no ``eos_id``
+is set — ``benchmarks/serve_bench.py`` re-prices it analytically and
+``scripts/check_bench_drift.py`` gates the result.
+
+SSM/Mamba archs are rejected at construction (their states integrate
+every processed token and cannot rewind to a slot's true prompt length);
+MoE FFNs are rejected too (expert-capacity dispatch couples rows, so a
+retired slot's garbage tokens could evict a live row's tokens from an
+expert).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adapter import stack_adapter_states
+from repro.core.adapter_cache import (AdapterHandle, AdapterStateCache,
+                                      mesh_fingerprint)
+from repro.launch.steps import (StepConfig, make_decode_step,
+                                make_prefill_into_slot_step)
+from repro.models import init_cache
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineRequest:
+    """One queued/running request (engine-internal; build via
+    :meth:`DecodeEngine.submit`)."""
+    request_id: int
+    prompt: np.ndarray                 # int32 [P]
+    adapter: AdapterHandle | None      # None = the engine's fixed adapters
+    max_new_tokens: int
+    eos_id: int | None = None
+    key_id: int = 0                    # sample-key fold-in (see submit)
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Everything the engine produced for one request."""
+    request_id: int
+    prompt: np.ndarray                 # int32 [P] (as submitted)
+    tokens: np.ndarray                 # int32 [n] generated tokens
+    finish_reason: str                 # "eos" | "length" | "max_len" |
+    #                                    "error" (admission failed; see
+    #                                    ``error`` for the exception)
+    admitted_step: int                 # engine step the prefill ran in
+    finished_step: int                 # engine step the last token landed
+    error: Exception | None = None     # set iff finish_reason == "error"
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStats:
+    """Deterministic scheduling counters (point-in-time snapshot)."""
+    slots: int
+    steps: int                  # engine steps driven (incl. idle ones)
+    decode_steps: int           # steps that ran the batched decode
+    prefills: int               # prefill-into-slot calls (= admissions)
+    admitted: int
+    retired: int
+    generated_tokens: int       # sampled tokens (prefill + decode)
+    slot_steps: int             # sum over decode steps of active slots
+
+    @property
+    def mean_occupancy(self) -> float:
+        """Active rows per decode step / slots — the fraction of decode
+        row-work that produced a live request's token."""
+        if self.decode_steps == 0:
+            return 0.0
+        return self.slot_steps / (self.decode_steps * self.slots)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["mean_occupancy"] = self.mean_occupancy
+        return d
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: EngineRequest | None = None
+    handle: AdapterHandle | None = None
+    state: Any = None                  # pinned serving tree for this row
+    last_token: int = 0
+    budget: int = 0                    # tokens still to sample
+    finish_cap: str = "length"         # reason when the budget runs out
+    generated: list = dataclasses.field(default_factory=list)
+    admitted_step: int = 0
+
+    @property
+    def active(self) -> bool:
+        return self.req is not None
+
+
+class DecodeEngine:
+    """Slot-scheduled continuous-batching serving over one fixed-shape
+    decode step.
+
+    ``adapters`` is EITHER a single precomputed serving tree every
+    request shares (single-tenant engine), OR ``None`` with an
+    ``adapter_cache`` (:class:`~repro.core.AdapterStateCache`) — then
+    every request carries an adapter id / handle resolved through the
+    LRU at admission. The resolved state is pinned on the slot for the
+    request's lifetime: a tenant update mid-flight never swaps weights
+    under a running request (the NEXT admission picks up the new
+    version).
+
+    ``step()`` is one scheduler tick: retire-finished → admit-into-free
+    (prefill + first token) → one batched decode for every active slot.
+    ``run()`` drives until the queue and the slot table drain. Sampling
+    is host-side (greedy at ``temperature=0.0``, else per-request keys —
+    ``fold_in(fold_in(PRNGKey(seed), request_id), n_sampled)`` — so a
+    request's sample stream is independent of what shares its batch).
+    """
+
+    def __init__(self, mcfg: ModelConfig, scfg: StepConfig, params, *,
+                 slots: int, max_len: int, adapters=None,
+                 adapter_cache: AdapterStateCache | None = None,
+                 mesh=None, allow_miss: bool = True,
+                 temperature: float = 0.0, seed: int = 0,
+                 max_cached_steps: int = 16):
+        kinds = mcfg.layer_kinds()
+        if any(k != "attn" for k in kinds):
+            raise NotImplementedError(
+                f"continuous batching requires attention-only caches: SSM "
+                f"states integrate every processed token and cannot rewind "
+                f"to a slot's true prompt length, so admission "
+                f"(prefill-into-slot) and per-row retirement are "
+                f"ill-defined (arch {mcfg.name!r} has layer kinds "
+                f"{kinds})")
+        if any(f == "moe" for f in mcfg.ffn_kinds()):
+            raise NotImplementedError(
+                f"continuous batching does not support MoE FFNs: expert-"
+                f"capacity dispatch couples batch rows, so a retired "
+                f"slot's garbage tokens could evict a live row's tokens "
+                f"from an expert (arch {mcfg.name!r})")
+        if slots < 1:
+            raise ValueError(f"need at least one slot, got {slots}")
+        if (adapters is None) == (adapter_cache is None):
+            # Exactly one source of adapter state: mixing a fixed tree
+            # with cache-routed requests would make a handle-less ACTIVE
+            # slot indistinguishable from a free one in _slot_grouping —
+            # its rows would silently decode under a neighbouring
+            # tenant's adapters.
+            raise ValueError(
+                "DecodeEngine needs EITHER a fixed precomputed `adapters` "
+                "tree (single-tenant) OR an `adapter_cache` to resolve "
+                "per-request adapter handles against — not both, not "
+                "neither")
+        if adapter_cache is not None \
+                and adapter_cache.sharding != mesh_fingerprint(mesh):
+            raise ValueError(
+                f"adapter cache is keyed for sharding "
+                f"{adapter_cache.sharding} but the engine runs on mesh "
+                f"{mesh_fingerprint(mesh)} — build the cache with "
+                f"AdapterStateCache.for_serving(mcfg, scfg, mesh) for "
+                f"THIS mesh")
+        self.mcfg = mcfg
+        self.scfg = scfg
+        self.params = params
+        self.slots = int(slots)
+        self.max_len = int(max_len)
+        self.mesh = mesh
+        self.adapters = adapters
+        self.adapter_cache = adapter_cache
+        self.allow_miss = allow_miss
+        self.temperature = float(temperature)
+        self.seed = int(seed)
+        self.max_cached_steps = int(max_cached_steps)
+
+        # Pin the persistent cache to the serving shardings (and the step
+        # OUTPUT caches to the same layout): the cache round-trips through
+        # every prefill/decode, and an unpinned layout would let GSPMD
+        # re-lay it out after the first call — one spurious recompile per
+        # step fn, breaking the one-executable-per-signature contract.
+        self.cache = init_cache(mcfg, self.slots, self.max_len,
+                                row_lens=True)
+        cache_out_sh = None
+        if mesh is not None:
+            from repro.launch import sharding as S
+            c_sh = S.cache_sharding(mcfg, mesh, batch=self.slots)
+            self.cache = jax.device_put(self.cache, c_sh)
+            cache_out_sh = c_sh
+        self._prefill = jax.jit(
+            make_prefill_into_slot_step(mcfg, scfg, mesh, seq=max_len),
+            donate_argnums=(2,),
+            out_shardings=(None, cache_out_sh))
+        self._cache_out_sh = cache_out_sh
+        # Compiled decode steps per group signature (None = single
+        # tenant). Same LRU discipline as MultiTenantServer._steps: each
+        # entry pins a jitted executable.
+        self._decodes: "OrderedDict[Any, Callable]" = OrderedDict()
+        # (slot-handle layout, groups, stacked tree) of the last decode —
+        # re-stacked only when the layout changes, never per token.
+        self._grouping_cache: tuple | None = None
+        self._slots: list[_Slot] = [_Slot() for _ in range(self.slots)]
+        self._queue: deque[EngineRequest] = deque()
+        self._results: dict[int, RequestResult] = {}
+        self._next_id = 0
+        self._steps = 0
+        self._decode_steps = 0
+        self._prefills = 0
+        self._admitted = 0
+        self._retired = 0
+        self._generated = 0
+        self._slot_steps = 0
+
+    # -- submission ---------------------------------------------------------
+
+    def check_request(self, prompt, *,
+                      adapter: AdapterHandle | str | None = None,
+                      max_new_tokens: int):
+        """Validate a request WITHOUT queuing it: raises exactly what
+        :meth:`submit` would, and returns the (normalized prompt,
+        resolved handle) pair it would queue. Batch front ends run this
+        over EVERY request before the first submit — a bad request in
+        the middle of a batch must fail the call, not strand the
+        already-queued ones in the persistent engine."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        P = prompt.shape[0]
+        if P < 1:
+            raise ValueError("empty prompt")
+        if P + 1 > self.max_len:
+            raise ValueError(
+                f"prompt length {P} leaves no room to generate within "
+                f"max_len={self.max_len} (need P + 1 <= max_len)")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens={max_new_tokens} < 1")
+        if adapter is None:
+            if self.adapters is None:
+                raise ValueError(
+                    "this engine routes requests through an adapter cache; "
+                    "every request must carry an adapter id or handle")
+            handle = None
+        else:
+            if self.adapter_cache is None:
+                raise ValueError(
+                    "this engine serves one fixed adapter tree; requests "
+                    "cannot carry adapter handles (construct the engine "
+                    "with adapter_cache= to route per-request adapters)")
+            handle = (adapter if isinstance(adapter, AdapterHandle)
+                      else self.adapter_cache.current_handle(adapter))
+        return prompt, handle
+
+    def submit(self, prompt, *, adapter: AdapterHandle | str | None = None,
+               max_new_tokens: int, eos_id: int | None = None,
+               key_id: int | None = None) -> int:
+        """Queue one request; returns its request id. ``adapter``: an
+        :class:`AdapterHandle`, a registered adapter id (resolved to the
+        CURRENT version at submit time), or None when the engine serves a
+        fixed adapter tree. ``key_id``: the fold-in for this request's
+        temperature-sampling key stream (default: the request id, which
+        monotonically increases on a persistent engine — batch-level
+        callers wanting call-reproducible sampling pass the request's
+        index within the batch, as ``EngineServer``/mixed-length
+        ``serve()`` do)."""
+        prompt, handle = self.check_request(prompt, adapter=adapter,
+                                            max_new_tokens=max_new_tokens)
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(EngineRequest(
+            rid, prompt, handle, int(max_new_tokens), eos_id,
+            key_id=rid if key_id is None else int(key_id)))
+        return rid
+
+    # -- scheduling ---------------------------------------------------------
+
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(s.active for s in self._slots)
+
+    def stats(self) -> EngineStats:
+        return EngineStats(slots=self.slots, steps=self._steps,
+                           decode_steps=self._decode_steps,
+                           prefills=self._prefills,
+                           admitted=self._admitted, retired=self._retired,
+                           generated_tokens=self._generated,
+                           slot_steps=self._slot_steps)
+
+    def compile_counts(self) -> dict:
+        """How many executables each step fn holds — the compile-count
+        acceptance: after any join/leave trace this must be exactly 1 for
+        the prefill and 1 per decode group-signature."""
+        return {"prefill_into_slot": self._prefill._cache_size(),
+                "decode": {sig: fn._cache_size()
+                           for sig, fn in self._decodes.items()}}
+
+    def _sample_rows(self, logits_rows, key_ids_and_counts) -> list[int]:
+        """One token per row. Greedy is a host argmax over the
+        already-fetched logits (zero device work); temperature>0 runs
+        ONE vmapped categorical over the rows' per-request keys — a
+        single device round trip per step, not one per active slot."""
+        if self.temperature <= 0.0:
+            return [int(np.argmax(row)) for row in logits_rows]
+        keys = jnp.stack([
+            jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(self.seed), kid), n)
+            for kid, n in key_ids_and_counts])
+        draws = jax.vmap(
+            lambda k, row: jax.random.categorical(
+                k, row / self.temperature)
+        )(keys, jnp.asarray(np.stack(logits_rows)))
+        return [int(t) for t in np.asarray(draws)]
+
+    def _resolve_state(self, req: EngineRequest):
+        if req.adapter is None:
+            return self.adapters
+        return self.adapter_cache.get_state(self.params, req.adapter,
+                                            allow_miss=self.allow_miss)
+
+    def _finish(self, slot: _Slot, reason: str) -> None:
+        req = slot.req
+        self._results[req.request_id] = RequestResult(
+            request_id=req.request_id, prompt=req.prompt,
+            tokens=np.asarray(slot.generated, np.int32),
+            finish_reason=reason, admitted_step=slot.admitted_step,
+            finished_step=self._steps)
+        self._retired += 1
+        slot.req = None
+        slot.handle = None
+        slot.state = None
+        slot.generated = []
+
+    def _note_token(self, slot: _Slot, tok: int, on_token) -> str | None:
+        """Record one sampled token; returns the finish reason if the
+        request is now done."""
+        slot.generated.append(tok)
+        slot.budget -= 1
+        slot.last_token = tok
+        self._generated += 1
+        if on_token is not None:
+            on_token(slot.req.request_id, tok)
+        if slot.req.eos_id is not None and tok == slot.req.eos_id:
+            return "eos"
+        if slot.budget <= 0:
+            return slot.finish_cap
+        return None
+
+    def _admit(self, on_token=None) -> None:
+        """Fill free slots from the queue (FIFO): one prefill-into-slot +
+        first sampled token per admission. A request whose budget is one
+        token retires here without ever occupying a decode row."""
+        for idx, slot in enumerate(self._slots):
+            while not slot.active and self._queue:
+                req = self._queue.popleft()
+                try:
+                    state = self._resolve_state(req)
+                except Exception as e:
+                    # A failed resolution (stale handle after a mid-queue
+                    # update — which can NEVER re-resolve, versions only
+                    # move forward — or a cold state under warm-only
+                    # routing) must neither silently lose the request nor
+                    # wedge the FIFO behind it forever: the request is
+                    # finished with an errored result and admission moves
+                    # on to the next one.
+                    self._results[req.request_id] = RequestResult(
+                        request_id=req.request_id, prompt=req.prompt,
+                        tokens=np.zeros((0,), np.int32),
+                        finish_reason="error",
+                        admitted_step=self._steps,
+                        finished_step=self._steps, error=e)
+                    continue
+                P = req.prompt.shape[0]
+                toks = np.zeros((1, self.max_len), np.int32)
+                toks[0, :P] = req.prompt
+                logits, self.cache = self._prefill(
+                    self.params, state, self.cache,
+                    {"tokens": jnp.asarray(toks),
+                     "prompt_len": jnp.asarray(P, jnp.int32),
+                     "slot": jnp.asarray(idx, jnp.int32)})
+                self._prefills += 1
+                self._admitted += 1
+                slot.req = req
+                slot.handle = req.adapter
+                slot.state = state
+                slot.admitted_step = self._steps
+                # Token budget: the request's own cap, or the cache bound
+                # (P + budget - 1 decode writes must stay < max_len; the
+                # last sampled token is never written back).
+                room = self.max_len - P
+                slot.budget = min(req.max_new_tokens, room)
+                slot.finish_cap = ("length"
+                                   if req.max_new_tokens <= room
+                                   else "max_len")
+                tok = self._sample_rows([np.asarray(logits)[0]],
+                                        [(req.key_id, 0)])[0]
+                reason = self._note_token(slot, tok, on_token)
+                if reason is not None:
+                    self._finish(slot, reason)   # slot free again: loop
+
+    def _slot_grouping(self):
+        """(tenant_groups | None, adapter tree) for the CURRENT slot
+        table. Free slots are absorbed into a neighbouring run (their
+        rows decode garbage that nothing reads), so the signature only
+        changes when the handle layout of ACTIVE slots changes — and the
+        (groups, stacked-tree) pair is cached on that layout: re-stacking
+        every tenant's full serving tree is a device-side copy that must
+        happen per admission/retirement, not per sampled token."""
+        if self.adapter_cache is None:
+            return None, self.adapters
+        layout = tuple((s.handle if s.active else None)
+                       for s in self._slots)
+        if self._grouping_cache is not None \
+                and self._grouping_cache[0] == layout:
+            return self._grouping_cache[1], self._grouping_cache[2]
+        keys: list[Any] = list(layout)
+        states = {s.handle: s.state for s in self._slots if s.active}
+        # forward fill from the left, then leading Nones from the right
+        last = None
+        for i, k in enumerate(keys):
+            if k is None:
+                keys[i] = last
+            else:
+                last = k
+        nxt = None
+        for i in reversed(range(len(keys))):
+            if keys[i] is None:
+                keys[i] = nxt
+            else:
+                nxt = keys[i]
+        if len(set(keys)) == 1:
+            groups, adapters = None, states[keys[0]]
+        else:
+            runs: list[tuple[Any, int]] = []
+            for k in keys:
+                if runs and runs[-1][0] == k:
+                    runs[-1] = (k, runs[-1][1] + 1)
+                else:
+                    runs.append((k, 1))
+            groups, start = [], 0
+            for _, n in runs:
+                groups.append((start, n))
+                start += n
+            groups = tuple(groups)
+            adapters = stack_adapter_states([states[k] for k, _ in runs],
+                                            axis=1)
+        self._grouping_cache = (layout, groups, adapters)
+        return groups, adapters
+
+    def _get_decode(self, groups):
+        if groups in self._decodes:
+            self._decodes.move_to_end(groups)
+            return self._decodes[groups]
+        fn = jax.jit(make_decode_step(self.mcfg, self.scfg, self.mesh,
+                                      batch=self.slots,
+                                      tenant_groups=groups),
+                     donate_argnums=(2,),
+                     out_shardings=(None, self._cache_out_sh))
+        self._decodes[groups] = fn
+        while len(self._decodes) > self.max_cached_steps:
+            self._decodes.popitem(last=False)
+        return fn
+
+    def step(self, on_token=None) -> list[RequestResult]:
+        """One scheduler tick: admit into free slots, then one batched
+        decode over every active slot. Returns the requests that FINISHED
+        during this tick (also retrievable via :meth:`results`).
+        ``on_token(request_id, token)`` streams every sampled token."""
+        before = set(self._results)
+        self._admit(on_token)
+        active = [i for i, s in enumerate(self._slots) if s.active]
+        if active:
+            toks = np.zeros((self.slots, 1), np.int32)
+            for i in active:
+                toks[i, 0] = self._slots[i].last_token
+            groups, adapters = self._slot_grouping()
+            decode = self._get_decode(groups)
+            logits, self.cache = decode(self.params, adapters, self.cache,
+                                        {"tokens": jnp.asarray(toks)})
+            logits_np = np.asarray(logits)      # the sampling sync
+            self._decode_steps += 1
+            self._slot_steps += len(active)
+            toks_out = self._sample_rows(
+                [logits_np[i] for i in active],
+                [(self._slots[i].req.key_id,
+                  len(self._slots[i].generated)) for i in active])
+            for i, tok in zip(active, toks_out):
+                slot = self._slots[i]
+                reason = self._note_token(slot, tok, on_token)
+                if reason is not None:
+                    self._finish(slot, reason)
+        self._steps += 1
+        return [self._results[rid]
+                for rid in sorted(set(self._results) - before)]
+
+    def run(self, on_token=None) -> list[RequestResult]:
+        """Drive :meth:`step` until the queue and slot table drain, then
+        deliver (and DROP — the engine persists across calls, so results
+        are handed over exactly once rather than retained forever) every
+        undelivered finished result, ordered by request id."""
+        while self.has_work():
+            self.step(on_token)
+        return self.pop_results()
+
+    def results(self) -> list[RequestResult]:
+        """Finished-but-undelivered results, oldest request first (kept
+        until :meth:`run`/:meth:`pop_results` hands them over — a manual
+        :meth:`step` driver should pop periodically, or the retained
+        history grows with every request served)."""
+        return [self._results[rid] for rid in sorted(self._results)]
+
+    def pop_results(self) -> list[RequestResult]:
+        """:meth:`results`, handing ownership over: the returned results
+        are removed from the engine's retained set."""
+        out = self.results()
+        self._results.clear()
+        return out

@@ -3,7 +3,7 @@
 CPU-runnable with a smoke config::
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
-        --batch 2 --prompt-len 32 --gen-len 16 [--tenants 3]
+        --batch 2 --prompt-len 32 --gen-len 16 [--tenants 3] [--continuous]
 
 Implements the production serving shape (docs/serving.md):
 
@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 from typing import Any, Sequence
 
@@ -67,10 +68,27 @@ def _sample(last, temperature, key):
     return nxt.astype(jnp.int32)[:, None], key
 
 
+def _contract_checks_enabled() -> bool:
+    """The prefill/decode cache-length contract checks call ``int()`` on
+    a device scalar — a host sync per prefill (and per first decode) that
+    stalls the pipeline. They default OFF in the serving path; the
+    contract itself stays hard-error (not assert) and is locked by tests,
+    which force the checks on via ``check_contract=True``. Set
+    ``REPRO_SERVE_DEBUG=1`` to re-enable them operationally."""
+    return os.environ.get("REPRO_SERVE_DEBUG", "") not in ("", "0")
+
+
 def _decode_loop(prefill, decode, params, adapters, toks, *, prompt_len,
-                 gen_len, pad, temperature, seed, collect_logits=False):
+                 gen_len, pad, temperature, seed, collect_logits=False,
+                 check_contract: bool | None = None):
     """The shared prefill → sample → decode loop. Returns (tokens
-    [B, P+gen_len], logits-per-sampled-token list or None)."""
+    [B, P+gen_len], logits-per-sampled-token list or None).
+
+    ``check_contract``: run the blocking cache-length contract checks
+    (None = the ``REPRO_SERVE_DEBUG`` env switch; see
+    :func:`_contract_checks_enabled`)."""
+    check = (_contract_checks_enabled() if check_contract is None
+             else check_contract)
     P = prompt_len
     batch_in = {"tokens": toks}
     if pad:
@@ -79,8 +97,9 @@ def _decode_loop(prefill, decode, params, adapters, toks, *, prompt_len,
     logits, cache = prefill(params, adapters, batch_in)
     # The decode contract: the cache stands at exactly the true prompt
     # length, so the first generated token is written at position P.
-    # (Hard errors, not asserts — the contract must survive python -O.)
-    if int(cache["len"]) != P:
+    # (Hard errors, not asserts — the contract must survive python -O —
+    # but behind the debug switch: each int() is a device sync.)
+    if check and int(cache["len"]) != P:
         raise RuntimeError(
             f"prefill left cache at {int(cache['len'])}, expected {P}")
 
@@ -94,7 +113,7 @@ def _decode_loop(prefill, decode, params, adapters, toks, *, prompt_len,
         nxt, key = _sample(last, temperature, key)
         out.append(nxt)
         last, cache = decode(params, adapters, cache, {"tokens": nxt})
-        if i == 0 and int(cache["len"]) != P + 1:
+        if check and i == 0 and int(cache["len"]) != P + 1:
             raise RuntimeError(
                 f"decode wrote at {int(cache['len']) - 1}, expected {P}")
     return jnp.concatenate(out, axis=1), steps_logits
@@ -104,7 +123,8 @@ def generate(mcfg, params, adapters, scfg: StepConfig, prompts, *,
              gen_len: int, max_len: int, temperature: float = 0.0,
              seed: int = 0, cache_adapters: bool = True,
              fold_gsb: bool = False, mesh=None, adapter_cache=None,
-             allow_miss: bool = True, return_logits: bool = False):
+             allow_miss: bool = True, return_logits: bool = False,
+             check_contract: bool | None = None):
     """prompts: int32 [B, P]. Returns tokens [B, P+gen_len] (or
     (tokens, per-step logits) when ``return_logits``).
 
@@ -157,7 +177,7 @@ def generate(mcfg, params, adapters, scfg: StepConfig, prompts, *,
     tokens, logits = _decode_loop(
         prefill, decode, params, adapters, toks, prompt_len=P,
         gen_len=gen_len, pad=pad, temperature=temperature, seed=seed,
-        collect_logits=return_logits)
+        collect_logits=return_logits, check_contract=check_contract)
     return (tokens, logits) if return_logits else tokens
 
 
@@ -198,13 +218,19 @@ class MultiTenantServer:
 
     def __init__(self, mcfg, scfg: StepConfig, params, *,
                  cache: AdapterStateCache, mesh=None,
-                 max_cached_steps: int = 32):
+                 max_cached_steps: int = 32, engine_slots: int = 8):
         _check_cache_mesh(cache, mesh)
         self.mcfg = mcfg
         self.scfg = scfg
         self.params = params
         self.cache = cache
         self.mesh = mesh
+        # Mixed-length batches route through a continuous-batching engine
+        # with this FIXED slot count (requests beyond it queue and join
+        # as rows retire) — decoupled from the batch size, so varying
+        # batch sizes share one compiled (prefill, decode) pair and one
+        # persistent per-row cache instead of one engine per size.
+        self.engine_slots = int(engine_slots)
         # Compiled (prefill, decode) pairs per (batch, bucket, grouping
         # signature), LRU-bounded: churny request mixes produce many
         # signatures, and each entry pins two jitted executables — the
@@ -213,6 +239,12 @@ class MultiTenantServer:
         self.max_cached_steps = max_cached_steps
         from collections import OrderedDict
         self._steps: "OrderedDict" = OrderedDict()
+        # Continuous-batching engines for mixed-length batches, keyed by
+        # (slots, max_len). Bounded far tighter than the step cache: each
+        # entry pins a persistent [n_scan, slots, max_len, Hkv, hd] K/V
+        # cache on device, not just compiled executables.
+        self.max_cached_engines = 2
+        self._engines: "OrderedDict" = OrderedDict()
 
     def _resolve(self, req: Request) -> AdapterHandle:
         if isinstance(req.adapter, AdapterHandle):
@@ -236,20 +268,109 @@ class MultiTenantServer:
             self._steps.popitem(last=False)
         return self._steps[key]
 
+    def _get_engine(self, *, slots: int, max_len: int, temperature: float,
+                    seed: int, allow_miss: bool):
+        from repro.launch.engine import DecodeEngine
+        key = (slots, max_len)
+        if key in self._engines:
+            self._engines.move_to_end(key)
+            eng = self._engines[key]
+        else:
+            eng = DecodeEngine(self.mcfg, self.scfg, self.params,
+                               slots=slots, max_len=max_len,
+                               adapter_cache=self.cache, mesh=self.mesh)
+            self._engines[key] = eng
+            while len(self._engines) > self.max_cached_engines:
+                self._engines.popitem(last=False)
+        eng.temperature = float(temperature)
+        eng.seed = int(seed)
+        eng.allow_miss = allow_miss
+        return eng
+
+    def _serve_continuous(self, requests, prompts, *, gen_len, max_len,
+                          temperature, seed, allow_miss):
+        """Mixed-length admission through the continuous-batching engine:
+        every request is prefilled into a slot at its TRUE prompt length
+        (per-row cache state), so no length bucketing is needed; batches
+        larger than ``engine_slots`` queue and join as rows retire.
+        Returns a list of 1-D [P_i + gen_len] arrays in request order.
+        Sample keys fold in each request's index within THIS batch, so a
+        repeated call with the same requests/temperature/seed reproduces
+        its tokens even though the cached engine persists."""
+        eng = self._get_engine(slots=self.engine_slots, max_len=max_len,
+                               temperature=temperature, seed=seed,
+                               allow_miss=allow_miss)
+        # Validate and resolve EVERY request before the first submit: a
+        # bad one mid-batch (unregistered adapter id, empty prompt) must
+        # fail this call, not strand already-queued requests in the
+        # persistent cached engine.
+        checked = [eng.check_request(p, adapter=self._resolve(r),
+                                     max_new_tokens=gen_len)
+                   for r, p in zip(requests, prompts)]
+        rids = [eng.submit(p, adapter=h, max_new_tokens=gen_len, key_id=i)
+                for i, (p, h) in enumerate(checked)]
+        results = {res.request_id: res for res in eng.run()}
+        for rid in rids:
+            if results[rid].finish_reason == "error":
+                # e.g. a stale/cold adapter handle at admission: surface
+                # the original exception (the engine already dropped the
+                # request with an errored result, so the persistent
+                # engine is NOT wedged for the next call).
+                raise results[rid].error
+        return [np.concatenate([p, results[rid].tokens])
+                for p, rid in zip(prompts, rids)]
+
     def serve(self, requests: Sequence[Request], *, gen_len: int,
               max_len: int, temperature: float = 0.0, seed: int = 0,
-              allow_miss: bool = True, return_logits: bool = False):
+              allow_miss: bool = True, return_logits: bool = False,
+              static: bool | None = None,
+              check_contract: bool | None = None):
         """Serve one batch. Returns tokens [B, P+gen_len] in REQUEST order
-        (or (tokens, per-step logits) when ``return_logits``)."""
+        (or (tokens, per-step logits) when ``return_logits``).
+
+        Prompt lengths: same-length batches run the legacy STATIC path
+        (one shared prefill, bitwise guarantees as documented).
+        Mixed-length batches are admitted through the continuous-batching
+        engine (``repro.launch.engine``) — per-row prefill at each
+        request's true length, one fixed-shape decode — and return a LIST
+        of 1-D [P_i + gen_len] token arrays in request order (ragged
+        shapes don't stack). ``static=True`` forces the legacy path and
+        keeps its same-length-bucket error; ``static=False`` forces the
+        engine even for uniform lengths. ``return_logits`` is a
+        static-path-only debugging hook."""
         if not requests:
             raise ValueError("empty request batch")
         prompts = [np.asarray(r.prompt, np.int32) for r in requests]
         P = prompts[0].shape[-1]
-        if any(p.shape[-1] != P for p in prompts):
+        mixed = any(p.shape[-1] != P for p in prompts)
+        if static is None:
+            static = not mixed
+        if not static:
+            if return_logits:
+                raise ValueError(
+                    "return_logits is only available on the static path "
+                    "(the engine streams per-request tokens instead)")
+            if check_contract:
+                raise ValueError(
+                    "check_contract is only meaningful on the static "
+                    "path: the engine schedules on host mirrors and "
+                    "never reads cache['len'] back, so there is no "
+                    "blocking contract check to enable")
+            if any(p.shape[-1] + gen_len > max_len for p in prompts):
+                raise ValueError(
+                    f"max_len={max_len} < P+gen_len="
+                    f"{max(p.shape[-1] for p in prompts) + gen_len}")
+            return self._serve_continuous(
+                requests, prompts, gen_len=gen_len, max_len=max_len,
+                temperature=temperature, seed=seed, allow_miss=allow_miss)
+        if mixed:
             raise ValueError(
-                f"all prompts in one batch must share a length bucket; got "
-                f"{sorted({p.shape[-1] for p in prompts})} — bucket "
-                f"requests by prompt length before batching")
+                f"all prompts in one batch must share a length bucket on "
+                f"the legacy static path; got "
+                f"{sorted({p.shape[-1] for p in prompts})} — serve with "
+                f"static=None/False to admit mixed lengths through the "
+                f"continuous-batching engine, or bucket requests by "
+                f"prompt length before batching")
         if max_len < P + gen_len:
             raise ValueError(f"max_len={max_len} < P+gen_len={P + gen_len}")
 
@@ -291,11 +412,73 @@ class MultiTenantServer:
         tokens, logits = _decode_loop(
             prefill, decode, self.params, adapters, toks, prompt_len=P,
             gen_len=gen_len, pad=pad, temperature=temperature, seed=seed,
-            collect_logits=return_logits)
+            collect_logits=return_logits, check_contract=check_contract)
         tokens = jnp.asarray(np.asarray(tokens)[inv])
         if return_logits:
             return tokens, [step[inv] for step in logits]
         return tokens
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching server (slot-scheduled; see repro.launch.engine).
+# ---------------------------------------------------------------------------
+
+class EngineServer:
+    """Request-routed CONTINUOUS serving over one persistent
+    :class:`~repro.launch.engine.DecodeEngine`.
+
+    Where :class:`MultiTenantServer` serves one static batch at a time
+    (every row enters and leaves together), ``EngineServer`` keeps a
+    fixed slot table of ``slots`` decode rows alive across calls:
+    ``run(requests)`` queues the requests (any mix of prompt lengths and
+    adapters) and drives the engine until they drain — requests join a
+    RUNNING batch through per-row prefill, retire individually on EOS /
+    token budget / ``max_len``, and the freed rows admit whatever is
+    waiting. The compiled surface stays one (prefill-into-slot, decode)
+    pair per (slots, max_len, group-signature); per-slot adapter handles
+    resolve through the same :class:`~repro.core.AdapterStateCache` LRU
+    as the static server.
+    """
+
+    def __init__(self, mcfg, scfg: StepConfig, params, *,
+                 cache: AdapterStateCache, slots: int, max_len: int,
+                 mesh=None, temperature: float = 0.0, seed: int = 0,
+                 allow_miss: bool = True):
+        from repro.launch.engine import DecodeEngine
+        _check_cache_mesh(cache, mesh)
+        self.cache = cache
+        self.engine = DecodeEngine(mcfg, scfg, params, slots=slots,
+                                   max_len=max_len, adapter_cache=cache,
+                                   mesh=mesh, temperature=temperature,
+                                   seed=seed, allow_miss=allow_miss)
+
+    def run(self, requests: Sequence[Request], *, gen_len: int,
+            eos_id: int | None = None, on_token=None):
+        """Serve ``requests`` to completion through the slot table;
+        returns a list of :class:`~repro.launch.engine.RequestResult` in
+        request order (``result.tokens`` holds the generated tokens —
+        possibly fewer than ``gen_len`` on EOS / ``max_len`` retirement;
+        ``finish_reason == "error"`` with ``result.error`` set when a
+        request's adapter failed to resolve at admission — the other
+        requests still serve). ``on_token(request_id, token)`` streams
+        tokens as they are sampled; the engine (``self.engine``) persists
+        across calls, so throughput counters in ``self.engine.stats()``
+        accumulate — sample keys fold in each request's index within THIS
+        call, keeping temperature>0 runs call-reproducible."""
+        if not requests:
+            raise ValueError("empty request batch")
+        # All-or-nothing submission: validate every request first, so a
+        # bad one mid-batch cannot orphan earlier ones in the persistent
+        # queue (they would steal slots from — and stream into — the
+        # NEXT call).
+        checked = [self.engine.check_request(r.prompt, adapter=r.adapter,
+                                             max_new_tokens=gen_len)
+                   for r in requests]
+        rids = [self.engine.submit(p, adapter=h, max_new_tokens=gen_len,
+                                   eos_id=eos_id, key_id=i)
+                for i, (p, h) in enumerate(checked)]
+        results = {res.request_id: res for res in self.engine.run(on_token)}
+        return [results[rid] for rid in rids]
 
 
 def main() -> None:
@@ -319,6 +502,10 @@ def main() -> None:
                     help="N>1: multi-tenant demo — N adapter sets in one "
                          "LRU-cached batch, --batch rows EACH, served in "
                          "one grouped decode loop")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching demo: 2x--batch MIXED-length "
+                         "requests through the slot-scheduled engine "
+                         "(--batch slots; requests join/leave mid-decode)")
     args = ap.parse_args()
 
     mcfg = get_config(args.arch, smoke=args.smoke)
@@ -328,6 +515,32 @@ def main() -> None:
 
     rng = np.random.default_rng(args.seed)
     max_len = args.prompt_len + args.gen_len
+
+    if args.continuous:
+        cache = AdapterStateCache.for_serving(mcfg, scfg)
+        _, ad0, _ = build_state(mcfg, dcfg, args.seed + 1)
+        cache.register("tenant-0", ad0)
+        n_req = 2 * args.batch
+        requests = [Request(rng.integers(
+            0, mcfg.vocab_size,
+            int(rng.integers(args.prompt_len // 2, args.prompt_len + 1)),
+            dtype=np.int32), "tenant-0") for _ in range(n_req)]
+        server = EngineServer(mcfg, scfg, params, cache=cache,
+                              slots=args.batch, max_len=max_len,
+                              temperature=args.temperature, seed=args.seed)
+        t0 = time.time()
+        results = server.run(requests, gen_len=args.gen_len)
+        dt = time.time() - t0
+        st = server.engine.stats()
+        print(f"continuous: {n_req} mixed-length requests through "
+              f"{args.batch} slots in {dt:.2f}s "
+              f"({st.generated_tokens / dt:.1f} tok/s, "
+              f"occupancy {st.mean_occupancy:.2f}, "
+              f"{st.decode_steps} decode steps)")
+        for r in results[:2]:
+            print(f"  req{r.request_id}: P={len(r.prompt)} "
+                  f"-> {r.tokens.tolist()} ({r.finish_reason})")
+        return
 
     if args.tenants > 1:
         cache = AdapterStateCache.for_serving(mcfg, scfg)

@@ -178,6 +178,64 @@ def make_prefill_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
     return prefill_step
 
 
+def make_prefill_into_slot_step(mcfg: ModelConfig, scfg: StepConfig,
+                                mesh=None, *, seq: int):
+    """(params, adapters, cache, batch_in) -> (logits [1, V], cache').
+
+    Continuous-batching admission (see :mod:`repro.launch.engine`):
+    prefill ONE new request into row ``batch_in["slot"]`` of a RUNNING
+    batch's cache while every other row's state is untouched. ``cache``
+    must be a per-row-length cache (``init_cache(..., row_lens=True)``,
+    ``"len"`` a [B] vector). ``batch_in``: the prompt right-padded to
+    ``seq`` as ``"tokens"`` [1, seq], the true length as ``"prompt_len"``
+    (int32 scalar) and the target row as ``"slot"`` (int32 scalar). Slot
+    AND prompt_len are traced, so ONE compiled step serves every slot
+    index and every prompt length — a request joining mid-decode never
+    recompiles.
+
+    The row itself runs the SAME padded batch=1 prefill the static path
+    uses (``make_prefill_step(batch=1, padded=True)``), so the inserted
+    K/V rows and the first-token logits are bitwise the ones a static
+    serve of that request would produce; the row's cache length lands at
+    the true P (``cache["len"][slot] = P``), so the first decoded token
+    writes at position P.
+
+    Attention-only archs: an SSM state integrates every processed token
+    and cannot be rewound to a slot's true prompt length, so
+    prefill-into-slot is ill-defined for Mamba/hybrid stacks (raises at
+    build time — the engine surfaces this as its admission contract)."""
+    kinds = mcfg.layer_kinds()
+    if any(k != "attn" for k in kinds):
+        raise NotImplementedError(
+            f"continuous batching requires attention-only caches: SSM "
+            f"states integrate every processed token and cannot rewind "
+            f"to a slot's true prompt length, so prefill-into-slot is "
+            f"ill-defined (arch {mcfg.name!r} has layer kinds {kinds})")
+    row_prefill = make_prefill_step(mcfg, scfg, mesh, batch=1, seq=seq,
+                                    padded=True)
+
+    def prefill_into_slot(params, adapters, cache, batch_in):
+        logits, row_cache = row_prefill(
+            params, adapters, {"tokens": batch_in["tokens"],
+                               "prompt_len": batch_in["prompt_len"]})
+        slot = jnp.asarray(batch_in["slot"], jnp.int32)
+        zero = jnp.zeros((), jnp.int32)
+
+        def insert(big, row):
+            # big [n_scan, B, T, H, hd]; row [n_scan, 1, T, H, hd] — the
+            # single-row prefill result dropped into the slot's row.
+            start = (zero, slot) + (zero,) * (big.ndim - 2)
+            return jax.lax.dynamic_update_slice(
+                big, row.astype(big.dtype), start)
+
+        new_stack = ctree.map(insert, cache["stack"], row_cache["stack"])
+        new_len = cache["len"].at[slot].set(
+            jnp.asarray(batch_in["prompt_len"], cache["len"].dtype))
+        return logits, {"stack": new_stack, "len": new_len}
+
+    return prefill_into_slot
+
+
 def make_precompute_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
                          fold_gsb: bool = False):
     """(params, adapters) -> serving adapter tree (jit-able).
@@ -224,7 +282,11 @@ def make_decode_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
     """(params, adapters, cache, tokens [B,1]) -> (logits [B,V], cache').
 
     One new token against a pre-filled cache (the ``decode_*`` /
-    ``long_*`` shapes lower THIS, not train_step).
+    ``long_*`` shapes lower THIS, not train_step). The cache's ``"len"``
+    is either the scalar of the static serve loop or the [B] per-row
+    length vector of the continuous-batching engine — the SAME builder
+    compiles both (shape-keyed traces); with per-row lengths every slot
+    attends/writes at its own position.
 
     ``tenant_groups``: multi-tenant serving — the decode batch's rows are
     grouped by adapter (static compile-time signature); the adapter tree

@@ -130,10 +130,15 @@ def sinusoidal_embedding(positions, dim: int):
 
 def _causal_mask_bias(q_len: int, kv_len: int, offset, dtype):
     """Causal mask as an additive fp32 bias; ``offset`` = absolute position
-    of the first query row (0 for training, cache length for decode)."""
-    q_pos = offset + jnp.arange(q_len)
+    of the first query row (0 for training, cache length for decode) — a
+    scalar, or a ``[B]`` vector of per-row cache lengths (continuous
+    batching: every slot stands at its own position, so every row gets its
+    own causal frontier). Returns ``[q_len, kv_len]`` for a scalar offset,
+    ``[B, q_len, kv_len]`` for a vector one."""
+    offset = jnp.asarray(offset)
+    q_pos = offset[..., None] + jnp.arange(q_len)      # [q] or [B, q]
     k_pos = jnp.arange(kv_len)
-    ok = k_pos[None, :] <= q_pos[:, None]
+    ok = k_pos <= q_pos[..., None]                     # [..., q, kv]
     return jnp.where(ok, 0.0, -1e30).astype(_F32)
 
 
@@ -160,14 +165,22 @@ def attention_core(q, k, v, *, offset=0, chunk: int | None = None):
     if chunk is None or t <= chunk:
         scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
                             preferred_element_type=_F32) * scale
-        scores = scores + _causal_mask_bias(s, t, offset, _F32)[None, None,
-                                                               None]
+        bias = _causal_mask_bias(s, t, offset, _F32)
+        # scalar offset: one [s, t] mask for every row; per-row offsets
+        # ([B]): a [B, s, t] mask broadcast over the (kv-head, group) dims.
+        scores = scores + (bias[None, None, None] if bias.ndim == 2
+                           else bias[:, None, None])
         probs = jax.nn.softmax(scores, axis=-1)
         out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(q.dtype), v,
                          preferred_element_type=_F32)
         return out.reshape(b, s, hq, hd).astype(q.dtype)
 
     # Online softmax over KV chunks (flash-style, lax.scan over chunks).
+    if jnp.ndim(offset) != 0:
+        raise NotImplementedError(
+            "per-row cache offsets are only supported on the dense "
+            "attention path (decode s==1 and short prefills); the chunked "
+            "online-softmax scan assumes one causal frontier per batch")
     nchunks = -(-t // chunk)
     pad = nchunks * chunk - t
     if pad:
@@ -268,11 +281,28 @@ def attention(x, params, dora, mcfg, dcfg: DoRAConfig | None, *,
         new_cache = None
     else:
         pos = jnp.asarray(cache["len"])
-        zero = jnp.zeros((), pos.dtype)  # match index dtypes (x64-safe)
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (zero, pos, zero, zero))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (zero, pos, zero, zero))
+        if pos.ndim == 1:
+            # Continuous batching (launch/engine.py): "len" is a [B] vector
+            # of per-row cache lengths — every slot writes its new K/V at
+            # ITS OWN position, so requests at different depths share one
+            # fixed-shape decode step.
+            def _row_write(buf, new, p):
+                zero = jnp.zeros((), p.dtype)
+                return jax.lax.dynamic_update_slice(
+                    buf, new, (p, zero, zero))
+
+            ck = jax.vmap(_row_write)(
+                cache["k"], k.astype(cache["k"].dtype), pos)
+            cv = jax.vmap(_row_write)(
+                cache["v"], v.astype(cache["v"].dtype), pos)
+        else:
+            zero = jnp.zeros((), pos.dtype)  # match index dtypes (x64-safe)
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype),
+                (zero, pos, zero, zero))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype),
+                (zero, pos, zero, zero))
         # mask out unwritten cache rows via the causal offset: rows beyond
         # pos+s have k_pos > q_pos and are excluded by causality. Decode
         # (s == 1) always takes the dense-over-cache path: its score matrix

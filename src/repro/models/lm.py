@@ -10,7 +10,10 @@ Adapters mirror the param tree: every adapted linear leaf holds
 {"A","B","m"} stacked the same way, so the same scan slices both.
 
 Caches: attention {"k","v"} [T]-indexed ring + mamba {"h","conv"} states,
-stacked per scan unit; "len" is a scalar carried outside the scan.
+stacked per scan unit; "len" is carried outside the scan — a scalar for
+training/static serving, or a [B] per-row length vector for the
+continuous-batching engine (``init_cache(row_lens=True)``), where every
+batch row stands at its own position and requests join/leave mid-decode.
 """
 from __future__ import annotations
 
@@ -267,8 +270,14 @@ def adapter_param_count(mcfg: ModelConfig, dcfg: DoRAConfig,
 # ---------------------------------------------------------------------------
 
 def cache_shapes(mcfg: ModelConfig, batch: int, max_len: int,
-                 dtype=None):
-    """ShapeDtypeStruct tree for the decode cache."""
+                 dtype=None, *, row_lens: bool = False):
+    """ShapeDtypeStruct tree for the decode cache.
+
+    ``row_lens=True``: continuous-batching cache — ``"len"`` is a ``[B]``
+    int32 vector of per-row cache lengths instead of one scalar, so every
+    slot of the batch stands at its own position (requests join/leave
+    mid-decode; see ``repro.launch.engine``). The scalar form stays the
+    default for training/static serving."""
     dtype = dtype or mcfg.dtype
     n_scan = mcfg.num_layers // mcfg.period
     kinds = mcfg.layer_kinds()
@@ -291,12 +300,15 @@ def cache_shapes(mcfg: ModelConfig, batch: int, max_len: int,
                     (n_scan, batch, mcfg.ssm_conv - 1, mcfg.d_inner), dtype),
             }
     return {"stack": unit,
-            "len": jax.ShapeDtypeStruct((), jnp.int32)}
+            "len": jax.ShapeDtypeStruct((batch,) if row_lens else (),
+                                        jnp.int32)}
 
 
-def init_cache(mcfg: ModelConfig, batch: int, max_len: int, dtype=None):
+def init_cache(mcfg: ModelConfig, batch: int, max_len: int, dtype=None, *,
+               row_lens: bool = False):
     return ctree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                     cache_shapes(mcfg, batch, max_len, dtype))
+                     cache_shapes(mcfg, batch, max_len, dtype,
+                                  row_lens=row_lens))
 
 
 # ---------------------------------------------------------------------------
@@ -413,8 +425,13 @@ def forward(mcfg: ModelConfig, params, adapters, dcfg: DoRAConfig | None,
     length = cache["len"] if cache is not None else None
     if positions is None:
         pos_base = jnp.arange(S, dtype=jnp.int32)[None, :]
-        positions = jnp.broadcast_to(
-            pos_base if length is None else pos_base + length, (B, S))
+        if length is not None and getattr(length, "ndim", 0) == 1:
+            # Continuous batching: per-row cache lengths [B] — every slot
+            # positions its new tokens at its own depth.
+            positions = pos_base + length[:, None].astype(jnp.int32)
+        else:
+            positions = jnp.broadcast_to(
+                pos_base if length is None else pos_base + length, (B, S))
     if mcfg.pos_mode == "sinusoidal":
         x = x + L.sinusoidal_embedding(positions, mcfg.d_model).astype(
             x.dtype)

@@ -1,0 +1,547 @@
+"""Continuous-batching decode engine: the slot lifecycle (admission /
+EOS / budget / max-len retirement), the join/leave-vs-alone oracle
+equivalence, the fixed-shape compile-count acceptance, the zero-norm-work
+decode jaxpr, per-row cache semantics, the arch rejection contracts, and
+the 2-device subprocess mesh run.
+
+Oracle contract: a request served MID-STREAM (joining a running batch,
+sharing its decode step with strangers at other depths) must produce the
+same greedy tokens as the same request served alone through
+``generate()`` with the same adapter state — fp32-bitwise where the
+grouped ≥2-row guarantee applies (single-handle slot tables run the
+homogeneous gsB path; per-slot 1-row groups are allclose, see
+docs/numerics.md).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import AdapterStateCache, DoRAConfig
+from repro.launch.engine import DecodeEngine
+from repro.launch.serve import EngineServer, MultiTenantServer, Request, \
+    generate
+from repro.launch.steps import (StepConfig, make_decode_step,
+                                make_prefill_into_slot_step)
+from repro.launch.train import build_state
+from repro.models import init_cache
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+DCFG = DoRAConfig(rank=4, alpha=8.0, mode="eager")
+ARCH = "qwen2-7b"
+
+
+def _setup(tenants=1):
+    mcfg = get_config(ARCH, smoke=True)
+    scfg = StepConfig(dora=DCFG)
+    params, _, _ = build_state(mcfg, DCFG, 0)
+    cache = AdapterStateCache.for_serving(mcfg, scfg)
+    for t in range(tenants):
+        _, ad, _ = build_state(mcfg, DCFG, 10 + t)
+        cache.register(f"t{t}", ad)
+    return mcfg, scfg, params, cache
+
+
+def _alone(mcfg, scfg, params, cache, prompt, gen_len, max_len, adapter):
+    """The oracle: the same request served alone through generate()."""
+    toks = np.asarray(generate(
+        mcfg, params, cache.current_handle(adapter), scfg,
+        np.asarray(prompt)[None], gen_len=gen_len, max_len=max_len,
+        adapter_cache=cache))
+    return toks[0, len(prompt):]
+
+
+class TestSlotLifecycle:
+    ML = 14
+
+    def test_join_leave_oracle_equivalence(self):
+        """ACCEPTANCE: 3 mixed-length requests through 2 slots — r1
+        retires early, r2 joins the RUNNING batch — and every request's
+        greedy tokens equal serving it alone through generate()."""
+        mcfg, scfg, params, cache = _setup()
+        eng = DecodeEngine(mcfg, scfg, params, slots=2, max_len=self.ML,
+                          adapter_cache=cache)
+        rng = np.random.default_rng(0)
+        reqs = [(rng.integers(0, mcfg.vocab_size, P, dtype=np.int32), g)
+                for P, g in [(5, 6), (6, 3), (4, 5)]]
+        for p, g in reqs:
+            eng.submit(p, adapter="t0", max_new_tokens=g)
+        results = eng.run()
+        assert [r.request_id for r in results] == [0, 1, 2]
+        # r2 could only start after a retirement freed a slot
+        assert results[2].admitted_step > results[1].finished_step \
+            or results[2].admitted_step > results[0].finished_step
+        for r, (p, g) in zip(results, reqs):
+            assert r.finish_reason == "length"
+            np.testing.assert_array_equal(
+                r.tokens, _alone(mcfg, scfg, params, cache, p, g, self.ML,
+                                 "t0"),
+                err_msg=f"request {r.request_id} served mid-stream "
+                        f"diverged from serving it alone")
+
+    def test_streaming_and_prompt_roundtrip(self):
+        mcfg, scfg, params, cache = _setup()
+        eng = DecodeEngine(mcfg, scfg, params, slots=2, max_len=10,
+                          adapter_cache=cache)
+        rng = np.random.default_rng(1)
+        p = rng.integers(0, mcfg.vocab_size, 5, dtype=np.int32)
+        rid = eng.submit(p, adapter="t0", max_new_tokens=3)
+        seen = []
+        results = eng.run(on_token=lambda r, t: seen.append((r, t)))
+        np.testing.assert_array_equal(results[0].prompt, p)
+        assert seen == [(rid, int(t)) for t in results[0].tokens]
+
+    def test_admission_under_full_slot_table(self):
+        """5 requests, 2 slots: the table never overflows, admission is
+        FIFO, every request completes, and the queue drains through
+        retirements (prefills == admissions == 5)."""
+        mcfg, scfg, params, cache = _setup()
+        eng = DecodeEngine(mcfg, scfg, params, slots=2, max_len=10,
+                          adapter_cache=cache)
+        rng = np.random.default_rng(2)
+        reqs = [(rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32),
+                 2 + (i % 3)) for i in range(5)]
+        for p, g in reqs:
+            eng.submit(p, adapter="t0", max_new_tokens=g)
+        results = eng.run()
+        st = eng.stats()
+        assert st.prefills == st.admitted == st.retired == 5
+        assert not eng.has_work()
+        # FIFO admission: request i is never admitted before request i-1
+        admits = [r.admitted_step for r in results]
+        assert admits == sorted(admits)
+        # never more than `slots` rows active in one decode step
+        assert st.slot_steps <= 2 * st.decode_steps
+        for r, (p, g) in zip(results, reqs):
+            np.testing.assert_array_equal(
+                r.tokens, _alone(mcfg, scfg, params, cache, p, g, 10, "t0"))
+
+    def test_eos_retirement_frees_slot_for_waiting_request(self):
+        """A request retiring on EOS stops early AND hands its row to the
+        queue; the late joiner still matches its oracle."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(3)
+        p0 = rng.integers(0, mcfg.vocab_size, 5, dtype=np.int32)
+        ref = _alone(mcfg, scfg, params, cache, p0, 6, 14, "t0")
+        eos = int(ref[2])            # a mid-stream greedy token as EOS
+        stop = int(np.where(ref == eos)[0][0])   # earliest occurrence
+        assert stop < len(ref) - 1, "eos must cut generation short"
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=14,
+                          adapter_cache=cache)
+        eng.submit(p0, adapter="t0", max_new_tokens=6, eos_id=eos)
+        p1 = rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32)
+        eng.submit(p1, adapter="t0", max_new_tokens=3)
+        r0, r1 = eng.run()
+        assert r0.finish_reason == "eos"
+        np.testing.assert_array_equal(r0.tokens, ref[:stop + 1])
+        assert r1.admitted_step > r0.finished_step
+        np.testing.assert_array_equal(
+            r1.tokens, _alone(mcfg, scfg, params, cache, p1, 3, 14, "t0"))
+
+    def test_max_len_retirement_caps_generation(self):
+        """A budget larger than the cache bound retires at max_len with
+        exactly max_len - P tokens (the row never writes out of bounds)."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(4)
+        p = rng.integers(0, mcfg.vocab_size, 6, dtype=np.int32)
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=10,
+                          adapter_cache=cache)
+        eng.submit(p, adapter="t0", max_new_tokens=50)
+        (r,) = eng.run()
+        assert r.finish_reason == "max_len"
+        assert r.tokens.shape == (4,)       # max_len - P
+        np.testing.assert_array_equal(
+            r.tokens, _alone(mcfg, scfg, params, cache, p, 4, 10, "t0"))
+
+    def test_single_token_budget_never_occupies_a_decode_row(self):
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(5)
+        p = rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32)
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=8,
+                          adapter_cache=cache)
+        eng.submit(p, adapter="t0", max_new_tokens=1)
+        (r,) = eng.run()
+        assert r.tokens.shape == (1,) and r.finish_reason == "length"
+        assert eng.stats().decode_steps == 0
+        np.testing.assert_array_equal(
+            r.tokens, _alone(mcfg, scfg, params, cache, p, 1, 8, "t0"))
+
+    def test_submit_contracts(self):
+        mcfg, scfg, params, cache = _setup()
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=6,
+                          adapter_cache=cache)
+        with pytest.raises(ValueError, match="P \\+ 1 <= max_len"):
+            eng.submit(np.zeros(6, np.int32), adapter="t0",
+                       max_new_tokens=2)
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng.submit(np.zeros(3, np.int32), adapter="t0",
+                       max_new_tokens=0)
+        with pytest.raises(ValueError, match="adapter id or handle"):
+            eng.submit(np.zeros(3, np.int32), max_new_tokens=2)
+
+
+class TestCompiledSurface:
+    def test_compile_count_fixed_shape(self):
+        """ACCEPTANCE: a join/leave trace over mixed prompt lengths and
+        budgets compiles EXACTLY one (prefill-into-slot, decode) pair —
+        slot index, prompt length and per-row depths are all traced."""
+        mcfg, scfg, params, cache = _setup()
+        eng = DecodeEngine(mcfg, scfg, params, slots=2, max_len=12,
+                          adapter_cache=cache)
+        rng = np.random.default_rng(6)
+        for i in range(5):
+            eng.submit(rng.integers(0, mcfg.vocab_size, 3 + i,
+                                    dtype=np.int32),
+                       adapter="t0", max_new_tokens=1 + (i % 3))
+        eng.run()
+        counts = eng.compile_counts()
+        assert counts["prefill_into_slot"] == 1, counts
+        assert counts["decode"] == {None: 1}, counts
+
+    def test_multi_adapter_group_signatures_compile_once_each(self):
+        """Mixed-handle slot tables compile one decode per grouping
+        signature; re-serving the same mix reuses them all."""
+        mcfg, scfg, params, cache = _setup(tenants=2)
+        eng = DecodeEngine(mcfg, scfg, params, slots=4, max_len=12,
+                          adapter_cache=cache)
+        rng = np.random.default_rng(7)
+
+        def serve_mix():
+            for t in (0, 0, 1, 1):
+                eng.submit(rng.integers(0, mcfg.vocab_size, 5,
+                                        dtype=np.int32),
+                           adapter=f"t{t}", max_new_tokens=4)
+            return eng.run()
+
+        serve_mix()
+        counts1 = eng.compile_counts()
+        serve_mix()
+        assert eng.compile_counts() == counts1
+        assert all(n == 1 for n in counts1["decode"].values()), counts1
+        assert ((0, 2), (2, 2)) in counts1["decode"]
+
+    def test_engine_decode_jaxpr_has_zero_norm_work(self):
+        """ACCEPTANCE: the engine's decode step — per-row-length cache,
+        folded serving state — contains zero ``dora_wnorm`` ops."""
+        mcfg, scfg, params, cache = _setup()
+        state = cache.get_state(params, cache.current_handle("t0"))
+        dec_cache = init_cache(mcfg, 2, 8, row_lens=True)
+        decode = make_decode_step(mcfg, scfg, None, batch=2)
+        jaxpr = str(jax.make_jaxpr(decode)(
+            params, state, dec_cache,
+            {"tokens": jnp.zeros((2, 1), jnp.int32)}))
+        assert "dora_wnorm" not in jaxpr
+
+    def test_per_row_cache_lengths(self):
+        """The cache's "len" is a [slots] vector with each row at its own
+        depth: after a prefill at P and d decode writes, row j stands at
+        P_j + d_j — fetched ONCE here for the assertion; the scheduler
+        itself never reads it back (host mirrors only)."""
+        mcfg, scfg, params, cache = _setup()
+        eng = DecodeEngine(mcfg, scfg, params, slots=2, max_len=12,
+                          adapter_cache=cache)
+        rng = np.random.default_rng(8)
+        # g=4: 3 decode writes; g=2: 1 decode write. Both admitted at
+        # step 0, so slot 1 idles (len += 1 per decode step, garbage
+        # rows) after its request retires — until the cache is reused.
+        eng.submit(rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32),
+                   adapter="t0", max_new_tokens=4)
+        eng.submit(rng.integers(0, mcfg.vocab_size, 6, dtype=np.int32),
+                   adapter="t0", max_new_tokens=2)
+        eng.run()
+        lens = np.asarray(eng.cache["len"])
+        assert lens.shape == (2,)
+        # slot 0: P=4, three decode writes -> 7
+        assert lens[0] == 7, lens
+        # slot 1: P=6 + one live write + one idle decode tick -> >= 7
+        # (idle rows keep counting; re-admission rewinds via prefill)
+        assert lens[1] >= 7, lens
+
+
+class TestArchContracts:
+    def test_ssm_arch_rejected_naming_the_reason(self):
+        """SATELLITE: Mamba/SSM admission fails LOUDLY — the state
+        integrates every token and cannot rewind to a slot's true prompt
+        length."""
+        mcfg = get_config("falcon-mamba-7b", smoke=True)
+        scfg = StepConfig(dora=DCFG)
+        params, adapters, _ = build_state(mcfg, DCFG, 0)
+        with pytest.raises(NotImplementedError,
+                           match="integrate every processed token"):
+            DecodeEngine(mcfg, scfg, params, slots=2, max_len=8,
+                         adapters=adapters)
+        with pytest.raises(NotImplementedError, match="cannot rewind"):
+            make_prefill_into_slot_step(mcfg, scfg, None, seq=8)
+
+    def test_moe_arch_rejected(self):
+        mcfg = get_config("qwen2-moe-a2.7b", smoke=True)
+        scfg = StepConfig(dora=DCFG)
+        params, adapters, _ = build_state(mcfg, DCFG, 0)
+        with pytest.raises(NotImplementedError, match="couples batch rows"):
+            DecodeEngine(mcfg, scfg, params, slots=2, max_len=8,
+                         adapters=adapters)
+
+    def test_engine_requires_exactly_one_adapter_source(self):
+        """Neither source is an error; BOTH is too — a handle-less active
+        slot would be indistinguishable from a free one in the grouping
+        and silently decode under a neighbour's tenant state."""
+        mcfg, scfg, params, cache = _setup()
+        with pytest.raises(ValueError, match="not both, not neither"):
+            DecodeEngine(mcfg, scfg, params, slots=2, max_len=8)
+        state = cache.get_state(params, cache.current_handle("t0"))
+        with pytest.raises(ValueError, match="not both, not neither"):
+            DecodeEngine(mcfg, scfg, params, slots=2, max_len=8,
+                         adapters=state, adapter_cache=cache)
+
+    def test_failed_resolution_errors_request_without_wedging(self):
+        """A stale handle hit at ADMISSION (tenant updated while the
+        request waited) can NEVER re-resolve — versions only move
+        forward — so the request is dropped WITH an errored result:
+        never silently lost, never wedging the FIFO behind it."""
+        from repro.core import AdapterCacheMiss
+        mcfg, scfg, params, cache = _setup()
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=10,
+                          adapter_cache=cache)
+        rng = np.random.default_rng(12)
+        stale = cache.current_handle("t0")
+        _, ad_new, _ = build_state(mcfg, DCFG, 99)
+        cache.update("t0", ad_new)          # stale's version is now behind
+        p0 = rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32)
+        p1 = rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32)
+        eng.submit(p0, adapter=stale, max_new_tokens=2)
+        eng.submit(p1, adapter="t0", max_new_tokens=2)   # current version
+        r0, r1 = eng.run()
+        assert r0.finish_reason == "error"
+        assert isinstance(r0.error, AdapterCacheMiss)
+        assert "stale adapter handle" in str(r0.error)
+        assert r0.tokens.shape == (0,)
+        # the request QUEUED BEHIND the stale one still served normally
+        assert r1.finish_reason == "length" and r1.tokens.shape == (2,)
+        assert not eng.has_work() and eng.stats().admitted == 1
+
+    def test_run_delivers_results_exactly_once(self):
+        """The engine persists across run() calls (EngineServer /
+        MultiTenantServer reuse it): results are handed over once, not
+        retained forever."""
+        mcfg, scfg, params, cache = _setup()
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=8,
+                          adapter_cache=cache)
+        rng = np.random.default_rng(13)
+        eng.submit(rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32),
+                   adapter="t0", max_new_tokens=2)
+        first = eng.run()
+        assert len(first) == 1
+        assert eng.results() == [] and eng.run() == []
+        eng.submit(rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32),
+                   adapter="t0", max_new_tokens=2)
+        second = eng.run()
+        assert [r.request_id for r in second] == [1]
+
+    def test_cache_mesh_fingerprint_mismatch_rejected(self):
+        from repro.launch.mesh import make_debug_mesh
+        mcfg, scfg, params, cache = _setup()     # cache keyed mesh=None
+        mesh = make_debug_mesh(1, 1)
+        with pytest.raises(ValueError, match="keyed for sharding"):
+            DecodeEngine(mcfg, scfg, params, slots=2, max_len=8,
+                         adapter_cache=cache, mesh=mesh)
+
+
+class TestEngineServer:
+    def test_mixed_lengths_and_adapters_match_oracle(self):
+        """EngineServer.run: mixed prompt lengths AND mixed adapters in
+        one slot table; every request matches its generate() oracle."""
+        mcfg, scfg, params, cache = _setup(tenants=2)
+        server = EngineServer(mcfg, scfg, params, cache=cache, slots=3,
+                              max_len=14)
+        rng = np.random.default_rng(9)
+        reqs, meta = [], []
+        for i, (P, t) in enumerate([(5, 0), (7, 1), (4, 0), (6, 1)]):
+            p = rng.integers(0, mcfg.vocab_size, P, dtype=np.int32)
+            reqs.append(Request(p, f"t{t}"))
+            meta.append((p, f"t{t}"))
+        results = server.run(reqs, gen_len=4)
+        for r, (p, t) in zip(results, meta):
+            np.testing.assert_array_equal(
+                r.tokens, _alone(mcfg, scfg, params, cache, p, 4, 14, t),
+                err_msg=f"request {r.request_id} ({t})")
+        assert server.engine.stats().mean_occupancy > 0.5
+
+    def test_multitenant_server_routes_mixed_lengths_through_engine(self):
+        """SATELLITE: MultiTenantServer.serve admits mixed-length batches
+        via the engine (list of ragged rows, each matching its oracle);
+        static=True keeps the legacy length-bucket error."""
+        mcfg, scfg, params, cache = _setup(tenants=2)
+        server = MultiTenantServer(mcfg, scfg, params, cache=cache)
+        rng = np.random.default_rng(10)
+        reqs = [Request(rng.integers(0, mcfg.vocab_size, P,
+                                     dtype=np.int32), f"t{t}")
+                for P, t in [(5, 0), (7, 1), (6, 0)]]
+        out = server.serve(reqs, gen_len=3, max_len=12)
+        assert isinstance(out, list)
+        for row, r in zip(out, reqs):
+            p = np.asarray(r.prompt)
+            np.testing.assert_array_equal(row[:len(p)], p)
+            np.testing.assert_array_equal(
+                row[len(p):],
+                _alone(mcfg, scfg, params, cache, p, 3, 12, r.adapter))
+        with pytest.raises(ValueError, match="length bucket"):
+            server.serve(reqs, gen_len=3, max_len=12, static=True)
+        with pytest.raises(ValueError, match="return_logits"):
+            server.serve(reqs, gen_len=3, max_len=12, return_logits=True)
+
+    def test_failed_serve_does_not_poison_the_cached_engine(self):
+        """A serve() that raises on a stale handle must leave the CACHED
+        engine servable: the next call with only valid adapters works
+        (regression: the stale request used to stay queued forever)."""
+        from repro.core import AdapterCacheMiss
+        mcfg, scfg, params, cache = _setup(tenants=2)
+        server = MultiTenantServer(mcfg, scfg, params, cache=cache)
+        rng = np.random.default_rng(14)
+        stale = cache.current_handle("t0")
+        _, ad_new, _ = build_state(mcfg, DCFG, 98)
+        cache.update("t0", ad_new)
+        bad = [Request(rng.integers(0, mcfg.vocab_size, 5,
+                                    dtype=np.int32), stale),
+               Request(rng.integers(0, mcfg.vocab_size, 6,
+                                    dtype=np.int32), "t1")]
+        with pytest.raises(AdapterCacheMiss, match="stale"):
+            server.serve(bad, gen_len=2, max_len=10)
+        good = [Request(rng.integers(0, mcfg.vocab_size, 5,
+                                     dtype=np.int32), "t0"),
+                Request(rng.integers(0, mcfg.vocab_size, 6,
+                                     dtype=np.int32), "t1")]
+        out = server.serve(good, gen_len=2, max_len=10)
+        assert [len(o) for o in out] == [7, 8]
+
+    def test_bad_request_mid_batch_queues_nothing(self):
+        """All-or-nothing submission: a request that fails validation in
+        the MIDDLE of a batch (unregistered adapter id / oversized
+        prompt) fails the whole call before anything is queued — no
+        orphans stealing slots from (or streaming into) the next call."""
+        mcfg, scfg, params, cache = _setup()
+        server = EngineServer(mcfg, scfg, params, cache=cache, slots=2,
+                              max_len=10)
+        rng = np.random.default_rng(16)
+        ok = Request(rng.integers(0, mcfg.vocab_size, 5,
+                                  dtype=np.int32), "t0")
+        with pytest.raises(KeyError, match="not registered"):
+            server.run([ok, Request(ok.prompt, "typo-id")], gen_len=2)
+        with pytest.raises(ValueError, match="P \\+ 1 <= max_len"):
+            server.run([ok, Request(np.zeros(10, np.int32), "t0")],
+                       gen_len=2)
+        assert not server.engine.has_work()
+        seen = []
+        results = server.run([ok], gen_len=2,
+                             on_token=lambda r, t: seen.append(r))
+        assert len(results) == 1 and results[0].tokens.shape == (2,)
+        # only the surviving call's request ever streamed
+        assert set(seen) == {results[0].request_id}
+
+    def test_mixed_length_temperature_reproducible_across_calls(self):
+        """Sampling keys fold in the request's index within the CALL, so
+        repeated serves through the persistent cached engine reproduce
+        their tokens (the engine's global request ids keep growing)."""
+        mcfg, scfg, params, cache = _setup()
+        server = MultiTenantServer(mcfg, scfg, params, cache=cache)
+        rng = np.random.default_rng(15)
+        reqs = [Request(rng.integers(0, mcfg.vocab_size, P,
+                                     dtype=np.int32), "t0")
+                for P in (5, 7)]
+        out1 = server.serve(reqs, gen_len=3, max_len=12, temperature=0.9,
+                            seed=5)
+        out2 = server.serve(reqs, gen_len=3, max_len=12, temperature=0.9,
+                            seed=5)
+        for a, b in zip(out1, out2):
+            np.testing.assert_array_equal(a, b)
+
+    def test_uniform_lengths_forced_through_engine_match_static(self):
+        """static=False on a uniform-length batch: engine tokens equal
+        the static path's tokens (same greedy math, different scheduler)."""
+        mcfg, scfg, params, cache = _setup()
+        server = MultiTenantServer(mcfg, scfg, params, cache=cache)
+        rng = np.random.default_rng(11)
+        reqs = [Request(rng.integers(0, mcfg.vocab_size, 6,
+                                     dtype=np.int32), "t0")
+                for _ in range(3)]
+        static = np.asarray(server.serve(reqs, gen_len=3, max_len=10))
+        cont = server.serve(reqs, gen_len=3, max_len=10, static=False)
+        for row, srow in zip(cont, static):
+            np.testing.assert_array_equal(row, srow)
+
+
+# ---------------------------------------------------------------------------
+# Forced 2-device mesh (subprocess): join/leave trace under SPMD.
+# ---------------------------------------------------------------------------
+
+def _run_subprocess(code: str, devices: int):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = SRC
+    env.pop("REPRO_FORCE_TIER", None)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nERR:\n{out.stderr}"
+    return out.stdout
+
+
+_ENGINE_SPMD = """
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core import AdapterStateCache, DoRAConfig
+    from repro.launch.engine import DecodeEngine
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.serve import generate
+    from repro.launch.steps import StepConfig
+    from repro.launch.train import build_state
+
+    assert jax.device_count() == 2
+    mesh = make_debug_mesh(2, 1)     # slots shard over the data axis
+    DCFG = DoRAConfig(rank=4, alpha=8.0, mode="eager")
+    mcfg = get_config("qwen2-7b", smoke=True)
+    scfg = StepConfig(dora=DCFG)
+    params, _, _ = build_state(mcfg, DCFG, 0)
+    cache = AdapterStateCache.for_serving(mcfg, scfg, mesh)
+    _, ad, _ = build_state(mcfg, DCFG, 10)
+    cache.register("t0", ad)
+
+    ML = 12
+    eng = DecodeEngine(mcfg, scfg, params, slots=4, max_len=ML,
+                       adapter_cache=cache, mesh=mesh)
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, mcfg.vocab_size, P, dtype=np.int32), g)
+            for P, g in [(5, 5), (6, 2), (4, 4), (5, 3), (6, 4)]]
+    for p, g in reqs:
+        eng.submit(p, adapter="t0", max_new_tokens=g)
+    results = eng.run()
+    counts = eng.compile_counts()
+    assert counts["prefill_into_slot"] == 1, counts
+    assert counts["decode"] == {None: 1}, counts
+    for r, (p, g) in zip(results, reqs):
+        ref = np.asarray(generate(mcfg, params, cache.current_handle("t0"),
+                                  scfg, p[None], gen_len=g, max_len=ML,
+                                  adapter_cache=cache, mesh=mesh))
+        assert np.array_equal(r.tokens, ref[0, len(p):]), r.request_id
+    print("ENGINE_SPMD_OK")
+"""
+
+
+@pytest.mark.slow
+def test_engine_spmd_join_leave():
+    """Acceptance on a forced 2-device CPU mesh: a join/leave trace
+    through slots sharded over the data axis serves every request the
+    same greedy tokens as generate() alone under the same mesh, with one
+    compiled (prefill, decode) pair."""
+    out = _run_subprocess(_ENGINE_SPMD, 2)
+    assert "ENGINE_SPMD_OK" in out, out

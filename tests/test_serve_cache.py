@@ -235,6 +235,85 @@ class TestPaddedPrefill:
         np.testing.assert_array_equal(t1, t2)
 
 
+class TestDecodeLoopContract:
+    """The prefill/decode cache-length contract: hard errors (the
+    satellite keeps them), but behind a debug switch — the serving path
+    no longer pays an int(cache['len']) device sync per prefill."""
+    DCFG = DoRAConfig(rank=4, alpha=8.0, mode="eager")
+
+    def _loop_parts(self):
+        from repro.launch.steps import make_decode_step, make_prefill_step
+        mcfg, scfg, params, adapters = _state(self.DCFG)
+        B, L = 2, 10
+        prefill = jax.jit(make_prefill_step(mcfg, scfg, None, batch=B,
+                                            seq=L, padded=True))
+        decode = jax.jit(make_decode_step(mcfg, scfg, None, batch=B))
+        rng = np.random.default_rng(11)
+        toks = jnp.asarray(rng.integers(0, mcfg.vocab_size, (B, 6)),
+                           jnp.int32)
+        return params, adapters, prefill, decode, toks, L - 6
+
+    def test_contract_violation_raises_when_checked(self):
+        from repro.launch.serve import _decode_loop
+        params, adapters, prefill, decode, toks, pad = self._loop_parts()
+
+        def bad_prefill(p, a, b):
+            logits, cache = prefill(p, a, b)
+            return logits, {**cache, "len": cache["len"] + 1}
+
+        with pytest.raises(RuntimeError, match="prefill left cache"):
+            _decode_loop(bad_prefill, decode, params, adapters, toks,
+                         prompt_len=6, gen_len=2, pad=pad, temperature=0.0,
+                         seed=0, check_contract=True)
+
+        def bad_decode(p, a, c, b):
+            logits, cache = decode(p, a, c, b)
+            return logits, {**cache, "len": cache["len"] - 1}
+
+        with pytest.raises(RuntimeError, match="decode wrote at"):
+            _decode_loop(prefill, bad_decode, params, adapters, toks,
+                         prompt_len=6, gen_len=2, pad=pad, temperature=0.0,
+                         seed=0, check_contract=True)
+
+    def test_checks_off_by_default_no_host_sync(self, monkeypatch):
+        """Default serving: the SAME violations pass through unchecked —
+        proof the blocking int() sync is no longer on the hot path — and
+        REPRO_SERVE_DEBUG=1 turns the guard back on without a code
+        change."""
+        from repro.launch.serve import _decode_loop
+        monkeypatch.delenv("REPRO_SERVE_DEBUG", raising=False)
+        params, adapters, prefill, decode, toks, pad = self._loop_parts()
+
+        def bad_prefill(p, a, b):
+            logits, cache = prefill(p, a, b)
+            return logits, {**cache, "len": cache["len"] + 1}
+
+        # violation NOT detected (check skipped)...
+        out, _ = _decode_loop(bad_prefill, decode, params, adapters, toks,
+                              prompt_len=6, gen_len=2, pad=pad,
+                              temperature=0.0, seed=0)
+        assert out.shape == (2, 8)
+        # ...until the env switch re-enables the guard
+        monkeypatch.setenv("REPRO_SERVE_DEBUG", "1")
+        with pytest.raises(RuntimeError, match="prefill left cache"):
+            _decode_loop(bad_prefill, decode, params, adapters, toks,
+                         prompt_len=6, gen_len=2, pad=pad,
+                         temperature=0.0, seed=0)
+
+    def test_generate_forwards_check_contract(self):
+        from repro.launch.serve import generate
+        mcfg, scfg, params, adapters = _state(self.DCFG)
+        rng = np.random.default_rng(12)
+        prompts = rng.integers(0, mcfg.vocab_size, (2, 6), dtype=np.int32)
+        t1 = np.asarray(generate(mcfg, params, adapters, scfg, prompts,
+                                 gen_len=2, max_len=10,
+                                 check_contract=True))
+        t2 = np.asarray(generate(mcfg, params, adapters, scfg, prompts,
+                                 gen_len=2, max_len=10,
+                                 check_contract=False))
+        np.testing.assert_array_equal(t1, t2)
+
+
 class TestStackedKwargs:
     DCFG = DoRAConfig(rank=4, alpha=8.0, mode="eager")
 

@@ -315,12 +315,22 @@ class TestServer:
             server.serve(reqs, gen_len=1, max_len=self.ML + n)
         assert len(server._steps) == 2
 
-    def test_mixed_prompt_lengths_rejected(self):
+    def test_mixed_prompt_lengths_route_through_engine(self):
+        """Mixed-length batches are ADMITTED (continuous-batching engine,
+        per-row prefill) — the legacy length-bucket error survives only
+        on the forced static path. Full oracle coverage lives in
+        tests/test_engine.py."""
         mcfg, scfg, params, cache, server = self._setup()
-        reqs = [Request(np.zeros(6, np.int32), "t0"),
-                Request(np.zeros(7, np.int32), "t1")]
+        rng = np.random.default_rng(7)
+        reqs = [Request(rng.integers(0, mcfg.vocab_size, 6,
+                                     dtype=np.int32), "t0"),
+                Request(rng.integers(0, mcfg.vocab_size, 7,
+                                     dtype=np.int32), "t1")]
+        out = server.serve(reqs, gen_len=2, max_len=self.ML)
+        assert isinstance(out, list)
+        assert [len(o) for o in out] == [8, 9]
         with pytest.raises(ValueError, match="length bucket"):
-            server.serve(reqs, gen_len=2, max_len=self.ML)
+            server.serve(reqs, gen_len=2, max_len=self.ML, static=True)
 
 
 # ---------------------------------------------------------------------------
