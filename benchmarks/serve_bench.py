@@ -349,6 +349,77 @@ def simulate_static(trace, *, slots: int) -> dict:
             "mean_occupancy": occ}
 
 
+def simulate_speculative(trace, *, slots: int, max_len: int, k: int,
+                         accept_rate: float = 1.0) -> dict:
+    """Pure-host mirror of the SPECULATIVE engine's scheduling: same FIFO
+    admission/retirement as :func:`simulate_continuous`, but a tick where
+    every active row's k+1 window fits under ``max_len`` runs k draft
+    forwards + ONE verify, each row emitting ``min(a + 1, budget)``
+    tokens (``a`` accepted drafts plus the verify's own token); ticks
+    with a row at its max_len cap fall back to a plain decode step — the
+    engine's exact policy.
+
+    ``accept_rate`` sets the deterministic per-row accepted-draft count
+    ``a = round(accept_rate * k)``. At 1.0 this mirrors the benchmark
+    engine EXACTLY: the bench adapters are B=0 identity, so the base-only
+    draft is bitwise the full path and every draft is accepted —
+    ``run_speculative`` asserts all seven counters against the real
+    engine. Lower rates model a tenant whose adapter diverges from the
+    base (fewer tokens per verify, more verify steps)."""
+    a_const = int(round(accept_rate * k))
+    if not 0 <= a_const <= k:
+        raise ValueError(f"accept_rate={accept_rate} with k={k}")
+    from collections import deque
+    queue: deque = deque()
+    table = [None] * slots      # [remaining budget, next write pos]
+    i, step = 0, 0
+    decode_steps = prefills = generated = slot_steps = 0
+    draft_steps = verify_steps = accepted = 0
+    n = len(trace)
+
+    def has_work():
+        return bool(queue) or any(v is not None for v in table)
+
+    while i < n or has_work():
+        while i < n and trace[i]["arrival_step"] <= step:
+            queue.append(trace[i])
+            i += 1
+        for j in range(slots):
+            while table[j] is None and queue:
+                r = queue.popleft()
+                prefills += 1
+                generated += 1                  # first token from prefill
+                if r["gen_len"] - 1 > 0:
+                    table[j] = [r["gen_len"] - 1, r["prompt_len"]]
+        active = [j for j in range(slots) if table[j] is not None]
+        if active:
+            if all(table[j][1] + k + 1 <= max_len for j in active):
+                draft_steps += k
+                verify_steps += 1
+                for j in active:
+                    accepted += a_const
+                    emit = min(a_const + 1, table[j][0])
+                    generated += emit
+                    table[j][0] -= emit
+                    table[j][1] += emit
+                    if table[j][0] == 0:
+                        table[j] = None
+            else:
+                decode_steps += 1
+                slot_steps += len(active)
+                for j in active:
+                    generated += 1
+                    table[j][0] -= 1
+                    table[j][1] += 1
+                    if table[j][0] == 0:
+                        table[j] = None
+        step += 1
+    return {"steps": step, "decode_steps": decode_steps,
+            "prefills": prefills, "generated_tokens": generated,
+            "slot_steps": slot_steps, "draft_steps": draft_steps,
+            "verify_steps": verify_steps, "accepted_drafts": accepted}
+
+
 def _drive_engine(engine, trace, prompts, gen_lens):
     """The arrival loop ``simulate_continuous`` mirrors: submit requests
     as their arrival step comes due, tick the engine once per step."""
@@ -466,8 +537,111 @@ def run_continuous(arch="qwen2-7b", *, smoke=True, rank=64, slots=4,
     return out
 
 
+def run_speculative(arch="qwen2-7b", *, smoke=True, rank=64, slots=4,
+                    k=3, verbose=True) -> dict:
+    """Speculative vs plain decode under the SAME committed arrival trace
+    as ``run_continuous``. Deterministic and gated twice over:
+
+      - the accept-rate schedule model (``simulate_speculative``) at
+        accept_rate=1.0 must reproduce the real identity-adapter engine's
+        counters EXACTLY (asserted here, like ``simulate_continuous``);
+      - the committed model must show speculative needing FEWER full-DoRA
+        verify steps than plain decode emits tokens (every plain decode
+        step is one full-DoRA forward per token; gated in
+        ``scripts/check_bench_drift.py`` — including at the degraded
+        accept rate, so the win can't silently hinge on perfect drafts).
+
+    The greedy token streams of the two engines are asserted bitwise
+    identical (the tentpole's oracle)."""
+    from repro.launch.engine import DecodeEngine
+
+    trace_params = {"n_requests": 12, "mean_interarrival": 2.0,
+                    "prompt_len": 8, "gen_lens": (4, 6, 8, 10), "seed": 0}
+    degraded_rate = 0.5
+    trace = make_arrival_trace(**trace_params)
+    max_len = trace_params["prompt_len"] + max(trace_params["gen_lens"])
+    sim_spec = simulate_speculative(trace, slots=slots, max_len=max_len,
+                                    k=k, accept_rate=1.0)
+    sim_degraded = simulate_speculative(trace, slots=slots,
+                                        max_len=max_len, k=k,
+                                        accept_rate=degraded_rate)
+    sim_plain = simulate_continuous(trace, slots=slots)
+
+    mcfg = get_config(arch, smoke=smoke)
+    dcfg = DoRAConfig(rank=rank, alpha=2.0 * rank, mode="auto")
+    scfg = StepConfig(dora=dcfg)
+    params, adapters, _ = build_state(mcfg, dcfg, 0)
+    folded = jax.block_until_ready(jax.jit(make_precompute_step(
+        mcfg, scfg, fold_gsb=True))(params, adapters))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, mcfg.vocab_size, r["prompt_len"],
+                            dtype=np.int32) for r in trace]
+    gen_lens = [r["gen_len"] for r in trace]
+
+    spec = DecodeEngine(mcfg, scfg, params, slots=slots, max_len=max_len,
+                        adapters=folded, speculative_k=k)
+    _drive_engine(spec, trace, prompts, gen_lens)
+    st = spec.stats()
+    for field in ("decode_steps", "prefills", "generated_tokens",
+                  "slot_steps", "draft_steps", "verify_steps",
+                  "accepted_drafts"):
+        got = getattr(st, field)
+        want = sim_spec[field]
+        assert got == want, (
+            f"speculative engine {field}={got} but the committed schedule "
+            f"model says {want} — simulate_speculative no longer mirrors "
+            f"the engine (or the B=0 bench adapters stopped drafting "
+            f"perfectly); fix before regenerating the artifact")
+    spec_tokens = {r.request_id: r.tokens.tolist()
+                   for r in spec.pop_results()}
+
+    plain = DecodeEngine(mcfg, scfg, params, slots=slots, max_len=max_len,
+                         adapters=folded)
+    _drive_engine(plain, trace, prompts, gen_lens)
+    plain_tokens = {r.request_id: r.tokens.tolist()
+                    for r in plain.pop_results()}
+    assert spec_tokens == plain_tokens, (
+        "greedy speculative streams diverged from plain decode — the "
+        "bitwise oracle is broken", spec_tokens, plain_tokens)
+
+    # timed second pass (compiles are warm)
+    t0 = time.perf_counter()
+    _drive_engine(spec, trace, prompts, gen_lens)
+    dt_spec = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    _drive_engine(plain, trace, prompts, gen_lens)
+    dt_plain = time.perf_counter() - t0
+
+    out = {"trace": dict(trace_params, slots=slots, max_len=max_len, k=k,
+                         gen_lens=list(trace_params["gen_lens"]),
+                         degraded_accept_rate=degraded_rate),
+           "speculative_model": sim_spec,
+           "degraded_model": sim_degraded,
+           "plain_model": {"decode_steps": sim_plain["decode_steps"],
+                           "generated_tokens":
+                               sim_plain["generated_tokens"]},
+           "model_verify_vs_plain_tokens":
+               (sim_spec["verify_steps"] + sim_spec["decode_steps"])
+               / sim_plain["generated_tokens"],
+           "measured": {"spec_s": dt_spec, "plain_s": dt_plain,
+                        "plain_vs_spec": dt_plain / dt_spec}}
+    if verbose:
+        print(f"  speculative (k={k}): {sim_spec['verify_steps']} verify "
+              f"+ {sim_spec['decode_steps']} fallback decode steps for "
+              f"{sim_spec['generated_tokens']} tokens "
+              f"(plain: {sim_plain['decode_steps']} decode steps); "
+              f"degraded accept={degraded_rate}: "
+              f"{sim_degraded['verify_steps']} verify + "
+              f"{sim_degraded['decode_steps']} decode")
+        print(f"  oracle: greedy speculative streams == plain (bitwise); "
+              f"measured plain/spec wall: "
+              f"{out['measured']['plain_vs_spec']:.2f}x")
+    save("serve_bench_speculative", [out])
+    return out
+
+
 def write_artifact(rows, multi_tenant=None, continuous=None,
-                   path="BENCH_serve.json") -> str:
+                   speculative=None, path="BENCH_serve.json") -> str:
     payload = {"bench": "serve_decode",
                "rows": rows,
                "notes": "smoke-config CPU decode; the cached/uncached "
@@ -482,11 +656,18 @@ def write_artifact(rows, multi_tenant=None, continuous=None,
                         "one arrival trace — the deterministic schedule "
                         "model (decode steps / occupancy) is gated "
                         "(engine must beat static); measured tok/s is "
-                        "informational."}
+                        "informational. speculative: draft/verify engine "
+                        "vs plain decode on the same trace — the "
+                        "accept-rate schedule model is gated (speculative "
+                        "must need fewer full-DoRA verify steps than "
+                        "plain decode emits tokens, at full AND degraded "
+                        "accept rates)."}
     if multi_tenant is not None:
         payload["multi_tenant"] = multi_tenant
     if continuous is not None:
         payload["continuous"] = continuous
+    if speculative is not None:
+        payload["speculative"] = speculative
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float)
         f.write("\n")
@@ -516,8 +697,10 @@ def main() -> None:
                          gen_len=gen)
     print("# Continuous batching: slot-scheduled engine vs static batches")
     cont = run_continuous(args.arch, smoke=True, rank=args.rank)
+    print("# Speculative decode: draft/verify vs plain on the same trace")
+    spec = run_speculative(args.arch, smoke=True, rank=args.rank)
     if args.artifact:
-        print(f"wrote {os.path.abspath(write_artifact(rows, mt, cont, args.artifact))}")
+        print(f"wrote {os.path.abspath(write_artifact(rows, mt, cont, spec, args.artifact))}")
 
 
 if __name__ == "__main__":

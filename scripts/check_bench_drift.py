@@ -20,7 +20,12 @@ artifacts:
     committed and must keep beating the static baseline (fewer decode
     steps, higher mean slot occupancy) for the same trace: the static
     batch pays idle-row decode, and a scheduler change that loses that
-    win is a serving regression.
+    win is a serving regression;
+  - ``BENCH_serve.json`` (``speculative`` section): the speculative
+    accept-rate schedule model re-simulated from the committed trace at
+    the committed draft window ``k`` — speculative decode must keep
+    needing fewer full-DoRA steps (verify + fallback decode) than plain
+    decode emits tokens, at the full AND the degraded accept rate.
 
 Measured sections (HLO bytes-accessed, wall clocks, tok/s) are
 machine-dependent and stay informational — they are never gated here.
@@ -244,6 +249,92 @@ def check_continuous(artifact_path: str) -> int:
     return 0
 
 
+def check_speculative(artifact_path: str) -> int:
+    """Gate the speculative-decode schedule model: re-simulate the
+    committed arrival trace at the committed k / accept rates (pure host
+    arithmetic) and fail when speculative needs more verify steps than
+    committed, or stops beating plain decode — every plain decode step is
+    one full-DoRA forward per emitted token, so speculative must clear
+    ``verify_steps + fallback decode_steps < plain generated_tokens`` at
+    the FULL and the DEGRADED accept rate alike (a win that only exists
+    for perfect drafts is no win)."""
+    from benchmarks.serve_bench import (make_arrival_trace,
+                                        simulate_continuous,
+                                        simulate_speculative)
+
+    with open(artifact_path) as f:
+        committed = json.load(f)
+    section = committed.get("speculative")
+    if not section:
+        print(f"ERROR: no speculative section in {artifact_path} — "
+              f"regenerate: python -m benchmarks.serve_bench --smoke "
+              f"--artifact BENCH_serve.json")
+        return 1
+    tp = dict(section["trace"])
+    slots = tp.pop("slots")
+    max_len = tp.pop("max_len")
+    k = tp.pop("k")
+    degraded = tp.pop("degraded_accept_rate")
+    tp["gen_lens"] = tuple(tp["gen_lens"])
+    trace = make_arrival_trace(**tp)
+    sim_full = simulate_speculative(trace, slots=slots, max_len=max_len,
+                                    k=k, accept_rate=1.0)
+    sim_deg = simulate_speculative(trace, slots=slots, max_len=max_len,
+                                   k=k, accept_rate=degraded)
+    sim_plain = simulate_continuous(trace, slots=slots)
+    plain_tokens = sim_plain["generated_tokens"]
+
+    failures = []
+    improvements = []
+    rows = [("spec verify_steps", sim_full["verify_steps"],
+             section["speculative_model"]["verify_steps"], False),
+            ("spec fallback decode", sim_full["decode_steps"],
+             section["speculative_model"]["decode_steps"], False),
+            ("degraded verify_steps", sim_deg["verify_steps"],
+             section["degraded_model"]["verify_steps"], False),
+            ("plain generated_tokens", plain_tokens,
+             section["plain_model"]["generated_tokens"], None)]
+    for name, now, want, higher_is_better in rows:
+        status = "ok"
+        if higher_is_better is None:
+            pass  # informational context row, never gated
+        elif higher_is_better is False and now > want * (1 + EPS):
+            status = "REGRESSION"
+            failures.append(f"{name}: {want:.4f} -> {now:.4f}")
+        elif higher_is_better is False and now < want * (1 - EPS):
+            status = "improved"
+            improvements.append(name)
+        print(f"  {name:>24}: {want:>10.4f} -> {now:>10.4f}  [{status}]")
+    for label, sim in (("full-accept", sim_full),
+                       (f"degraded({degraded})", sim_deg)):
+        full_dora_steps = sim["verify_steps"] + sim["decode_steps"]
+        if full_dora_steps >= plain_tokens:
+            failures.append(
+                f"speculative decode ({label}) stopped beating plain "
+                f"decode: {sim['verify_steps']} verify + "
+                f"{sim['decode_steps']} fallback decode steps >= "
+                f"{plain_tokens} tokens plain decode emits — each plain "
+                f"token is a full-DoRA forward, so speculative must need "
+                f"strictly fewer full-DoRA steps")
+    if failures:
+        print("\nspeculative-drift FAIL:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        print("If intentional, regenerate and justify in the PR:\n"
+              "  python -m benchmarks.serve_bench --smoke --artifact "
+              "BENCH_serve.json")
+        return 1
+    if improvements:
+        print(f"\nspeculative-drift OK (improved: "
+              f"{', '.join(improvements)}) — regenerate BENCH_serve.json "
+              f"to record the better schedule.")
+    else:
+        print("\nspeculative-drift OK: the re-simulated schedule matches "
+              "the committed artifact and speculative still beats plain "
+              "decode at full AND degraded accept rates.")
+    return 0
+
+
 if __name__ == "__main__":
     if len(sys.argv) > 1:
         compose_path, serve_path = sys.argv[1], (
@@ -257,4 +348,6 @@ if __name__ == "__main__":
     rc = check_serve(serve_path) or rc
     print()
     rc = check_continuous(serve_path) or rc
+    print()
+    rc = check_speculative(serve_path) or rc
     sys.exit(rc)

@@ -19,10 +19,12 @@
 #   post-PR3 317 passed / 0 failed / 2 skipped (SPMD compose + CI gates)
 #   post-PR4 358 passed / 0 failed / 2 skipped (multi-tenant serving + docs)
 #   post-PR5 385 passed / 0 failed / 2 skipped (continuous-batching engine)
+#   post-PR6 393 passed / 0 failed / 2 skipped (speculative decoding +
+#            submit-time adapter pinning)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-MIN_PASS="${REPRO_TIER1_MIN_PASS:-385}"
+MIN_PASS="${REPRO_TIER1_MIN_PASS:-393}"
 MAX_FAIL="${REPRO_TIER1_MAX_FAIL:-0}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 TIER="${REPRO_FORCE_TIER:-interpret}"
@@ -78,6 +80,10 @@ echo
 echo "continuous serve smoke (tier ${TIER}): slot-scheduled engine"
 python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \
     --prompt-len 16 --gen-len 4 --continuous
+echo
+echo "speculative serve smoke (tier ${TIER}): draft/verify/rewind + oracle"
+python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \
+    --prompt-len 16 --gen-len 4 --continuous --speculative 3
 echo
 echo "bench smoke: compose kernels (incl. matmul-fused) + serving cache"
 python -m benchmarks.compose_bench --smoke

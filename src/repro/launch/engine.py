@@ -61,7 +61,9 @@ from repro.core.adapter import stack_adapter_states
 from repro.core.adapter_cache import (AdapterHandle, AdapterStateCache,
                                       mesh_fingerprint)
 from repro.launch.steps import (StepConfig, make_decode_step,
-                                make_prefill_into_slot_step)
+                                make_draft_step,
+                                make_prefill_into_slot_step,
+                                make_verify_step)
 from repro.models import init_cache
 from repro.models.config import ModelConfig
 
@@ -76,6 +78,11 @@ class EngineRequest:
     max_new_tokens: int
     eos_id: int | None = None
     key_id: int = 0                    # sample-key fold-in (see submit)
+    state: Any = dataclasses.field(default=None, repr=False)
+    #                                    serving tree pinned at submit: a
+    #                                    tenant update() while this request
+    #                                    waits in the queue must not change
+    #                                    (or lose) the weights it serves with
 
 
 @dataclasses.dataclass
@@ -97,12 +104,15 @@ class EngineStats:
     """Deterministic scheduling counters (point-in-time snapshot)."""
     slots: int
     steps: int                  # engine steps driven (incl. idle ones)
-    decode_steps: int           # steps that ran the batched decode
+    decode_steps: int           # steps that ran the batched PLAIN decode
     prefills: int               # prefill-into-slot calls (= admissions)
     admitted: int
     retired: int
-    generated_tokens: int       # sampled tokens (prefill + decode)
-    slot_steps: int             # sum over decode steps of active slots
+    generated_tokens: int       # sampled tokens (prefill + decode + verify)
+    slot_steps: int             # sum over plain decode steps of active slots
+    draft_steps: int = 0        # base-only draft forwards (speculative)
+    verify_steps: int = 0       # full-DoRA k+1-window verifies (= spec ticks)
+    accepted_drafts: int = 0    # draft tokens the verify accepted
 
     @property
     def mean_occupancy(self) -> float:
@@ -128,6 +138,9 @@ class _Slot:
     finish_cap: str = "length"         # reason when the budget runs out
     generated: list = dataclasses.field(default_factory=list)
     admitted_step: int = 0
+    pos: int = 0                       # host mirror of cache["len"][slot]:
+    #                                    where this row's NEXT K/V write
+    #                                    lands (speculative rewind target)
 
     @property
     def active(self) -> bool:
@@ -142,10 +155,11 @@ class DecodeEngine:
     request shares (single-tenant engine), OR ``None`` with an
     ``adapter_cache`` (:class:`~repro.core.AdapterStateCache`) — then
     every request carries an adapter id / handle resolved through the
-    LRU at admission. The resolved state is pinned on the slot for the
-    request's lifetime: a tenant update mid-flight never swaps weights
-    under a running request (the NEXT admission picks up the new
-    version).
+    LRU at SUBMIT time. The resolved state is pinned on the request
+    (and then on its slot) for the request's lifetime: a tenant
+    ``update()`` mid-flight never swaps weights under a submitted
+    request — whether it is already decoding or still waiting in the
+    FIFO — and the NEXT submission picks up the new version.
 
     ``step()`` is one scheduler tick: retire-finished → admit-into-free
     (prefill + first token) → one batched decode for every active slot.
@@ -153,6 +167,20 @@ class DecodeEngine:
     is host-side (greedy at ``temperature=0.0``, else per-request keys —
     ``fold_in(fold_in(PRNGKey(seed), request_id), n_sampled)`` — so a
     request's sample stream is independent of what shares its batch).
+
+    ``speculative_k > 0`` turns a tick into draft-then-verify: ``k``
+    base-only draft forwards (adapter path short-circuited — zero
+    ``dora_wnorm``, zero gsB work) propose tokens per row, ONE k+1-window
+    forward through the full grouped DoRA path verifies them, each row
+    accepts its longest matching prefix and rewinds ``cache["len"]`` to
+    its accepted frontier (host mirrors — the engine still never reads
+    ``len`` back from the device). Greedy speculative token streams are
+    bitwise the plain greedy streams: the verify logits at every accepted
+    position are the plain decode logits (same dense per-row-frontier
+    attention math), so acceptance-by-argmax-match IS plain decode.
+    Ticks fall back to plain decode when ``temperature > 0`` (rejection
+    sampling not yet implemented) or when any active row's window would
+    overflow ``max_len``.
     """
 
     def __init__(self, mcfg: ModelConfig, scfg: StepConfig, params, *,
@@ -160,6 +188,7 @@ class DecodeEngine:
                  adapter_cache: AdapterStateCache | None = None,
                  mesh=None, allow_miss: bool = True,
                  temperature: float = 0.0, seed: int = 0,
+                 speculative_k: int = 0,
                  max_cached_steps: int = 16):
         kinds = mcfg.layer_kinds()
         if any(k != "attn" for k in kinds):
@@ -208,6 +237,9 @@ class DecodeEngine:
         self.allow_miss = allow_miss
         self.temperature = float(temperature)
         self.seed = int(seed)
+        if speculative_k < 0:
+            raise ValueError(f"speculative_k={speculative_k} < 0")
+        self.speculative_k = int(speculative_k)
         self.max_cached_steps = int(max_cached_steps)
 
         # Pin the persistent cache to the serving shardings (and the step
@@ -232,6 +264,12 @@ class DecodeEngine:
         # tenant). Same LRU discipline as MultiTenantServer._steps: each
         # entry pins a jitted executable.
         self._decodes: "OrderedDict[Any, Callable]" = OrderedDict()
+        # Speculative executables: ONE adapter-free draft step (no group
+        # signature — the draft never touches adapters) and one verify
+        # step per (group signature, window) — window = k+1 is a SHAPE,
+        # so each k the engine is driven at gets its own executable.
+        self._draft: Callable | None = None
+        self._verifies: "OrderedDict[Any, Callable]" = OrderedDict()
         # (slot-handle layout, groups, stacked tree) of the last decode —
         # re-stacked only when the layout changes, never per token.
         self._grouping_cache: tuple | None = None
@@ -246,6 +284,9 @@ class DecodeEngine:
         self._retired = 0
         self._generated = 0
         self._slot_steps = 0
+        self._draft_steps = 0
+        self._verify_steps = 0
+        self._accepted_drafts = 0
 
     # -- submission ---------------------------------------------------------
 
@@ -282,6 +323,12 @@ class DecodeEngine:
                     "with adapter_cache= to route per-request adapters)")
             handle = (adapter if isinstance(adapter, AdapterHandle)
                       else self.adapter_cache.current_handle(adapter))
+            # Resolve the serving tree NOW: submit is the pin point, so
+            # a stale handle — or a cold state under warm-only routing —
+            # must fail here, before a batch front end queues anything,
+            # not later at admission.
+            self.adapter_cache.get_state(self.params, handle,
+                                         allow_miss=self.allow_miss)
         return prompt, handle
 
     def submit(self, prompt, *, adapter: AdapterHandle | str | None = None,
@@ -290,7 +337,12 @@ class DecodeEngine:
         """Queue one request; returns its request id. ``adapter``: an
         :class:`AdapterHandle`, a registered adapter id (resolved to the
         CURRENT version at submit time), or None when the engine serves a
-        fixed adapter tree. ``key_id``: the fold-in for this request's
+        fixed adapter tree. The resolved serving tree is pinned on the
+        request HERE: an :meth:`AdapterStateCache.update` issued while
+        the request waits in the queue neither re-routes it to the new
+        version nor errors it — it serves with the tree it was submitted
+        against (so a stale handle or a cold warm-only state raises
+        here, not at admission). ``key_id``: the fold-in for this request's
         temperature-sampling key stream (default: the request id, which
         monotonically increases on a persistent engine — batch-level
         callers wanting call-reproducible sampling pass the request's
@@ -298,11 +350,14 @@ class DecodeEngine:
         ``serve()`` do)."""
         prompt, handle = self.check_request(prompt, adapter=adapter,
                                             max_new_tokens=max_new_tokens)
+        state = (self.adapters if handle is None
+                 else self.adapter_cache.get_state(
+                     self.params, handle, allow_miss=self.allow_miss))
         rid = self._next_id
         self._next_id += 1
         self._queue.append(EngineRequest(
             rid, prompt, handle, int(max_new_tokens), eos_id,
-            key_id=rid if key_id is None else int(key_id)))
+            key_id=rid if key_id is None else int(key_id), state=state))
         return rid
 
     # -- scheduling ---------------------------------------------------------
@@ -316,15 +371,23 @@ class DecodeEngine:
                            prefills=self._prefills,
                            admitted=self._admitted, retired=self._retired,
                            generated_tokens=self._generated,
-                           slot_steps=self._slot_steps)
+                           slot_steps=self._slot_steps,
+                           draft_steps=self._draft_steps,
+                           verify_steps=self._verify_steps,
+                           accepted_drafts=self._accepted_drafts)
 
     def compile_counts(self) -> dict:
         """How many executables each step fn holds — the compile-count
         acceptance: after any join/leave trace this must be exactly 1 for
-        the prefill and 1 per decode group-signature."""
+        the prefill, 1 per decode group-signature, 1 for the (adapter-
+        free) draft, and 1 per (group-signature, window) verify."""
         return {"prefill_into_slot": self._prefill._cache_size(),
                 "decode": {sig: fn._cache_size()
-                           for sig, fn in self._decodes.items()}}
+                           for sig, fn in self._decodes.items()},
+                "draft": (0 if self._draft is None
+                          else self._draft._cache_size()),
+                "verify": {key: fn._cache_size()
+                           for key, fn in self._verifies.items()}}
 
     def _sample_rows(self, logits_rows, key_ids_and_counts) -> list[int]:
         """One token per row. Greedy is a host argmax over the
@@ -385,15 +448,17 @@ class DecodeEngine:
             while not slot.active and self._queue:
                 req = self._queue.popleft()
                 try:
-                    state = self._resolve_state(req)
+                    # submit() pins the resolved tree on the request, so
+                    # normally this is a plain attribute read immune to
+                    # mid-queue cache churn; the late-resolution fallback
+                    # only fires for hand-built EngineRequests.
+                    state = (req.state if req.state is not None
+                             else self._resolve_state(req))
                 except Exception as e:
-                    # A failed resolution (stale handle after a mid-queue
-                    # update — which can NEVER re-resolve, versions only
-                    # move forward — or a cold state under warm-only
-                    # routing) must neither silently lose the request nor
-                    # wedge the FIFO behind it forever: the request is
-                    # finished with an errored result and admission moves
-                    # on to the next one.
+                    # A failed LATE resolution must neither silently
+                    # lose the request nor wedge the FIFO behind it
+                    # forever: the request is finished with an errored
+                    # result and admission moves on to the next one.
                     self._results[req.request_id] = RequestResult(
                         request_id=req.request_id, prompt=req.prompt,
                         tokens=np.zeros((0,), np.int32),
@@ -415,6 +480,7 @@ class DecodeEngine:
                 slot.handle = req.adapter
                 slot.state = state
                 slot.admitted_step = self._steps
+                slot.pos = P    # first decode K/V write lands at P
                 # Token budget: the request's own cap, or the cache bound
                 # (P + budget - 1 decode writes must stay < max_len; the
                 # last sampled token is never written back).
@@ -492,34 +558,166 @@ class DecodeEngine:
             self._decodes.popitem(last=False)
         return fn
 
+    def _get_draft(self):
+        if self._draft is None:
+            self._draft = jax.jit(
+                make_draft_step(self.mcfg, self.scfg, self.mesh,
+                                batch=self.slots),
+                donate_argnums=(1,),
+                out_shardings=(None, self._cache_out_sh))
+        return self._draft
+
+    def _get_verify(self, groups, window: int):
+        key = (groups, window)
+        if key in self._verifies:
+            self._verifies.move_to_end(key)
+            return self._verifies[key]
+        fn = jax.jit(make_verify_step(self.mcfg, self.scfg, self.mesh,
+                                      batch=self.slots, window=window,
+                                      tenant_groups=groups),
+                     donate_argnums=(2,),
+                     out_shardings=(None, self._cache_out_sh))
+        self._verifies[key] = fn
+        while len(self._verifies) > self.max_cached_steps:
+            self._verifies.popitem(last=False)
+        return fn
+
+    def _sync_len(self, lens: np.ndarray) -> None:
+        """Overwrite ``cache["len"]`` with a host-built per-row vector —
+        the speculative rewind. A FRESH device array every time: the
+        steps donate the cache, so yesterday's ``len`` buffer may
+        already be dead. Free rows get 0 (their buffer content is
+        garbage either way — admission prefills the whole row)."""
+        arr = jnp.asarray(np.asarray(lens, np.int32))
+        if self._cache_out_sh is not None:
+            arr = jax.device_put(arr, self._cache_out_sh["len"])
+        cache = dict(self.cache)
+        cache["len"] = arr.astype(cache["len"].dtype)
+        self.cache = cache
+
+    def _speculative_ok(self, active: list[int]) -> bool:
+        """Whether THIS tick can draft-and-verify: greedy sampling only
+        (rejection sampling for temperature>0 is future work) and every
+        active row's k+1-window must fit under ``max_len`` — a clamped
+        ``dynamic_update_slice`` would silently shift a row's writes.
+        Rows with ≥ k remaining budget always fit (the admission budget
+        keeps ``pos + budget <= max_len - 1``); a row at its max_len cap
+        degrades the whole batch to plain decode for its last tokens."""
+        if self.speculative_k <= 0 or self.temperature > 0.0:
+            return False
+        k = self.speculative_k
+        return all(self._slots[i].pos + k + 1 <= self.max_len
+                   for i in active)
+
+    def _decode_tick(self, active: list[int], on_token) -> None:
+        """One plain batched decode over the active slots."""
+        toks = np.zeros((self.slots, 1), np.int32)
+        for i in active:
+            toks[i, 0] = self._slots[i].last_token
+        groups, adapters = self._slot_grouping()
+        decode = self._get_decode(groups)
+        logits, self.cache = decode(self.params, adapters, self.cache,
+                                    {"tokens": jnp.asarray(toks)})
+        logits_np = np.asarray(logits)      # the sampling sync
+        self._decode_steps += 1
+        self._slot_steps += len(active)
+        toks_out = self._sample_rows(
+            [logits_np[i] for i in active],
+            [(self._slots[i].req.key_id,
+              len(self._slots[i].generated)) for i in active])
+        for i, tok in zip(active, toks_out):
+            slot = self._slots[i]
+            slot.pos += 1               # this decode wrote K/V at pos
+            reason = self._note_token(slot, tok, on_token)
+            if reason is not None:
+                self._finish(slot, reason)
+
+    def _speculative_tick(self, active: list[int], on_token) -> None:
+        """Draft k base-only tokens per row, verify the k+1 window in one
+        full-DoRA forward, accept each row's longest matching prefix and
+        rewind its cache length to the accepted frontier.
+
+        Cache discipline: the drafts write BASE-path K/V at positions
+        pos..pos+k-1; the verify then rewinds to pos and overwrites
+        positions pos..pos+k with FULL-path K/V, so nothing base-flavored
+        is ever attended to by a committed token. After acceptance each
+        row rewinds to pos + emitted (the slot's next write position);
+        rows beyond that frontier hold stale K/V that the per-row causal
+        mask excludes until overwritten."""
+        k = self.speculative_k
+        base_len = np.zeros((self.slots,), np.int32)
+        for i in active:
+            base_len[i] = self._slots[i].pos
+        cur = np.zeros((self.slots, 1), np.int32)
+        for i in active:
+            cur[i, 0] = self._slots[i].last_token
+
+        # -- draft: k greedy base-only tokens per row -----------------------
+        self._sync_len(base_len)
+        draft = self._get_draft()
+        drafts = np.zeros((self.slots, k), np.int32)
+        for j in range(k):
+            logits, self.cache = draft(self.params, self.cache,
+                                       {"tokens": jnp.asarray(cur)})
+            lnp = np.asarray(logits)
+            self._draft_steps += 1
+            for i in active:
+                t = int(np.argmax(lnp[i]))
+                drafts[i, j] = t
+                cur[i, 0] = t
+
+        # -- verify: ONE grouped full-DoRA forward over [t0, q1..qk] --------
+        self._sync_len(base_len)    # rewind over the drafts' len advance
+        win = np.zeros((self.slots, k + 1), np.int32)
+        for i in active:
+            win[i, 0] = self._slots[i].last_token
+            win[i, 1:] = drafts[i]
+        groups, adapters = self._slot_grouping()
+        verify = self._get_verify(groups, k + 1)
+        logits, self.cache = verify(self.params, adapters, self.cache,
+                                    {"tokens": jnp.asarray(win)})
+        logits_np = np.asarray(logits)       # [slots, k+1, V]
+        self._verify_steps += 1
+
+        # -- accept: longest matching prefix per row, then rewind -----------
+        new_len = np.zeros((self.slots,), np.int32)
+        for i in active:
+            slot = self._slots[i]
+            # true[j] = the token plain decode would emit after window
+            # position j (valid as long as window[:j+1] matches the true
+            # stream — which holds exactly up to the first draft miss).
+            true = np.argmax(logits_np[i], axis=-1)
+            a = 0
+            while a < k and drafts[i, a] == true[a]:
+                a += 1
+            self._accepted_drafts += a
+            # emit true[0..a]: the a accepted drafts plus the verify's
+            # own next token (a rejected draft's correction, or the
+            # bonus token after a fully-accepted window).
+            for tok in true[:a + 1]:
+                slot.pos += 1
+                reason = self._note_token(slot, int(tok), on_token)
+                if reason is not None:
+                    self._finish(slot, reason)
+                    break
+            if slot.active:
+                new_len[i] = slot.pos
+        self._sync_len(new_len)
+
     def step(self, on_token=None) -> list[RequestResult]:
         """One scheduler tick: admit into free slots, then one batched
-        decode over every active slot. Returns the requests that FINISHED
-        during this tick (also retrievable via :meth:`results`).
+        decode — or draft/verify/rewind when ``speculative_k > 0`` — over
+        every active slot. Returns the requests that FINISHED during this
+        tick (also retrievable via :meth:`results`).
         ``on_token(request_id, token)`` streams every sampled token."""
         before = set(self._results)
         self._admit(on_token)
         active = [i for i, s in enumerate(self._slots) if s.active]
         if active:
-            toks = np.zeros((self.slots, 1), np.int32)
-            for i in active:
-                toks[i, 0] = self._slots[i].last_token
-            groups, adapters = self._slot_grouping()
-            decode = self._get_decode(groups)
-            logits, self.cache = decode(self.params, adapters, self.cache,
-                                        {"tokens": jnp.asarray(toks)})
-            logits_np = np.asarray(logits)      # the sampling sync
-            self._decode_steps += 1
-            self._slot_steps += len(active)
-            toks_out = self._sample_rows(
-                [logits_np[i] for i in active],
-                [(self._slots[i].req.key_id,
-                  len(self._slots[i].generated)) for i in active])
-            for i, tok in zip(active, toks_out):
-                slot = self._slots[i]
-                reason = self._note_token(slot, tok, on_token)
-                if reason is not None:
-                    self._finish(slot, reason)
+            if self._speculative_ok(active):
+                self._speculative_tick(active, on_token)
+            else:
+                self._decode_tick(active, on_token)
         self._steps += 1
         return [self._results[rid]
                 for rid in sorted(set(self._results) - before)]

@@ -269,7 +269,7 @@ class MultiTenantServer:
         return self._steps[key]
 
     def _get_engine(self, *, slots: int, max_len: int, temperature: float,
-                    seed: int, allow_miss: bool):
+                    seed: int, allow_miss: bool, speculative_k: int = 0):
         from repro.launch.engine import DecodeEngine
         key = (slots, max_len)
         if key in self._engines:
@@ -285,10 +285,12 @@ class MultiTenantServer:
         eng.temperature = float(temperature)
         eng.seed = int(seed)
         eng.allow_miss = allow_miss
+        eng.speculative_k = int(speculative_k)
         return eng
 
     def _serve_continuous(self, requests, prompts, *, gen_len, max_len,
-                          temperature, seed, allow_miss):
+                          temperature, seed, allow_miss,
+                          speculative_k=0):
         """Mixed-length admission through the continuous-batching engine:
         every request is prefilled into a slot at its TRUE prompt length
         (per-row cache state), so no length bucketing is needed; batches
@@ -299,7 +301,8 @@ class MultiTenantServer:
         its tokens even though the cached engine persists."""
         eng = self._get_engine(slots=self.engine_slots, max_len=max_len,
                                temperature=temperature, seed=seed,
-                               allow_miss=allow_miss)
+                               allow_miss=allow_miss,
+                               speculative_k=speculative_k)
         # Validate and resolve EVERY request before the first submit: a
         # bad one mid-batch (unregistered adapter id, empty prompt) must
         # fail this call, not strand already-queued requests in the
@@ -323,7 +326,7 @@ class MultiTenantServer:
     def serve(self, requests: Sequence[Request], *, gen_len: int,
               max_len: int, temperature: float = 0.0, seed: int = 0,
               allow_miss: bool = True, return_logits: bool = False,
-              static: bool | None = None,
+              static: bool | None = None, speculative_k: int = 0,
               check_contract: bool | None = None):
         """Serve one batch. Returns tokens [B, P+gen_len] in REQUEST order
         (or (tokens, per-step logits) when ``return_logits``).
@@ -337,14 +340,29 @@ class MultiTenantServer:
         shapes don't stack). ``static=True`` forces the legacy path and
         keeps its same-length-bucket error; ``static=False`` forces the
         engine even for uniform lengths. ``return_logits`` is a
-        static-path-only debugging hook."""
+        static-path-only debugging hook.
+
+        ``speculative_k > 0``: engine-path requests decode speculatively
+        (k base-only drafts + one full-DoRA verify per tick; greedy
+        streams stay bitwise the plain ones). A batched tick drafts one
+        window shape, so k is a per-call scheduler knob, not a per-row
+        one; temperature>0 calls silently fall back to plain decode (the
+        engine's documented rejection-sampling gap)."""
         if not requests:
             raise ValueError("empty request batch")
         prompts = [np.asarray(r.prompt, np.int32) for r in requests]
         P = prompts[0].shape[-1]
         mixed = any(p.shape[-1] != P for p in prompts)
         if static is None:
-            static = not mixed
+            # speculative decode lives on the engine path (it needs the
+            # rewindable per-row cache), so it routes uniform-length
+            # batches there too.
+            static = not mixed and not speculative_k
+        if static and speculative_k:
+            raise ValueError(
+                "speculative_k requires the continuous-batching engine "
+                "path (its rewindable per-row cache): serve with "
+                "static=False/None, not static=True")
         if not static:
             if return_logits:
                 raise ValueError(
@@ -362,7 +380,8 @@ class MultiTenantServer:
                     f"{max(p.shape[-1] for p in prompts) + gen_len}")
             return self._serve_continuous(
                 requests, prompts, gen_len=gen_len, max_len=max_len,
-                temperature=temperature, seed=seed, allow_miss=allow_miss)
+                temperature=temperature, seed=seed, allow_miss=allow_miss,
+                speculative_k=speculative_k)
         if mixed:
             raise ValueError(
                 f"all prompts in one batch must share a length bucket on "
@@ -443,17 +462,19 @@ class EngineServer:
     def __init__(self, mcfg, scfg: StepConfig, params, *,
                  cache: AdapterStateCache, slots: int, max_len: int,
                  mesh=None, temperature: float = 0.0, seed: int = 0,
-                 allow_miss: bool = True):
+                 allow_miss: bool = True, speculative_k: int = 0):
         from repro.launch.engine import DecodeEngine
         _check_cache_mesh(cache, mesh)
         self.cache = cache
         self.engine = DecodeEngine(mcfg, scfg, params, slots=slots,
                                    max_len=max_len, adapter_cache=cache,
                                    mesh=mesh, temperature=temperature,
-                                   seed=seed, allow_miss=allow_miss)
+                                   seed=seed, allow_miss=allow_miss,
+                                   speculative_k=speculative_k)
 
     def run(self, requests: Sequence[Request], *, gen_len: int,
-            eos_id: int | None = None, on_token=None):
+            eos_id: int | None = None, on_token=None,
+            speculative_k: int | None = None):
         """Serve ``requests`` to completion through the slot table;
         returns a list of :class:`~repro.launch.engine.RequestResult` in
         request order (``result.tokens`` holds the generated tokens —
@@ -464,9 +485,15 @@ class EngineServer:
         tokens as they are sampled; the engine (``self.engine``) persists
         across calls, so throughput counters in ``self.engine.stats()``
         accumulate — sample keys fold in each request's index within THIS
-        call, keeping temperature>0 runs call-reproducible."""
+        call, keeping temperature>0 runs call-reproducible.
+        ``speculative_k``: override the engine's draft window for THIS
+        call (0 = plain decode; None = keep the constructor's setting) —
+        a batched tick has one window shape, so k is a call-level
+        scheduler knob, not a per-row one."""
         if not requests:
             raise ValueError("empty request batch")
+        if speculative_k is not None:
+            self.engine.speculative_k = int(speculative_k)
         # All-or-nothing submission: validate every request first, so a
         # bad one mid-batch cannot orphan earlier ones in the persistent
         # queue (they would steal slots from — and stream into — the
@@ -506,6 +533,11 @@ def main() -> None:
                     help="continuous-batching demo: 2x--batch MIXED-length "
                          "requests through the slot-scheduled engine "
                          "(--batch slots; requests join/leave mid-decode)")
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="with --continuous: draft K base-only tokens per "
+                         "tick and verify them in one full-DoRA window; "
+                         "asserts the greedy token streams match a plain "
+                         "engine's bitwise")
     args = ap.parse_args()
 
     mcfg = get_config(args.arch, smoke=args.smoke)
@@ -527,7 +559,8 @@ def main() -> None:
             dtype=np.int32), "tenant-0") for _ in range(n_req)]
         server = EngineServer(mcfg, scfg, params, cache=cache,
                               slots=args.batch, max_len=max_len,
-                              temperature=args.temperature, seed=args.seed)
+                              temperature=args.temperature, seed=args.seed,
+                              speculative_k=args.speculative)
         t0 = time.time()
         results = server.run(requests, gen_len=args.gen_len)
         dt = time.time() - t0
@@ -537,6 +570,21 @@ def main() -> None:
               f"({st.generated_tokens / dt:.1f} tok/s, "
               f"occupancy {st.mean_occupancy:.2f}, "
               f"{st.decode_steps} decode steps)")
+        if args.speculative > 0 and args.temperature <= 0.0:
+            # the greedy-oracle check: same requests through a PLAIN
+            # engine must yield bitwise-identical token streams.
+            plain = EngineServer(mcfg, scfg, params, cache=cache,
+                                 slots=args.batch, max_len=max_len,
+                                 temperature=args.temperature,
+                                 seed=args.seed)
+            base = plain.run(requests, gen_len=args.gen_len)
+            for rs, rp in zip(results, base):
+                assert rs.tokens.tolist() == rp.tokens.tolist(), (
+                    rs.request_id, rs.tokens, rp.tokens)
+            print(f"  speculative k={args.speculative}: "
+                  f"{st.verify_steps} verify + {st.draft_steps} draft "
+                  f"steps, {st.accepted_drafts} drafts accepted; greedy "
+                  f"streams == plain engine (oracle OK)")
         for r in results[:2]:
             print(f"  req{r.request_id}: P={len(r.prompt)} "
                   f"-> {r.tokens.tolist()} ({r.finish_reason})")

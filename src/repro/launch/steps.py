@@ -306,6 +306,66 @@ def make_decode_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
     return decode_step
 
 
+def make_draft_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
+                    batch: int):
+    """(params, cache, tokens [B,1]) -> (logits [B,V], cache').
+
+    The speculative-draft step: one decode token through the BASE model
+    only — the adapter tree is the empty dict, so every projection takes
+    the ``maybe_dora`` base-matmul short-circuit. Zero ``dora_wnorm``
+    work, zero gsB/grouped-adapter ops, and no adapter argument at all:
+    one compiled executable serves every tenant mix (the draft is
+    adapter-blind by design — the full grouped DoRA path only runs in the
+    verify step). The cache contract is the decode step's: per-row
+    ``"len"`` vector, each slot writes/attends at its own position.
+
+    Draft K/V writes are base-path values at the drafted positions; the
+    verify step re-writes those exact positions with full-path K/V, so
+    nothing base-flavored survives into the committed cache (see
+    ``launch/engine.py``)."""
+    del mesh  # shardings are attached by the caller's jit, as for decode
+
+    def draft_step(params, cache, batch_in):
+        logits, new_cache, _ = forward(
+            mcfg, params, {}, scfg.dora, cache=cache, training=False,
+            tokens=batch_in["tokens"])
+        return logits[:, -1], new_cache
+
+    return draft_step
+
+
+def make_verify_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
+                     batch: int, window: int, tenant_groups=None):
+    """(params, adapters, cache, tokens [B,window]) ->
+    (logits [B,window,V], cache').
+
+    The speculative-verify step: score ``window`` = k+1 positions per row
+    in ONE batched forward through the FULL grouped DoRA path — the same
+    adapter compose (precomputed ``g``, folded ``gsB``, static tenant
+    groups) the plain decode step runs, so greedy acceptance against
+    these logits is bitwise the plain-decode token stream. Logits are
+    returned for EVERY window position (no gather/loss_slice): position j
+    scores the draft token at j+1 and supplies the correction token when
+    the draft diverges.
+
+    The cache write covers the whole window at each row's own frontier
+    (per-row ``"len"`` + the per-row causal mask in
+    ``models/layers.py``), overwriting the draft step's base-path K/V
+    with full-path values. The ENGINE owns the rewind: it re-syncs
+    ``"len"`` to each row's accepted frontier after this step (the step
+    itself advances ``len`` by ``window`` like any forward)."""
+    del mesh
+
+    def verify_step(params, adapters, cache, batch_in):
+        logits, new_cache, _ = forward(
+            mcfg, params, adapters, scfg.dora, cache=cache,
+            training=False, tenant_groups=tenant_groups,
+            tokens=batch_in["tokens"])
+        return logits, new_cache
+
+    return verify_step
+
+
 # ---------------------------------------------------------------------------
 # Dry-run input specs (ShapeDtypeStructs; nothing allocated).
 # ---------------------------------------------------------------------------

@@ -307,8 +307,12 @@ def attention(x, params, dora, mcfg, dcfg: DoRAConfig | None, *,
         # pos+s have k_pos > q_pos and are excluded by causality. Decode
         # (s == 1) always takes the dense-over-cache path: its score matrix
         # is [B, 1, Hq, T] — small — and chunking would only add scan steps.
+        # Per-row offsets (pos.ndim == 1) also force the dense path: the
+        # chunked scan assumes one causal frontier per batch, and every
+        # per-row window (decode s==1, speculative verify s==k+1) is short.
+        dense = s == 1 or pos.ndim == 1
         out = attention_core(q, ck, cv, offset=pos,
-                             chunk=None if s == 1 else mcfg.attn_chunk)
+                             chunk=None if dense else mcfg.attn_chunk)
         new_cache = {"k": ck, "v": cv, "len": pos + s}
 
     out = out.reshape(b, s, hq * hd)

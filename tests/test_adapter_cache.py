@@ -154,6 +154,25 @@ class TestInvalidation:
         np.testing.assert_array_equal(
             g_v1, np.asarray(_precompute(W, adp2)["g"]))
 
+    def test_update_leaves_previously_fetched_states_intact(self, setup):
+        """A state tree fetched BEFORE an update() stays usable after it:
+        the bump drops the cache's reference, but the engine pins such
+        trees on in-flight requests (see DecodeEngine.submit), so the
+        cache must neither mutate nor strip the copies it handed out."""
+        W, cache = setup
+        adp = _tenant(0)
+        h0 = cache.register("t", adp)
+        pinned = cache.get_state(W, h0)
+        before = {k: np.asarray(v) for k, v in pinned.items()}
+        adp2 = dict(adp)
+        adp2["B"] = adp["B"] + 0.1
+        cache.update("t", adp2)               # invalidates v0 in the cache
+        for k in before:
+            np.testing.assert_array_equal(np.asarray(pinned[k]), before[k])
+        # and the pinned tree is still the exact v0 precompute
+        np.testing.assert_array_equal(
+            np.asarray(pinned["g"]), np.asarray(_precompute(W, adp)["g"]))
+
     def test_explicit_invalidate_keeps_registry(self, setup):
         W, cache = setup
         h = cache.register("t", _tenant(0))

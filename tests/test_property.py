@@ -10,6 +10,8 @@ Invariant 3 — tier equivalence: eager and interpret-mode fused paths agree.
 
 Invariant 4 — chunking invariance: any chunk budget gives the same norm.
 """
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -124,3 +126,111 @@ def test_dora_noop_at_init(seed):
     y = ad.dora_linear(x, W, adapter, cfg)
     np.testing.assert_allclose(np.asarray(y), np.asarray(x @ W.T),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Invariant 5 — speculative rewind: writing k draft tokens into a slot's
+# per-row cache and rewinding that row's "len" is INVISIBLE — every later
+# decode is bitwise identical to never having drafted. This is the cache
+# contract the engine's speculative mode stands on, and it covers the
+# per-row causal-frontier mask in models/layers.py: rows sit at DIFFERENT
+# depths, so a frontier bug on any row breaks the bitwise claim. The
+# interpret-tier leg runs automatically under REPRO_FORCE_TIER=interpret
+# (scripts/run_tier1.sh second leg).
+# ---------------------------------------------------------------------------
+
+_REWIND_ML = 12          # cache rows; lens + k + 2 re-decodes must fit
+_REWIND_SEED_LEN = 7     # seed tokens written per row before truncation
+
+
+@functools.lru_cache(maxsize=1)
+def _rewind_setup():
+    from repro.configs import get_config
+    from repro.models import forward
+
+    mcfg = get_config("qwen2-7b", smoke=True)
+    dcfg = DoRAConfig(rank=4, alpha=8.0, mode="eager")
+    from repro.launch.train import build_state
+    params, _, _ = build_state(mcfg, dcfg, 3)
+
+    @jax.jit
+    def step(cache, toks):
+        logits, new_cache, _ = forward(mcfg, params, {}, dcfg,
+                                       cache=cache, training=False,
+                                       tokens=toks)
+        return logits, new_cache
+
+    return mcfg, step
+
+
+@settings(max_examples=8, deadline=None)
+@given(l0=st.integers(min_value=1, max_value=7),
+       l1=st.integers(min_value=1, max_value=7),
+       k=st.integers(min_value=1, max_value=3),
+       seed=_SEED)
+def test_rewind_is_bitwise_never_drafted(l0, l1, k, seed):
+    from repro.models import init_cache
+
+    mcfg, step = _rewind_setup()
+    V = mcfg.vocab_size
+    rng = np.random.default_rng(seed)
+    # Rows at DIFFERENT causal frontiers: write _REWIND_SEED_LEN tokens
+    # into both rows, then truncate "len" to (l0, l1) — positions beyond
+    # each row's frontier hold live-but-dead K/V, exactly the state a
+    # rewound draft leaves behind.
+    cache = init_cache(mcfg, 2, _REWIND_ML, row_lens=True)
+    seed_toks = rng.integers(0, V, (2, _REWIND_SEED_LEN), dtype=np.int32)
+    _, cache = step(cache, jnp.asarray(seed_toks))
+    lens = jnp.asarray(np.array([l0, l1], np.int32))
+    cache = dict(cache, len=lens)
+
+    t_next = jnp.asarray(rng.integers(0, V, (2, 1), dtype=np.int32))
+    t_more = jnp.asarray(rng.integers(0, V, (2, 1), dtype=np.int32))
+    # Path A — never drafted: two plain decode steps.
+    la1, ca = step(cache, t_next)
+    la2, ca = step(ca, t_more)
+    # Path B — draft k tokens into both rows, rewind, re-decode.
+    draft = jnp.asarray(rng.integers(0, V, (2, k), dtype=np.int32))
+    _, drafted = step(cache, draft)
+    assert np.array_equal(np.asarray(drafted["len"]), [l0 + k, l1 + k])
+    rewound = dict(drafted, len=lens)
+    lb1, cb = step(rewound, t_next)
+    lb2, cb = step(cb, t_more)
+
+    np.testing.assert_array_equal(np.asarray(la1), np.asarray(lb1))
+    np.testing.assert_array_equal(np.asarray(la2), np.asarray(lb2))
+    np.testing.assert_array_equal(np.asarray(ca["len"]),
+                                  np.asarray(cb["len"]))
+
+
+@settings(max_examples=6, deadline=None)
+@given(l0=st.integers(min_value=1, max_value=6),
+       l1=st.integers(min_value=1, max_value=6),
+       k=st.integers(min_value=1, max_value=3),
+       seed=_SEED)
+def test_rewound_rows_verify_as_one_window(l0, l1, k, seed):
+    """The verify shape: after a rewind, re-reading the SAME k+1 tokens
+    as one batched window lands every row at the same frontier — and the
+    window's first-position logits are bitwise the single-step decode's
+    (the speculative acceptance rule compares exactly these)."""
+    from repro.models import init_cache
+
+    mcfg, step = _rewind_setup()
+    V = mcfg.vocab_size
+    rng = np.random.default_rng(seed)
+    cache = init_cache(mcfg, 2, _REWIND_ML, row_lens=True)
+    seed_toks = rng.integers(0, V, (2, _REWIND_SEED_LEN), dtype=np.int32)
+    _, cache = step(cache, jnp.asarray(seed_toks))
+    lens = jnp.asarray(np.array([l0, l1], np.int32))
+    cache = dict(cache, len=lens)
+
+    win = jnp.asarray(rng.integers(0, V, (2, k + 1), dtype=np.int32))
+    # one-step decode of the window's first token (never drafted)
+    l_one, _ = step(cache, win[:, :1])
+    # draft the window tail, rewind, then verify the whole window at once
+    _, drafted = step(cache, win[:, 1:])
+    l_win, verified = step(dict(drafted, len=lens), win)
+    np.testing.assert_array_equal(np.asarray(l_one),
+                                  np.asarray(l_win[:, :1]))
+    assert np.array_equal(np.asarray(verified["len"]),
+                          [l0 + k + 1, l1 + k + 1])
