@@ -317,6 +317,95 @@ def simulate_continuous(trace, *, slots: int) -> dict:
             "slot_steps": slot_steps, "mean_occupancy": occ}
 
 
+def simulate_degraded(trace, *, slots: int, preempt_step: int,
+                      quarantine_step: int) -> dict:
+    """:func:`simulate_continuous` under one preemption + one quarantine
+    — the deterministic mirror of the engine's fault containment that
+    ``scripts/check_bench_drift.py`` gates (``check_degraded``).
+
+    At the first tick ``>= preempt_step`` with active rows, the
+    lowest-index active row (remaining budget ``b``) is displaced and
+    re-queued as a continuation of ``gen_len=b`` (the engine re-prefills
+    prompt+generated into a free row: its admission emits one token and
+    ``b - 1`` decode steps finish it, so the preempted request still
+    produces every token — the preempting high-priority request itself is
+    abstracted away, since it would have been served either way and nets
+    out of the clean-vs-degraded comparison). At the first tick
+    ``>= quarantine_step`` with active rows, the lowest-index active row
+    does its decode row-work (``slot_steps`` counts it — the poisoned
+    logits are only detected AFTER the batched forward) but emits
+    nothing and retires; its remaining budget is lost.
+
+    Returns the :func:`simulate_continuous` dict plus ``lost_tokens``
+    (the quarantined row's undelivered budget), ``displaced_steps`` (the
+    preempted row's remaining budget — the ceiling on extra decode
+    steps) and ``extra_prefills`` (the one continuation re-prefill).
+    The containment contract, gated against the clean schedule:
+    tokens lost == lost_tokens exactly, prefills grow by exactly
+    extra_prefills, decode steps grow by at most displaced_steps."""
+    from collections import deque
+    queue: deque = deque()
+    table = [None] * slots
+    i, step = 0, 0
+    decode_steps = prefills = generated = slot_steps = 0
+    lost_tokens = displaced_steps = extra_prefills = 0
+    preempt_done = quarantine_done = False
+    n = len(trace)
+
+    def has_work():
+        return bool(queue) or any(v is not None for v in table)
+
+    while i < n or has_work():
+        while i < n and trace[i]["arrival_step"] <= step:
+            queue.append(trace[i])
+            i += 1
+        for j in range(slots):
+            while table[j] is None and queue:
+                r = queue.popleft()
+                prefills += 1
+                generated += 1                  # first token from prefill
+                if r["gen_len"] - 1 > 0:
+                    table[j] = r["gen_len"] - 1
+        if not preempt_done and step >= preempt_step:
+            victims = [j for j in range(slots) if table[j] is not None]
+            if victims:
+                v = victims[0]
+                displaced_steps = table[v]
+                extra_prefills = 1
+                queue.append({"arrival_step": step,
+                              "prompt_len": trace[0]["prompt_len"],
+                              "gen_len": table[v]})
+                table[v] = None
+                preempt_done = True
+        active = [j for j in range(slots) if table[j] is not None]
+        if active:
+            decode_steps += 1
+            slot_steps += len(active)
+            doomed = None
+            if not quarantine_done and step >= quarantine_step:
+                doomed = active[0]
+                quarantine_done = True
+            for j in active:
+                if j == doomed:
+                    # row-work spent, no token delivered: the remaining
+                    # budget (this tick's token included) is lost.
+                    lost_tokens = table[j]
+                    table[j] = None
+                    continue
+                generated += 1
+                table[j] -= 1
+                if table[j] == 0:
+                    table[j] = None
+        step += 1
+    occ = slot_steps / (decode_steps * slots) if decode_steps else 0.0
+    return {"steps": step, "decode_steps": decode_steps,
+            "prefills": prefills, "generated_tokens": generated,
+            "slot_steps": slot_steps, "mean_occupancy": occ,
+            "lost_tokens": lost_tokens,
+            "displaced_steps": displaced_steps,
+            "extra_prefills": extra_prefills}
+
+
 def simulate_static(trace, *, slots: int) -> dict:
     """The static-batch baseline on the SAME trace: an idle server takes
     up to ``slots`` arrived requests FCFS and decodes the whole batch for

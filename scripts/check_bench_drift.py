@@ -335,6 +335,84 @@ def check_speculative(artifact_path: str) -> int:
     return 0
 
 
+def check_degraded(artifact_path: str) -> int:
+    """Gate the fault-containment schedule model (PR 7): re-simulate the
+    committed continuous trace with ONE preemption and ONE quarantine
+    (pure host arithmetic, :func:`benchmarks.serve_bench
+    .simulate_degraded`) and fail when the degraded engine loses more
+    than the displaced rows' own work:
+
+      1. tokens lost == the quarantined row's undelivered budget exactly
+         (a fault must not eat co-resident rows' tokens);
+      2. prefills grow by exactly the one continuation re-prefill
+         (preempt/resume costs one prefill, nothing else);
+      3. decode steps grow by at most the preempted row's remaining
+         budget (displacement delays work, it must not multiply it)."""
+    from benchmarks.serve_bench import (make_arrival_trace,
+                                        simulate_continuous,
+                                        simulate_degraded)
+
+    with open(artifact_path) as f:
+        committed = json.load(f)
+    section = committed.get("continuous")
+    if not section:
+        print(f"ERROR: no continuous section in {artifact_path} — "
+              f"regenerate: python -m benchmarks.serve_bench --smoke "
+              f"--artifact BENCH_serve.json")
+        return 1
+    tp = dict(section["trace"])
+    slots = tp.pop("slots")
+    tp.pop("max_len", None)
+    tp["gen_lens"] = tuple(tp["gen_lens"])
+    trace = make_arrival_trace(**tp)
+    clean = simulate_continuous(trace, slots=slots)
+    deg = simulate_degraded(trace, slots=slots, preempt_step=4,
+                            quarantine_step=8)
+
+    failures = []
+    lost = deg["lost_tokens"]
+    want_tokens = clean["generated_tokens"] - lost
+    print(f"  degraded schedule (preempt@4, quarantine@8): "
+          f"lost_tokens={lost} displaced_steps={deg['displaced_steps']} "
+          f"extra_prefills={deg['extra_prefills']}")
+    print(f"  {'generated_tokens':>24}: {want_tokens:>10d} == "
+          f"{deg['generated_tokens']:>10d} (clean - lost)")
+    if deg["generated_tokens"] != want_tokens:
+        failures.append(
+            f"fault containment broken: degraded run generated "
+            f"{deg['generated_tokens']} tokens, expected clean "
+            f"{clean['generated_tokens']} minus the quarantined row's "
+            f"{lost} — a fault leaked into co-resident rows' output")
+    print(f"  {'prefills':>24}: "
+          f"{clean['prefills'] + deg['extra_prefills']:>10d} == "
+          f"{deg['prefills']:>10d} (clean + resume re-prefill)")
+    if deg["prefills"] != clean["prefills"] + deg["extra_prefills"]:
+        failures.append(
+            f"preempt/resume no longer costs exactly one re-prefill: "
+            f"{deg['prefills']} prefills vs clean {clean['prefills']} + "
+            f"{deg['extra_prefills']} continuation")
+    bound = clean["decode_steps"] + deg["displaced_steps"]
+    print(f"  {'decode_steps':>24}: {deg['decode_steps']:>10d} <= "
+          f"{bound:>10d} (clean + displaced budget)")
+    if deg["decode_steps"] > bound:
+        failures.append(
+            f"degraded engine pays {deg['decode_steps']} decode steps > "
+            f"clean {clean['decode_steps']} + displaced "
+            f"{deg['displaced_steps']} — preemption must delay the "
+            f"victim's work, not multiply the fleet's")
+    if failures:
+        print("\ndegraded-drift FAIL:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        print("The degraded schedule is derived from the SAME committed "
+              "trace as check_continuous; fix the scheduler, do not "
+              "regenerate the artifact around this gate.")
+        return 1
+    print("\ndegraded-drift OK: one preemption + one quarantine lose "
+          "only the displaced rows' own work.")
+    return 0
+
+
 if __name__ == "__main__":
     if len(sys.argv) > 1:
         compose_path, serve_path = sys.argv[1], (
@@ -350,4 +428,6 @@ if __name__ == "__main__":
     rc = check_continuous(serve_path) or rc
     print()
     rc = check_speculative(serve_path) or rc
+    print()
+    rc = check_degraded(serve_path) or rc
     sys.exit(rc)

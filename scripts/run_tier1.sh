@@ -21,10 +21,12 @@
 #   post-PR5 385 passed / 0 failed / 2 skipped (continuous-batching engine)
 #   post-PR6 393 passed / 0 failed / 2 skipped (speculative decoding +
 #            submit-time adapter pinning)
+#   post-PR7 422 passed / 0 failed / 2 skipped (fault-tolerant serving:
+#            deadlines, preemption, quarantine, FaultPlan injection)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-MIN_PASS="${REPRO_TIER1_MIN_PASS:-393}"
+MIN_PASS="${REPRO_TIER1_MIN_PASS:-422}"
 MAX_FAIL="${REPRO_TIER1_MAX_FAIL:-0}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 TIER="${REPRO_FORCE_TIER:-interpret}"
@@ -84,6 +86,10 @@ echo
 echo "speculative serve smoke (tier ${TIER}): draft/verify/rewind + oracle"
 python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \
     --prompt-len 16 --gen-len 4 --continuous --speculative 3
+echo
+echo "fault-injection serve smoke (tier ${TIER}): quarantine + deadlines"
+python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \
+    --prompt-len 16 --gen-len 4 --continuous --inject nan@3 --deadline 8
 echo
 echo "bench smoke: compose kernels (incl. matmul-fused) + serving cache"
 python -m benchmarks.compose_bench --smoke

@@ -29,9 +29,17 @@ import time
 
 
 class PreemptionHandler:
-    """Installs a SIGTERM/SIGINT handler that only sets a flag."""
+    """Installs a SIGTERM/SIGINT handler that only sets a flag.
 
-    def __init__(self, signals=(signal.SIGTERM,)):
+    Both signals are handled by default: SIGTERM is the cloud preemption
+    notice, and an operator's Ctrl-C (SIGINT) must take the same
+    checkpoint-then-exit path rather than raising KeyboardInterrupt
+    mid-step. Pass ``signals=(signal.SIGTERM,)`` to leave SIGINT alone.
+    The serving-side counterpart of this posture is
+    ``repro.launch.faults.FaultPlan`` (deterministic fault injection for
+    the decode engine)."""
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
         self._requested = False
         self._prev = {}
         self._signals = signals

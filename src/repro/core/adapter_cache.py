@@ -31,7 +31,7 @@ wrong logits.
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Any, Callable
 
 import numpy as np
@@ -72,6 +72,7 @@ class CacheStats:
     entries: int
     current_bytes: int
     max_bytes: int | None
+    thrashing: bool = False    # every recent lookup was an evicting miss
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -135,12 +136,16 @@ class AdapterStateCache:
                  max_bytes: int | None = None,
                  act_dtype: Any = np.float32,
                  fold_gsb: bool = True,
-                 sharding: Any = None):
+                 sharding: Any = None,
+                 thrash_window: int = 4):
         self._precompute = precompute
         self.max_bytes = max_bytes
         self.act_dtype = np.dtype(act_dtype).name
         self.fold_gsb = bool(fold_gsb)
         self.sharding = sharding
+        if thrash_window < 1:
+            raise ValueError(f"thrash_window={thrash_window} < 1")
+        self.thrash_window = int(thrash_window)
         self._registry: dict[str, tuple[int, Any]] = {}
         self._lru: "OrderedDict[AdapterKey, tuple[Any, int]]" = OrderedDict()
         self._hits = 0
@@ -148,6 +153,11 @@ class AdapterStateCache:
         self._evictions = 0
         self._invalidations = 0
         self._current_bytes = 0
+        # Sliding window over the last `thrash_window` lookups: True iff
+        # the lookup was a miss whose insertion evicted someone. All-True
+        # (with a full window) = the working set cannot fit — every
+        # admission pays a full precompute AND kills a neighbour's state.
+        self._recent_evicting: deque[bool] = deque(maxlen=self.thrash_window)
 
     # -- construction -------------------------------------------------------
 
@@ -238,6 +248,7 @@ class AdapterStateCache:
         if key in self._lru:
             self._lru.move_to_end(key)
             self._hits += 1
+            self._recent_evicting.append(False)
             return self._lru[key][0]
         if not allow_miss:
             raise AdapterCacheMiss(
@@ -251,7 +262,9 @@ class AdapterStateCache:
         nbytes = serving_state_nbytes(state)
         self._lru[key] = (state, nbytes)
         self._current_bytes += nbytes
+        ev_before = self._evictions
         self._evict_over_budget()
+        self._recent_evicting.append(self._evictions > ev_before)
         return state
 
     def _evict_over_budget(self) -> None:
@@ -272,7 +285,26 @@ class AdapterStateCache:
             _, nbytes = self._lru.pop(k)
             self._current_bytes -= nbytes
         self._invalidations += len(doomed)
+        # An explicit drop (publish, operator action, fault injection) is
+        # not thrash: the next few lookups will miss because WE removed
+        # the states, not because the working set outgrew the budget.
+        self._recent_evicting.clear()
         return len(doomed)
+
+    def is_resident(self, handle: AdapterHandle) -> bool:
+        """Whether ``handle``'s state is servable from the LRU right now
+        (no staleness check, no LRU-order side effects)."""
+        return self.make_key(handle) in self._lru
+
+    def thrashing(self) -> bool:
+        """True when the last ``thrash_window`` lookups were ALL evicting
+        misses — the working set cannot fit ``max_bytes``, so every
+        admission pays a full precompute and evicts a neighbour. The
+        serving layer uses this for submit-time backpressure
+        (:class:`repro.launch.engine.EngineBusy`) instead of letting the
+        serve path stall on back-to-back precomputes."""
+        return (len(self._recent_evicting) == self.thrash_window
+                and all(self._recent_evicting))
 
     def cached_keys(self) -> tuple[AdapterKey, ...]:
         """LRU order, least recently used first (eviction order)."""
@@ -284,4 +316,5 @@ class AdapterStateCache:
                           invalidations=self._invalidations,
                           entries=len(self._lru),
                           current_bytes=self._current_bytes,
-                          max_bytes=self.max_bytes)
+                          max_bytes=self.max_bytes,
+                          thrashing=self.thrashing())

@@ -50,6 +50,7 @@ expert).
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict, deque
 from typing import Any, Callable
 
@@ -60,12 +61,37 @@ import numpy as np
 from repro.core.adapter import stack_adapter_states
 from repro.core.adapter_cache import (AdapterHandle, AdapterStateCache,
                                       mesh_fingerprint)
+from repro.launch.faults import FaultPlan
 from repro.launch.steps import (StepConfig, make_decode_step,
                                 make_draft_step,
                                 make_prefill_into_slot_step,
                                 make_verify_step)
 from repro.models import init_cache
 from repro.models.config import ModelConfig
+
+#: Every finish_reason a RequestResult can carry.
+#:   eos           the request's eos_id was sampled
+#:   length        the request's max_new_tokens budget ran out
+#:   max_len       the CACHE bound ran out before the request's budget
+#:   error         admission-time resolution failed (error_type/_message)
+#:   timeout       deadline_ticks expired (queued or mid-decode); tokens
+#:                 generated so far are delivered
+#:   error_numeric the row's logits went non-finite and it was quarantined
+FINISH_REASONS = ("eos", "length", "max_len", "error", "timeout",
+                  "error_numeric")
+
+
+class EngineBusy(RuntimeError):
+    """Submit-time backpressure: the adapter-state cache is thrashing
+    (every recent lookup an evicting miss) and admitting this cold
+    request would stall the serve path on yet another full precompute.
+    ``retry_after`` is the suggested backoff in engine ticks (the cache's
+    thrash window — the window must see a non-evicting lookup before the
+    signal clears)."""
+
+    def __init__(self, message: str, retry_after: int = 1):
+        super().__init__(message)
+        self.retry_after = retry_after
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,20 +109,48 @@ class EngineRequest:
     #                                    tenant update() while this request
     #                                    waits in the queue must not change
     #                                    (or lose) the weights it serves with
+    priority: int = 0                  # higher admits first / preempts lower
+    deadline_step: int | None = None   # ABSOLUTE engine step (submit step +
+    #                                    deadline_ticks); expired -> "timeout"
+    # -- continuation bookkeeping (set by preemption, not by submit) --------
+    prefix: np.ndarray | None = None   # tokens generated before preemption
+    orig_prompt: np.ndarray | None = None   # prompt as originally submitted
+    resume_cap: str | None = None      # finish_cap carried across preemption
+    first_admitted: int | None = None  # step of the FIRST admission
+    preempted: int = 0                 # times this request was preempted
 
 
 @dataclasses.dataclass
 class RequestResult:
-    """Everything the engine produced for one request."""
+    """Everything the engine produced for one request.
+
+    Results are PICKLABLE: errors are carried as ``error_type`` (the
+    exception class name) + ``error_message`` strings so a result can
+    cross a process boundary or land in a structured log. The live
+    exception — when the result was produced in THIS process — stays
+    reachable behind the :attr:`error` debug accessor, which pickling
+    drops."""
     request_id: int
     prompt: np.ndarray                 # int32 [P] (as submitted)
     tokens: np.ndarray                 # int32 [n] generated tokens
-    finish_reason: str                 # "eos" | "length" | "max_len" |
-    #                                    "error" (admission failed; see
-    #                                    ``error`` for the exception)
+    finish_reason: str                 # one of FINISH_REASONS
     admitted_step: int                 # engine step the prefill ran in
     finished_step: int                 # engine step the last token landed
-    error: Exception | None = None     # set iff finish_reason == "error"
+    error_type: str | None = None      # exception class name, iff "error"
+    error_message: str | None = None   # str(exception), iff "error"
+    preempted: int = 0                 # times the request was preempted
+
+    @property
+    def error(self) -> Exception | None:
+        """The live exception behind an ``"error"`` result — debug only:
+        present in the producing process, ``None`` after a pickle
+        round-trip (``error_type``/``error_message`` survive)."""
+        return getattr(self, "_live_error", None)
+
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state.pop("_live_error", None)
+        return state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +167,17 @@ class EngineStats:
     draft_steps: int = 0        # base-only draft forwards (speculative)
     verify_steps: int = 0       # full-DoRA k+1-window verifies (= spec ticks)
     accepted_drafts: int = 0    # draft tokens the verify accepted
+    # -- robustness counters (all zero on a sunny-day run) ------------------
+    preemptions: int = 0        # slots displaced by higher-priority requests
+    timeouts: int = 0           # requests retired by deadline expiry
+    quarantined: int = 0        # rows retired with non-finite logits
+    busy_rejections: int = 0    # submits refused with EngineBusy (thrash)
+    spec_disables: int = 0      # speculative ladder trips (accept collapse)
+    spec_reenables: int = 0     # speculative re-enables after cooldown
+    injected_nans: int = 0      # FaultPlan: logits rows poisoned
+    forced_evictions: int = 0   # FaultPlan: cache invalidations fired
+    stale_injected: int = 0     # FaultPlan: admissions handed stale handles
+    slow_ticks: int = 0         # FaultPlan: straggler sleeps injected
 
     @property
     def mean_occupancy(self) -> float:
@@ -141,6 +206,11 @@ class _Slot:
     pos: int = 0                       # host mirror of cache["len"][slot]:
     #                                    where this row's NEXT K/V write
     #                                    lands (speculative rewind target)
+    n_prior: int = 0                   # tokens emitted in earlier legs of a
+    #                                    preempted request: keeps the sample-
+    #                                    key fold count (and so the
+    #                                    temperature>0 stream) continuous
+    #                                    across preempt/resume
 
     @property
     def active(self) -> bool:
@@ -181,6 +251,21 @@ class DecodeEngine:
     Ticks fall back to plain decode when ``temperature > 0`` (rejection
     sampling not yet implemented) or when any active row's window would
     overflow ``max_len``.
+
+    Failure semantics (PR 7): requests may carry a ``priority`` (higher
+    preempts lower when no slot is free — the victim re-queues as a
+    continuation and resumes bitwise) and ``deadline_ticks`` (expiry
+    retires the request with ``finish_reason="timeout"`` and its tokens
+    so far); every tick's fetched logits pass a host-side non-finite
+    guard that quarantines ONLY the poisoned row
+    (``finish_reason="error_numeric"``) while its neighbours stay
+    bitwise; speculative decode self-disables with hysteresis when the
+    accept rate collapses; a thrashing adapter cache pushes back at
+    submit time with :class:`EngineBusy`. All of it is driven
+    deterministically by a :class:`~repro.launch.faults.FaultPlan`, and
+    none of it adds executables: preempt/resume, quarantine and timeout
+    reuse the same traced prefill/decode/verify steps
+    (``compile_counts()`` is fault-invariant).
     """
 
     def __init__(self, mcfg: ModelConfig, scfg: StepConfig, params, *,
@@ -189,7 +274,11 @@ class DecodeEngine:
                  mesh=None, allow_miss: bool = True,
                  temperature: float = 0.0, seed: int = 0,
                  speculative_k: int = 0,
-                 max_cached_steps: int = 16):
+                 max_cached_steps: int = 16,
+                 fault_plan: FaultPlan | None = None,
+                 spec_accept_floor: float = 0.0,
+                 spec_window: int = 4,
+                 spec_reenable_after: int = 8):
         kinds = mcfg.layer_kinds()
         if any(k != "attn" for k in kinds):
             raise NotImplementedError(
@@ -241,6 +330,14 @@ class DecodeEngine:
             raise ValueError(f"speculative_k={speculative_k} < 0")
         self.speculative_k = int(speculative_k)
         self.max_cached_steps = int(max_cached_steps)
+        # -- robustness knobs ----------------------------------------------
+        self.fault_plan = fault_plan
+        if not 0.0 <= spec_accept_floor <= 1.0:
+            raise ValueError(
+                f"spec_accept_floor={spec_accept_floor} not in [0, 1]")
+        self.spec_accept_floor = float(spec_accept_floor)
+        self.spec_window = int(spec_window)
+        self.spec_reenable_after = int(spec_reenable_after)
 
         # Pin the persistent cache to the serving shardings (and the step
         # OUTPUT caches to the same layout): the cache round-trips through
@@ -287,6 +384,21 @@ class DecodeEngine:
         self._draft_steps = 0
         self._verify_steps = 0
         self._accepted_drafts = 0
+        # -- robustness state ----------------------------------------------
+        self._preemptions = 0
+        self._timeouts = 0
+        self._quarantined = 0
+        self._busy_rejections = 0
+        self._spec_disables = 0
+        self._spec_reenables = 0
+        self._injected_nans = 0
+        self._forced_evictions = 0
+        self._stale_injected = 0
+        self._slow_ticks = 0
+        self._nan_tick: tuple = ()     # this tick's poisoned slots (faults)
+        self._stale_pending = False    # next admission gets a stale handle
+        self._spec_rates: list[float] = []   # recent per-tick accept rates
+        self._spec_cooldown = 0        # plain ticks left before re-enable
 
     # -- submission ---------------------------------------------------------
 
@@ -323,6 +435,30 @@ class DecodeEngine:
                     "with adapter_cache= to route per-request adapters)")
             handle = (adapter if isinstance(adapter, AdapterHandle)
                       else self.adapter_cache.current_handle(adapter))
+            # Backpressure BEFORE the state resolution: when the LRU is
+            # thrashing (every recent lookup an evicting miss), admitting
+            # another COLD current-version request would stall the serve
+            # path on yet one more full precompute — refuse it with a
+            # retry hint instead. Stale/unregistered handles fall through
+            # to get_state below so they keep raising their own errors.
+            if (self.adapter_cache.thrashing()
+                    and not self.adapter_cache.is_resident(handle)):
+                try:
+                    cur = self.adapter_cache.current_handle(
+                        handle.adapter_id)
+                except KeyError:
+                    cur = None
+                if cur == handle:
+                    self._busy_rejections += 1
+                    raise EngineBusy(
+                        f"adapter-state cache is thrashing (last "
+                        f"{self.adapter_cache.thrash_window} lookups were "
+                        f"all evicting misses) and "
+                        f"{handle.adapter_id!r}@v{handle.version} is not "
+                        f"resident — admitting it would evict yet another "
+                        f"tenant; retry in ~"
+                        f"{self.adapter_cache.thrash_window} ticks",
+                        retry_after=self.adapter_cache.thrash_window)
             # Resolve the serving tree NOW: submit is the pin point, so
             # a stale handle — or a cold state under warm-only routing —
             # must fail here, before a batch front end queues anything,
@@ -333,7 +469,8 @@ class DecodeEngine:
 
     def submit(self, prompt, *, adapter: AdapterHandle | str | None = None,
                max_new_tokens: int, eos_id: int | None = None,
-               key_id: int | None = None) -> int:
+               key_id: int | None = None, priority: int = 0,
+               deadline_ticks: int | None = None) -> int:
         """Queue one request; returns its request id. ``adapter``: an
         :class:`AdapterHandle`, a registered adapter id (resolved to the
         CURRENT version at submit time), or None when the engine serves a
@@ -347,7 +484,16 @@ class DecodeEngine:
         monotonically increases on a persistent engine — batch-level
         callers wanting call-reproducible sampling pass the request's
         index within the batch, as ``EngineServer``/mixed-length
-        ``serve()`` do)."""
+        ``serve()`` do).
+
+        ``priority``: higher admits first and may PREEMPT a lower-priority
+        active slot when no slot is free (the victim re-queues as a
+        continuation — see :meth:`step`). ``deadline_ticks``: the request
+        expires ``deadline_ticks`` engine steps from now — queued or
+        mid-decode — retiring with ``finish_reason="timeout"`` and
+        whatever tokens it generated."""
+        if deadline_ticks is not None and deadline_ticks < 1:
+            raise ValueError(f"deadline_ticks={deadline_ticks} < 1")
         prompt, handle = self.check_request(prompt, adapter=adapter,
                                             max_new_tokens=max_new_tokens)
         state = (self.adapters if handle is None
@@ -357,7 +503,10 @@ class DecodeEngine:
         self._next_id += 1
         self._queue.append(EngineRequest(
             rid, prompt, handle, int(max_new_tokens), eos_id,
-            key_id=rid if key_id is None else int(key_id), state=state))
+            key_id=rid if key_id is None else int(key_id), state=state,
+            priority=int(priority),
+            deadline_step=(None if deadline_ticks is None
+                           else self._steps + int(deadline_ticks))))
         return rid
 
     # -- scheduling ---------------------------------------------------------
@@ -374,7 +523,17 @@ class DecodeEngine:
                            slot_steps=self._slot_steps,
                            draft_steps=self._draft_steps,
                            verify_steps=self._verify_steps,
-                           accepted_drafts=self._accepted_drafts)
+                           accepted_drafts=self._accepted_drafts,
+                           preemptions=self._preemptions,
+                           timeouts=self._timeouts,
+                           quarantined=self._quarantined,
+                           busy_rejections=self._busy_rejections,
+                           spec_disables=self._spec_disables,
+                           spec_reenables=self._spec_reenables,
+                           injected_nans=self._injected_nans,
+                           forced_evictions=self._forced_evictions,
+                           stale_injected=self._stale_injected,
+                           slow_ticks=self._slow_ticks)
 
     def compile_counts(self) -> dict:
         """How many executables each step fn holds — the compile-count
@@ -414,11 +573,24 @@ class DecodeEngine:
 
     def _finish(self, slot: _Slot, reason: str) -> None:
         req = slot.req
+        # A preempted-and-resumed request reports its ORIGINAL prompt and
+        # the full token stream (earlier legs' prefix + this leg), and its
+        # FIRST admission step — the continuation re-prefill is an engine
+        # implementation detail the caller never sees.
+        prefix = [] if req.prefix is None else list(req.prefix)
         self._results[req.request_id] = RequestResult(
-            request_id=req.request_id, prompt=req.prompt,
-            tokens=np.asarray(slot.generated, np.int32),
-            finish_reason=reason, admitted_step=slot.admitted_step,
-            finished_step=self._steps)
+            request_id=req.request_id,
+            prompt=(req.prompt if req.orig_prompt is None
+                    else req.orig_prompt),
+            tokens=np.asarray(prefix + slot.generated, np.int32),
+            finish_reason=reason,
+            admitted_step=(slot.admitted_step if req.first_admitted is None
+                           else req.first_admitted),
+            finished_step=self._steps, preempted=req.preempted)
+        if reason == "timeout":
+            self._timeouts += 1
+        elif reason == "error_numeric":
+            self._quarantined += 1
         self._retired += 1
         slot.req = None
         slot.handle = None
@@ -440,60 +612,236 @@ class DecodeEngine:
             return slot.finish_cap
         return None
 
+    def _error_result(self, req: EngineRequest, e: Exception) -> None:
+        res = RequestResult(
+            request_id=req.request_id,
+            prompt=(req.prompt if req.orig_prompt is None
+                    else req.orig_prompt),
+            tokens=np.asarray(
+                [] if req.prefix is None else list(req.prefix), np.int32),
+            finish_reason="error",
+            admitted_step=(self._steps if req.first_admitted is None
+                           else req.first_admitted),
+            finished_step=self._steps, error_type=type(e).__name__,
+            error_message=str(e), preempted=req.preempted)
+        res._live_error = e
+        self._results[req.request_id] = res
+
+    def _timeout_queued(self, req: EngineRequest) -> None:
+        """Retire a QUEUED request whose deadline expired: it never held
+        (or no longer holds) a slot, so there is nothing to free — it
+        just reports whatever earlier legs generated."""
+        self._results[req.request_id] = RequestResult(
+            request_id=req.request_id,
+            prompt=(req.prompt if req.orig_prompt is None
+                    else req.orig_prompt),
+            tokens=np.asarray(
+                [] if req.prefix is None else list(req.prefix), np.int32),
+            finish_reason="timeout",
+            admitted_step=(self._steps if req.first_admitted is None
+                           else req.first_admitted),
+            finished_step=self._steps, preempted=req.preempted)
+        self._timeouts += 1
+
+    def _expire_deadlines(self) -> None:
+        """Retire every request — queued or mid-decode — whose absolute
+        deadline step has arrived, with ``finish_reason="timeout"``."""
+        if any(r.deadline_step is not None and self._steps >= r.deadline_step
+               for r in self._queue):
+            keep: deque[EngineRequest] = deque()
+            for req in self._queue:
+                if (req.deadline_step is not None
+                        and self._steps >= req.deadline_step):
+                    self._timeout_queued(req)
+                else:
+                    keep.append(req)
+            self._queue = keep
+        for slot in self._slots:
+            if (slot.active and slot.req.deadline_step is not None
+                    and self._steps >= slot.req.deadline_step):
+                self._finish(slot, "timeout")
+
+    def _apply_tick_faults(self) -> None:
+        """Consult the FaultPlan once at the top of the tick (no-op
+        without a plan): straggler sleeps fire immediately, evictions hit
+        the adapter cache, stale/NaN injections arm flags that the
+        admission / sampling paths consume."""
+        plan = self.fault_plan
+        self._nan_tick = ()
+        if plan is None:
+            return
+        d = plan.slow_at(self._steps)
+        if d > 0:
+            time.sleep(d)
+            self._slow_ticks += 1
+        if plan.evict_at(self._steps) and self.adapter_cache is not None:
+            # Pinned slot/request states are untouched (containment); the
+            # NEXT cold lookup pays a re-precompute — or errors, under
+            # warm-only routing.
+            self.adapter_cache.invalidate()
+            self._forced_evictions += 1
+        if plan.stale_at(self._steps):
+            self._stale_pending = True
+        self._nan_tick = plan.nan_slots(self._steps)
+
+    def _nan_targets(self, rows: list[int]) -> list[int]:
+        """Which of ``rows`` this tick's plan poisons (None = all)."""
+        if not self._nan_tick:
+            return []
+        if any(t is None for t in self._nan_tick):
+            return list(rows)
+        return [i for i in rows if i in self._nan_tick]
+
+    def _poison(self, rows: list[int], logits_np: np.ndarray) -> np.ndarray:
+        """Overwrite the planned rows with NaN on the host mirror.
+        ``np.asarray`` of a jax array is read-only, so injection copies
+        first; the no-fault path never copies."""
+        targets = self._nan_targets(rows)
+        if not targets:
+            return logits_np
+        logits_np = np.array(logits_np)
+        for i in targets:
+            logits_np[i] = np.nan
+            self._injected_nans += 1
+        return logits_np
+
+    def _pop_next(self) -> EngineRequest:
+        """Pop the highest-priority queued request (earliest submitted
+        among equals — all-default-priority queues stay exactly FIFO)."""
+        best = 0
+        for j, r in enumerate(self._queue):
+            if r.priority > self._queue[best].priority:
+                best = j
+        if best == 0:
+            return self._queue.popleft()
+        self._queue.rotate(-best)
+        req = self._queue.popleft()
+        self._queue.rotate(best)
+        return req
+
+    def _preempt(self, idx: int) -> None:
+        """Displace slot ``idx``: re-queue its request as a CONTINUATION
+        whose prompt is (prompt + generated-so-far) — re-admission
+        re-prefills that through the traced prefill-into-slot, and the
+        resumed stream is bitwise the uninterrupted one (the re-prefill's
+        final-position logits ARE the plain decode logits at that
+        frontier, and the sample-key fold count continues via n_prior).
+        The continuation always fits: P' + budget' = P + budget <=
+        max_len keeps room for every remaining token."""
+        slot = self._slots[idx]
+        req = slot.req
+        gen = np.asarray(slot.generated, np.int32)
+        self._queue.append(dataclasses.replace(
+            req,
+            prompt=np.concatenate([req.prompt, gen]),
+            max_new_tokens=slot.budget,
+            prefix=(gen if req.prefix is None
+                    else np.concatenate([req.prefix, gen])),
+            orig_prompt=(req.prompt if req.orig_prompt is None
+                         else req.orig_prompt),
+            resume_cap=slot.finish_cap,
+            first_admitted=(slot.admitted_step if req.first_admitted is None
+                            else req.first_admitted),
+            preempted=req.preempted + 1))
+        self._preemptions += 1
+        slot.req = None
+        slot.handle = None
+        slot.state = None
+        slot.generated = []
+
+    def _admit_into(self, idx: int, slot: _Slot, req: EngineRequest,
+                    on_token) -> None:
+        """One admission: prefill INTO slot ``idx`` + first sampled token.
+        A request whose budget is one token retires here without ever
+        occupying a decode row."""
+        if self._stale_pending and req.adapter is not None:
+            # Fault injection: hand the admission a handle whose version
+            # the registry never issued, with the pinned state stripped —
+            # the late-resolution path below then raises the cache's REAL
+            # stale error (version mismatch), not a simulation of it.
+            self._stale_pending = False
+            self._stale_injected += 1
+            req = dataclasses.replace(
+                req, adapter=dataclasses.replace(
+                    req.adapter, version=req.adapter.version + 1),
+                state=None)
+        try:
+            # submit() pins the resolved tree on the request, so
+            # normally this is a plain attribute read immune to
+            # mid-queue cache churn; the late-resolution fallback
+            # only fires for hand-built EngineRequests.
+            state = (req.state if req.state is not None
+                     else self._resolve_state(req))
+        except Exception as e:
+            # A failed LATE resolution must neither silently
+            # lose the request nor wedge the FIFO behind it
+            # forever: the request is finished with an errored
+            # result and admission moves on to the next one.
+            self._error_result(req, e)
+            return
+        P = req.prompt.shape[0]
+        toks = np.zeros((1, self.max_len), np.int32)
+        toks[0, :P] = req.prompt
+        logits, self.cache = self._prefill(
+            self.params, state, self.cache,
+            {"tokens": jnp.asarray(toks),
+             "prompt_len": jnp.asarray(P, jnp.int32),
+             "slot": jnp.asarray(idx, jnp.int32)})
+        self._prefills += 1
+        self._admitted += 1
+        slot.req = req
+        slot.handle = req.adapter
+        slot.state = state
+        slot.admitted_step = self._steps
+        slot.pos = P    # first decode K/V write lands at P
+        slot.n_prior = 0 if req.prefix is None else int(req.prefix.shape[0])
+        # Token budget: the request's own cap, or the cache bound
+        # (P + budget - 1 decode writes must stay < max_len; the
+        # last sampled token is never written back). A continuation
+        # carries its ORIGINAL cap label (resume_cap): its shrunken
+        # budget always fits the remaining room, so recomputing the
+        # label here would misreport a capped request as "length".
+        room = self.max_len - P
+        slot.budget = min(req.max_new_tokens, room)
+        slot.finish_cap = (req.resume_cap if req.resume_cap is not None
+                           else ("length" if req.max_new_tokens <= room
+                                 else "max_len"))
+        row = np.asarray(logits)[0]
+        if self._nan_targets([idx]):
+            row = np.full_like(row, np.nan)
+            self._injected_nans += 1
+        if not np.isfinite(row).all():
+            # Quarantine at admission: the prefill produced non-finite
+            # logits for THIS row — retire it before it ever decodes.
+            self._finish(slot, "error_numeric")
+            return
+        tok = self._sample_rows([row], [(req.key_id, slot.n_prior)])[0]
+        reason = self._note_token(slot, tok, on_token)
+        if reason is not None:
+            self._finish(slot, reason)   # slot free again
+
     def _admit(self, on_token=None) -> None:
-        """Fill free slots from the queue (FIFO): one prefill-into-slot +
-        first sampled token per admission. A request whose budget is one
-        token retires here without ever occupying a decode row."""
-        for idx, slot in enumerate(self._slots):
-            while not slot.active and self._queue:
-                req = self._queue.popleft()
-                try:
-                    # submit() pins the resolved tree on the request, so
-                    # normally this is a plain attribute read immune to
-                    # mid-queue cache churn; the late-resolution fallback
-                    # only fires for hand-built EngineRequests.
-                    state = (req.state if req.state is not None
-                             else self._resolve_state(req))
-                except Exception as e:
-                    # A failed LATE resolution must neither silently
-                    # lose the request nor wedge the FIFO behind it
-                    # forever: the request is finished with an errored
-                    # result and admission moves on to the next one.
-                    self._results[req.request_id] = RequestResult(
-                        request_id=req.request_id, prompt=req.prompt,
-                        tokens=np.zeros((0,), np.int32),
-                        finish_reason="error",
-                        admitted_step=self._steps,
-                        finished_step=self._steps, error=e)
-                    continue
-                P = req.prompt.shape[0]
-                toks = np.zeros((1, self.max_len), np.int32)
-                toks[0, :P] = req.prompt
-                logits, self.cache = self._prefill(
-                    self.params, state, self.cache,
-                    {"tokens": jnp.asarray(toks),
-                     "prompt_len": jnp.asarray(P, jnp.int32),
-                     "slot": jnp.asarray(idx, jnp.int32)})
-                self._prefills += 1
-                self._admitted += 1
-                slot.req = req
-                slot.handle = req.adapter
-                slot.state = state
-                slot.admitted_step = self._steps
-                slot.pos = P    # first decode K/V write lands at P
-                # Token budget: the request's own cap, or the cache bound
-                # (P + budget - 1 decode writes must stay < max_len; the
-                # last sampled token is never written back).
-                room = self.max_len - P
-                slot.budget = min(req.max_new_tokens, room)
-                slot.finish_cap = ("length"
-                                   if req.max_new_tokens <= room
-                                   else "max_len")
-                tok = self._sample_rows([np.asarray(logits)[0]],
-                                        [(req.key_id, 0)])[0]
-                reason = self._note_token(slot, tok, on_token)
-                if reason is not None:
-                    self._finish(slot, reason)   # slot free again: loop
+        """Fill free slots from the queue (highest priority first, FIFO
+        among equals), then preempt: while a queued request outranks the
+        lowest-priority ACTIVE slot and no slot is free, that victim is
+        displaced (re-queued as a continuation) and the fill loop seats
+        the outranking request in its row. Each preemption strictly
+        raises the displaced slot's priority, so the loop terminates."""
+        while True:
+            for idx, slot in enumerate(self._slots):
+                while not slot.active and self._queue:
+                    self._admit_into(idx, slot, self._pop_next(), on_token)
+            if not self._queue:
+                return
+            best = max(r.priority for r in self._queue)
+            actives = [i for i, s in enumerate(self._slots) if s.active]
+            if not actives:
+                return
+            victim = min(actives,
+                         key=lambda i: (self._slots[i].req.priority, i))
+            if best <= self._slots[victim].req.priority:
+                return
+            self._preempt(victim)
 
     def _slot_grouping(self):
         """(tenant_groups | None, adapter tree) for the CURRENT slot
@@ -602,12 +950,41 @@ class DecodeEngine:
         ``dynamic_update_slice`` would silently shift a row's writes.
         Rows with ≥ k remaining budget always fit (the admission budget
         keeps ``pos + budget <= max_len - 1``); a row at its max_len cap
-        degrades the whole batch to plain decode for its last tokens."""
+        degrades the whole batch to plain decode for its last tokens.
+
+        Degradation ladder: when the measured accept rate over the last
+        ``spec_window`` speculative ticks collapses below
+        ``spec_accept_floor`` (drafts are just burning forwards), the
+        engine falls back to plain decode for ``spec_reenable_after``
+        ticks, then retries — hysteresis, so a borderline adapter does
+        not flap every tick."""
         if self.speculative_k <= 0 or self.temperature > 0.0:
+            return False
+        if self._spec_cooldown > 0:
+            self._spec_cooldown -= 1
+            if self._spec_cooldown == 0:
+                self._spec_reenables += 1
             return False
         k = self.speculative_k
         return all(self._slots[i].pos + k + 1 <= self.max_len
                    for i in active)
+
+    def _quarantine(self, rows: list[int], logits_np: np.ndarray
+                    ) -> tuple[list[int], np.ndarray]:
+        """Per-row non-finite guard over the already-fetched host logits
+        (zero extra device syncs): poisoned rows — injected or genuine —
+        retire with ``finish_reason="error_numeric"``; the survivors'
+        streams are untouched (attention and compose are row-local, so a
+        quarantined neighbour never perturbs a live row's logits).
+        Returns (surviving rows, possibly-poisoned logits)."""
+        logits_np = self._poison(rows, logits_np)
+        flat = logits_np.reshape(logits_np.shape[0], -1)
+        bad = [i for i in rows if not np.isfinite(flat[i]).all()]
+        for i in bad:
+            self._finish(self._slots[i], "error_numeric")
+        if bad:
+            rows = [i for i in rows if self._slots[i].active]
+        return rows, logits_np
 
     def _decode_tick(self, active: list[int], on_token) -> None:
         """One plain batched decode over the active slots."""
@@ -621,10 +998,12 @@ class DecodeEngine:
         logits_np = np.asarray(logits)      # the sampling sync
         self._decode_steps += 1
         self._slot_steps += len(active)
+        active, logits_np = self._quarantine(active, logits_np)
         toks_out = self._sample_rows(
             [logits_np[i] for i in active],
             [(self._slots[i].req.key_id,
-              len(self._slots[i].generated)) for i in active])
+              self._slots[i].n_prior + len(self._slots[i].generated))
+             for i in active])
         for i, tok in zip(active, toks_out):
             slot = self._slots[i]
             slot.pos += 1               # this decode wrote K/V at pos
@@ -678,8 +1057,13 @@ class DecodeEngine:
                                     {"tokens": jnp.asarray(win)})
         logits_np = np.asarray(logits)       # [slots, k+1, V]
         self._verify_steps += 1
+        # Quarantine BEFORE acceptance: a poisoned row emits nothing (its
+        # verify window is garbage end to end) and its rewind target is 0
+        # — the freed row's buffer is garbage either way.
+        active, logits_np = self._quarantine(active, logits_np)
 
         # -- accept: longest matching prefix per row, then rewind -----------
+        accepted_this = 0
         new_len = np.zeros((self.slots,), np.int32)
         for i in active:
             slot = self._slots[i]
@@ -691,6 +1075,7 @@ class DecodeEngine:
             while a < k and drafts[i, a] == true[a]:
                 a += 1
             self._accepted_drafts += a
+            accepted_this += a
             # emit true[0..a]: the a accepted drafts plus the verify's
             # own next token (a rejected draft's correction, or the
             # bonus token after a fully-accepted window).
@@ -704,13 +1089,29 @@ class DecodeEngine:
                 new_len[i] = slot.pos
         self._sync_len(new_len)
 
+        # -- degradation ladder: track the accept rate ----------------------
+        if active and self.spec_accept_floor > 0.0:
+            self._spec_rates.append(accepted_this / (k * len(active)))
+            if len(self._spec_rates) > self.spec_window:
+                self._spec_rates.pop(0)
+            if (len(self._spec_rates) == self.spec_window
+                    and (sum(self._spec_rates) / self.spec_window)
+                    < self.spec_accept_floor):
+                self._spec_cooldown = self.spec_reenable_after
+                self._spec_disables += 1
+                self._spec_rates.clear()
+
     def step(self, on_token=None) -> list[RequestResult]:
-        """One scheduler tick: admit into free slots, then one batched
-        decode — or draft/verify/rewind when ``speculative_k > 0`` — over
-        every active slot. Returns the requests that FINISHED during this
-        tick (also retrievable via :meth:`results`).
+        """One scheduler tick: apply this tick's planned faults, expire
+        deadlines, admit into free slots (preempting lower-priority rows
+        when an outranking request is queued), then one batched decode —
+        or draft/verify/rewind when ``speculative_k > 0`` — over every
+        active slot. Returns the requests that FINISHED during this tick
+        (also retrievable via :meth:`results`).
         ``on_token(request_id, token)`` streams every sampled token."""
         before = set(self._results)
+        self._apply_tick_faults()
+        self._expire_deadlines()
         self._admit(on_token)
         active = [i for i, s in enumerate(self._slots) if s.active]
         if active:
@@ -718,6 +1119,7 @@ class DecodeEngine:
                 self._speculative_tick(active, on_token)
             else:
                 self._decode_tick(active, on_token)
+        self._nan_tick = ()
         self._steps += 1
         return [self._results[rid]
                 for rid in sorted(set(self._results) - before)]

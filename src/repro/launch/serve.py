@@ -318,8 +318,14 @@ class MultiTenantServer:
                 # e.g. a stale/cold adapter handle at admission: surface
                 # the original exception (the engine already dropped the
                 # request with an errored result, so the persistent
-                # engine is NOT wedged for the next call).
-                raise results[rid].error
+                # engine is NOT wedged for the next call). Results carry
+                # errors as strings (picklable); the live exception is
+                # only present in the producing process.
+                err = results[rid].error
+                if err is None:
+                    err = RuntimeError(f"{results[rid].error_type}: "
+                                       f"{results[rid].error_message}")
+                raise err
         return [np.concatenate([p, results[rid].tokens])
                 for p, rid in zip(prompts, rids)]
 
@@ -462,7 +468,8 @@ class EngineServer:
     def __init__(self, mcfg, scfg: StepConfig, params, *,
                  cache: AdapterStateCache, slots: int, max_len: int,
                  mesh=None, temperature: float = 0.0, seed: int = 0,
-                 allow_miss: bool = True, speculative_k: int = 0):
+                 allow_miss: bool = True, speculative_k: int = 0,
+                 fault_plan=None, spec_accept_floor: float = 0.0):
         from repro.launch.engine import DecodeEngine
         _check_cache_mesh(cache, mesh)
         self.cache = cache
@@ -470,11 +477,14 @@ class EngineServer:
                                    max_len=max_len, adapter_cache=cache,
                                    mesh=mesh, temperature=temperature,
                                    seed=seed, allow_miss=allow_miss,
-                                   speculative_k=speculative_k)
+                                   speculative_k=speculative_k,
+                                   fault_plan=fault_plan,
+                                   spec_accept_floor=spec_accept_floor)
 
     def run(self, requests: Sequence[Request], *, gen_len: int,
             eos_id: int | None = None, on_token=None,
-            speculative_k: int | None = None):
+            speculative_k: int | None = None,
+            deadline_ticks=None, priority=0):
         """Serve ``requests`` to completion through the slot table;
         returns a list of :class:`~repro.launch.engine.RequestResult` in
         request order (``result.tokens`` holds the generated tokens —
@@ -489,11 +499,28 @@ class EngineServer:
         ``speculative_k``: override the engine's draft window for THIS
         call (0 = plain decode; None = keep the constructor's setting) —
         a batched tick has one window shape, so k is a call-level
-        scheduler knob, not a per-row one."""
+        scheduler knob, not a per-row one.
+
+        ``deadline_ticks`` / ``priority``: one scalar applied to every
+        request, or a per-request sequence — see
+        :meth:`~repro.launch.engine.DecodeEngine.submit` for the timeout
+        and preemption semantics."""
         if not requests:
             raise ValueError("empty request batch")
         if speculative_k is not None:
             self.engine.speculative_k = int(speculative_k)
+
+        def norm(v, name):
+            if v is None or isinstance(v, (int, np.integer)):
+                return [v] * len(requests)
+            v = list(v)
+            if len(v) != len(requests):
+                raise ValueError(
+                    f"{name} has {len(v)} entries for "
+                    f"{len(requests)} requests")
+            return v
+        deadlines = norm(deadline_ticks, "deadline_ticks")
+        priorities = norm(priority, "priority")
         # All-or-nothing submission: validate every request first, so a
         # bad one mid-batch cannot orphan earlier ones in the persistent
         # queue (they would steal slots from — and stream into — the
@@ -502,7 +529,9 @@ class EngineServer:
                                              max_new_tokens=gen_len)
                    for r in requests]
         rids = [self.engine.submit(p, adapter=h, max_new_tokens=gen_len,
-                                   eos_id=eos_id, key_id=i)
+                                   eos_id=eos_id, key_id=i,
+                                   priority=int(priorities[i] or 0),
+                                   deadline_ticks=deadlines[i])
                 for i, (p, h) in enumerate(checked)]
         results = {res.request_id: res for res in self.engine.run(on_token)}
         return [results[rid] for rid in rids]
@@ -538,6 +567,20 @@ def main() -> None:
                          "tick and verify them in one full-DoRA window; "
                          "asserts the greedy token streams match a plain "
                          "engine's bitwise")
+    ap.add_argument("--inject", default="", metavar="SPEC",
+                    help="with --continuous: deterministic fault plan, "
+                         "e.g. 'nan@3' (poison every row's logits at tick "
+                         "3), 'nan@3:1,evict@5,stale@2,slow@4' — see "
+                         "repro.launch.faults.FaultPlan.parse")
+    ap.add_argument("--deadline", type=int, default=0, metavar="N",
+                    help="with --continuous: give every request a "
+                         "deadline of N engine ticks (expired requests "
+                         "retire with finish_reason='timeout')")
+    ap.add_argument("--priority", type=int, default=0, metavar="N",
+                    help="with --continuous: submit the LAST request at "
+                         "priority N — it admits ahead of the FIFO (and "
+                         "would preempt a lower-priority active row if it "
+                         "arrived mid-flight with every slot busy)")
     args = ap.parse_args()
 
     mcfg = get_config(args.arch, smoke=args.smoke)
@@ -549,6 +592,10 @@ def main() -> None:
     max_len = args.prompt_len + args.gen_len
 
     if args.continuous:
+        from repro.launch.engine import FINISH_REASONS
+        from repro.launch.faults import FaultPlan
+        plan = FaultPlan.parse(args.inject) if args.inject else None
+        faulty = plan is not None or args.deadline > 0 or args.priority > 0
         cache = AdapterStateCache.for_serving(mcfg, scfg)
         _, ad0, _ = build_state(mcfg, dcfg, args.seed + 1)
         cache.register("tenant-0", ad0)
@@ -560,9 +607,14 @@ def main() -> None:
         server = EngineServer(mcfg, scfg, params, cache=cache,
                               slots=args.batch, max_len=max_len,
                               temperature=args.temperature, seed=args.seed,
-                              speculative_k=args.speculative)
+                              speculative_k=args.speculative,
+                              fault_plan=plan)
         t0 = time.time()
-        results = server.run(requests, gen_len=args.gen_len)
+        results = server.run(
+            requests, gen_len=args.gen_len,
+            deadline_ticks=args.deadline if args.deadline > 0 else None,
+            priority=([0] * (n_req - 1) + [args.priority]
+                      if args.priority > 0 else 0))
         dt = time.time() - t0
         st = server.engine.stats()
         print(f"continuous: {n_req} mixed-length requests through "
@@ -570,7 +622,28 @@ def main() -> None:
               f"({st.generated_tokens / dt:.1f} tok/s, "
               f"occupancy {st.mean_occupancy:.2f}, "
               f"{st.decode_steps} decode steps)")
-        if args.speculative > 0 and args.temperature <= 0.0:
+        if faulty:
+            # The fault-containment smoke: every request finishes exactly
+            # once with a valid reason, the slot table drains, and the
+            # ladder's counters are visible to the operator.
+            hist: dict[str, int] = {}
+            for r in results:
+                hist[r.finish_reason] = hist.get(r.finish_reason, 0) + 1
+            assert len(results) == n_req
+            assert all(r.finish_reason in FINISH_REASONS for r in results)
+            assert not server.engine.has_work(), "slot table did not drain"
+            print(f"  faults: inject={args.inject or '-'} "
+                  f"deadline={args.deadline or '-'} "
+                  f"priority={args.priority or '-'} -> finish reasons "
+                  f"{sorted(hist.items())}")
+            print(f"  counters: timeouts={st.timeouts} "
+                  f"quarantined={st.quarantined} "
+                  f"preemptions={st.preemptions} "
+                  f"injected_nans={st.injected_nans} "
+                  f"forced_evictions={st.forced_evictions} "
+                  f"stale_injected={st.stale_injected} "
+                  f"slow_ticks={st.slow_ticks}")
+        if args.speculative > 0 and args.temperature <= 0.0 and not faulty:
             # the greedy-oracle check: same requests through a PLAIN
             # engine must yield bitwise-identical token streams.
             plain = EngineServer(mcfg, scfg, params, cache=cache,

@@ -200,6 +200,16 @@ def make_prefill_into_slot_step(mcfg: ModelConfig, scfg: StepConfig,
     the true P (``cache["len"][slot] = P``), so the first decoded token
     writes at position P.
 
+    This step is ALSO the engine's preempt/resume primitive (PR 7): a
+    preempted request re-queues with prompt' = prompt + generated-so-far,
+    and re-admission simply prefills prompt' into whatever row frees up —
+    no snapshotting of K/V, no extra executable. The resumed stream is
+    bitwise the uninterrupted one because this prefill's final-position
+    logits equal the plain decode logits at that frontier (same dense
+    per-row-frontier attention), and prompt' + remaining budget always
+    fits ``seq`` (the displaced budget shrinks exactly as the prompt
+    grows).
+
     Attention-only archs: an SSM state integrates every processed token
     and cannot be rewound to a slot's true prompt length, so
     prefill-into-slot is ill-defined for Mamba/hybrid stacks (raises at

@@ -103,6 +103,30 @@ def test_preemption_handler_catches_sigterm():
         assert h.preempted
 
 
+def test_preemption_handler_catches_sigint_by_default():
+    """SIGINT is handled as documented: the flag is set and NO
+    KeyboardInterrupt escapes — an operator Ctrl-C takes the same
+    checkpoint-then-exit path as a cloud SIGTERM."""
+    with PreemptionHandler() as h:
+        assert not h.preempted
+        os.kill(os.getpid(), signal.SIGINT)   # would raise if unhandled
+        time.sleep(0.05)
+        assert h.preempted
+    # handler uninstalled on exit: SIGINT raises again outside the block
+    with pytest.raises(KeyboardInterrupt):
+        os.kill(os.getpid(), signal.SIGINT)
+        time.sleep(0.05)
+
+
+def test_preemption_handler_explicit_signals_opt_out():
+    """signals=(SIGTERM,) leaves SIGINT alone (the pre-fix default)."""
+    with PreemptionHandler(signals=(signal.SIGTERM,)) as h:
+        with pytest.raises(KeyboardInterrupt):
+            os.kill(os.getpid(), signal.SIGINT)
+            time.sleep(0.05)
+        assert not h.preempted
+
+
 def test_heartbeat_and_straggler_monitor(tmp_path):
     d = str(tmp_path / "hb")
     for i in range(4):

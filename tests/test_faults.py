@@ -1,0 +1,679 @@
+"""Fault-tolerant serving: the deterministic FaultPlan harness and the
+engine's containment contracts — per-row quarantine, deadlines,
+priority preemption with bitwise resume, stale/evict/slow injection,
+the degradation ladder (speculative auto-disable, EngineBusy
+backpressure), picklable results, and the fault-invariant compiled
+surface.
+
+The one invariant everything here locks: a fault is contained to the
+row (or request) it hits. Co-resident rows' token streams stay bitwise
+identical to a fault-free run, every submitted request finishes exactly
+once with a reason from ``FINISH_REASONS``, and no fault path compiles
+a new executable.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import AdapterStateCache, DoRAConfig
+from repro.launch.engine import (FINISH_REASONS, DecodeEngine, EngineBusy)
+from repro.launch.faults import (FAULT_KINDS, MAX_SLOW_S, FaultEvent,
+                                 FaultPlan)
+from repro.launch.serve import EngineServer, Request, generate
+from repro.launch.steps import StepConfig
+from repro.launch.train import build_state
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+DCFG = DoRAConfig(rank=4, alpha=8.0, mode="eager")
+ARCH = "qwen2-7b"
+
+
+def _setup(tenants=1):
+    mcfg = get_config(ARCH, smoke=True)
+    scfg = StepConfig(dora=DCFG)
+    params, _, _ = build_state(mcfg, DCFG, 0)
+    cache = AdapterStateCache.for_serving(mcfg, scfg)
+    for t in range(tenants):
+        _, ad, _ = build_state(mcfg, DCFG, 10 + t)
+        cache.register(f"t{t}", ad)
+    return mcfg, scfg, params, cache
+
+
+def _perturb(adapters, seed, scale=0.1):
+    """Non-identity adapters (random B leaves): seed-built trees have
+    B == 0, so the draft path would equal the full path and every
+    speculative draft would be accepted — useless for exercising the
+    accept-rate ladder."""
+    key = jax.random.PRNGKey(seed)
+    cnt = [0]
+
+    def f(path, leaf):
+        cnt[0] += 1
+        if "'B'" in "/".join(str(p) for p in path):
+            return jax.random.normal(jax.random.fold_in(key, cnt[0]),
+                                     leaf.shape, leaf.dtype) * scale
+        return leaf
+    return jax.tree_util.tree_map_with_path(f, adapters)
+
+
+def _alone(mcfg, scfg, params, cache, prompt, gen_len, max_len, adapter):
+    toks = np.asarray(generate(
+        mcfg, params, cache.current_handle(adapter), scfg,
+        np.asarray(prompt)[None], gen_len=gen_len, max_len=max_len,
+        adapter_cache=cache))
+    return toks[0, len(prompt):]
+
+
+class TestFaultPlan:
+    """The harness itself: parsing, validation, determinism."""
+
+    def test_parse_round_trip(self):
+        plan = FaultPlan.parse(" nan@3:1, evict@5, stale@2 ,slow@4 ")
+        assert len(plan) == 4
+        assert plan.nan_slots(3) == (1,)
+        assert plan.nan_slots(4) == ()
+        assert plan.evict_at(5) and not plan.evict_at(4)
+        assert plan.stale_at(2) and not plan.stale_at(3)
+        assert plan.slow_at(4) > 0.0 and plan.slow_at(5) == 0.0
+        assert plan.last_step == 5
+        assert FaultPlan.parse("") == FaultPlan()
+        # nan with no slot poisons ALL active rows at that tick
+        assert FaultPlan.parse("nan@7").nan_slots(7) == (None,)
+
+    def test_parse_rejects_bad_specs(self):
+        with pytest.raises(ValueError, match="kind"):
+            FaultPlan.parse("explode@3")
+        with pytest.raises(ValueError):
+            FaultPlan.parse("nan@notanumber")
+        with pytest.raises(ValueError):
+            FaultPlan.parse("nan")
+
+    def test_event_validation(self):
+        with pytest.raises(ValueError, match="kind"):
+            FaultEvent(kind="explode", step=1)
+        with pytest.raises(ValueError, match="step"):
+            FaultEvent(kind="nan", step=-1)
+        assert set(FAULT_KINDS) == {"nan", "evict", "stale", "slow"}
+
+    def test_slow_duration_capped(self):
+        plan = FaultPlan(events=(FaultEvent("slow", 2, duration_s=10.0),
+                                 FaultEvent("slow", 2, duration_s=10.0)))
+        assert plan.slow_at(2) == MAX_SLOW_S
+
+    def test_random_is_seed_deterministic(self):
+        kw = dict(steps=20, slots=4, n_nan=2, n_evict=1, n_stale=1,
+                  n_slow=1)
+        a = FaultPlan.random(7, **kw)
+        b = FaultPlan.random(7, **kw)
+        c = FaultPlan.random(8, **kw)
+        assert a == b and len(a) == 5
+        assert a != c
+        for e in a.events:
+            assert e.kind in FAULT_KINDS and 0 <= e.step < 20
+
+
+class TestQuarantine:
+    ML = 14
+
+    def test_nan_poisons_only_its_row(self):
+        """ACCEPTANCE: a NaN injected into one slot's logits retires that
+        request ``error_numeric`` with its tokens-so-far; the co-resident
+        row's stream is BITWISE the fault-free oracle."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(0)
+        p0 = rng.integers(0, mcfg.vocab_size, 5, dtype=np.int32)
+        p1 = rng.integers(0, mcfg.vocab_size, 7, dtype=np.int32)
+        ref0 = _alone(mcfg, scfg, params, cache, p0, 6, self.ML, "t0")
+        ref1 = _alone(mcfg, scfg, params, cache, p1, 6, self.ML, "t0")
+        eng = DecodeEngine(mcfg, scfg, params, slots=2, max_len=self.ML,
+                           adapter_cache=cache,
+                           fault_plan=FaultPlan.parse("nan@2:0"))
+        eng.submit(p0, adapter="t0", max_new_tokens=6)
+        eng.submit(p1, adapter="t0", max_new_tokens=6)
+        r0, r1 = eng.run()
+        assert r0.finish_reason == "error_numeric"
+        # tick 0 admits+decodes (2 tokens), tick 1 decodes (3); tick 2's
+        # poisoned logits emit nothing — the stream so far is kept and is
+        # a PREFIX of the clean oracle (the fault cost no wrong token)
+        np.testing.assert_array_equal(r0.tokens, ref0[:3])
+        assert r1.finish_reason == "length"
+        np.testing.assert_array_equal(r1.tokens, ref1)
+        st = eng.stats()
+        assert st.quarantined == 1 and st.injected_nans == 1
+        assert not eng.has_work()
+
+    def test_nan_all_rows_quarantines_every_active(self):
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(1)
+        eng = DecodeEngine(mcfg, scfg, params, slots=2, max_len=12,
+                           adapter_cache=cache,
+                           fault_plan=FaultPlan.parse("nan@1"))
+        for P in (5, 6):
+            eng.submit(rng.integers(0, mcfg.vocab_size, P, dtype=np.int32),
+                       adapter="t0", max_new_tokens=5)
+        results = eng.run()
+        assert [r.finish_reason for r in results] == ["error_numeric"] * 2
+        assert all(r.tokens.shape == (2,) for r in results)
+        assert eng.stats().quarantined == 2
+
+    def test_freed_row_readmits_cleanly_after_quarantine(self):
+        """The quarantined slot is a normal free slot afterwards: a
+        queued request admits into it and matches its oracle."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(2)
+        p0 = rng.integers(0, mcfg.vocab_size, 5, dtype=np.int32)
+        p1 = rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32)
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=12,
+                           adapter_cache=cache,
+                           fault_plan=FaultPlan.parse("nan@1:0"))
+        eng.submit(p0, adapter="t0", max_new_tokens=6)
+        eng.submit(p1, adapter="t0", max_new_tokens=3)
+        r0, r1 = eng.run()
+        assert r0.finish_reason == "error_numeric"
+        assert r1.finish_reason == "length"
+        np.testing.assert_array_equal(
+            r1.tokens, _alone(mcfg, scfg, params, cache, p1, 3, 12, "t0"))
+
+
+class TestDeadlines:
+    def test_active_row_times_out_with_partial_tokens(self):
+        """A deadline expiring mid-decode retires ``timeout`` with the
+        tokens generated so far — a PREFIX of the uninterrupted oracle."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(3)
+        p = rng.integers(0, mcfg.vocab_size, 5, dtype=np.int32)
+        ref = _alone(mcfg, scfg, params, cache, p, 8, 14, "t0")
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=14,
+                           adapter_cache=cache)
+        eng.submit(p, adapter="t0", max_new_tokens=8, deadline_ticks=3)
+        (r,) = eng.run()
+        assert r.finish_reason == "timeout"
+        # tick 0 = admit + decode (2 tokens), ticks 1-2 one each; the
+        # deadline check at the top of tick 3 fires before any decode
+        np.testing.assert_array_equal(r.tokens, ref[:4])
+        assert eng.stats().timeouts == 1 and not eng.has_work()
+
+    def test_queued_request_times_out_without_admission(self):
+        """A request whose deadline expires while QUEUED finishes
+        ``timeout`` with zero tokens; the running request is unaffected
+        bitwise."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(4)
+        p0 = rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32)
+        p1 = rng.integers(0, mcfg.vocab_size, 5, dtype=np.int32)
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=15,
+                           adapter_cache=cache)
+        eng.submit(p0, adapter="t0", max_new_tokens=10)
+        eng.submit(p1, adapter="t0", max_new_tokens=4, deadline_ticks=2)
+        r0, r1 = eng.run()
+        assert r1.finish_reason == "timeout" and r1.tokens.shape == (0,)
+        assert r0.finish_reason == "length"
+        np.testing.assert_array_equal(
+            r0.tokens, _alone(mcfg, scfg, params, cache, p0, 10, 15, "t0"))
+
+    def test_generous_deadline_changes_nothing(self):
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(5)
+        p = rng.integers(0, mcfg.vocab_size, 5, dtype=np.int32)
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=12,
+                           adapter_cache=cache)
+        eng.submit(p, adapter="t0", max_new_tokens=4, deadline_ticks=100)
+        (r,) = eng.run()
+        assert r.finish_reason == "length"
+        np.testing.assert_array_equal(
+            r.tokens, _alone(mcfg, scfg, params, cache, p, 4, 12, "t0"))
+        assert eng.stats().timeouts == 0
+
+    def test_submit_rejects_nonpositive_deadline(self):
+        mcfg, scfg, params, cache = _setup()
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=10,
+                           adapter_cache=cache)
+        with pytest.raises(ValueError, match="deadline_ticks"):
+            eng.submit(np.zeros(3, np.int32), adapter="t0",
+                       max_new_tokens=2, deadline_ticks=0)
+
+
+class TestPreemption:
+    ML = 14
+
+    def test_preempt_resume_is_bitwise(self):
+        """ACCEPTANCE: a higher-priority arrival displaces the running
+        request; the victim's generated-so-far tokens are kept, it
+        re-queues as a continuation re-prefilled through the SAME traced
+        prefill-into-slot step, and its full greedy stream is BITWISE the
+        uninterrupted oracle — preemption delays, it never corrupts."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(6)
+        p0 = rng.integers(0, mcfg.vocab_size, 5, dtype=np.int32)
+        ph = rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32)
+        ref0 = _alone(mcfg, scfg, params, cache, p0, 8, self.ML, "t0")
+        refh = _alone(mcfg, scfg, params, cache, ph, 2, self.ML, "t0")
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=self.ML,
+                           adapter_cache=cache)
+        eng.submit(p0, adapter="t0", max_new_tokens=8)
+        for _ in range(2):
+            eng.step()
+        eng.submit(ph, adapter="t0", max_new_tokens=2, priority=5)
+        results = {r.request_id: r for r in eng.run()}
+        r0, rh = results[0], results[1]
+        assert rh.finish_reason == "length"
+        np.testing.assert_array_equal(rh.tokens, refh)
+        assert r0.finish_reason == "length" and r0.preempted == 1
+        np.testing.assert_array_equal(r0.tokens, ref0)
+        # the result reports the ORIGINAL prompt, not the continuation's
+        np.testing.assert_array_equal(r0.prompt, p0)
+        st = eng.stats()
+        assert st.preemptions == 1
+        assert not eng.has_work()
+
+    def test_preemption_keeps_temperature_stream(self):
+        """Sampling keys fold (key_id, token-count) and the continuation
+        resumes the count at its prior-token offset: a preempted
+        temperature stream equals the unpreempted one token-for-token."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(7)
+        p0 = rng.integers(0, mcfg.vocab_size, 5, dtype=np.int32)
+        ph = rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32)
+        ref = DecodeEngine(mcfg, scfg, params, slots=1, max_len=self.ML,
+                           adapter_cache=cache, temperature=0.7, seed=5)
+        ref.submit(p0, adapter="t0", max_new_tokens=6, key_id=0)
+        (ra,) = ref.run()
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=self.ML,
+                           adapter_cache=cache, temperature=0.7, seed=5)
+        eng.submit(p0, adapter="t0", max_new_tokens=6, key_id=0)
+        for _ in range(2):
+            eng.step()
+        eng.submit(ph, adapter="t0", max_new_tokens=2, priority=3,
+                   key_id=1)
+        results = {r.request_id: r for r in eng.run()}
+        assert results[0].preempted == 1
+        np.testing.assert_array_equal(results[0].tokens, ra.tokens)
+
+    def test_equal_priority_never_preempts_and_keeps_fifo(self):
+        """All-default priorities are EXACTLY the old FIFO engine: same
+        admission order, zero preemptions — backward compatible bitwise."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(8)
+        reqs = [(rng.integers(0, mcfg.vocab_size, 4 + i % 3,
+                              dtype=np.int32), 2 + i % 2)
+                for i in range(5)]
+
+        def drive(**submit_kw):
+            eng = DecodeEngine(mcfg, scfg, params, slots=2, max_len=12,
+                               adapter_cache=cache)
+            for p, g in reqs:
+                eng.submit(p, adapter="t0", max_new_tokens=g, **submit_kw)
+            return eng.run(), eng.stats()
+
+        plain, _ = drive()
+        prio, st = drive(priority=0)
+        assert st.preemptions == 0
+        for a, b in zip(plain, prio):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            assert a.admitted_step == b.admitted_step
+
+    def test_priority_orders_queue_admission(self):
+        """A high-priority QUEUED request jumps the FIFO at the next free
+        slot (no preemption needed when it can simply go first)."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(9)
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=12,
+                           adapter_cache=cache)
+        for prio in (0, 0, 2):
+            eng.submit(rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32),
+                       adapter="t0", max_new_tokens=2, priority=prio)
+        results = {r.request_id: r for r in eng.run()}
+        # rid 0 admits first (slot was free at submit-tick); rid 2 beats
+        # rid 1 to the next free slot despite arriving after it
+        assert results[2].admitted_step < results[1].admitted_step
+        assert eng.stats().preemptions == 0
+
+
+class TestInjectionAndCounters:
+    def test_stale_injection_drives_the_real_miss_path(self):
+        """``stale@t`` hands the next admission a version-bumped handle:
+        the REAL AdapterCacheMiss stale path fires, the request finishes
+        ``error`` with a picklable cause, and the engine keeps serving."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(10)
+        p0 = rng.integers(0, mcfg.vocab_size, 5, dtype=np.int32)
+        p1 = rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32)
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=12,
+                           adapter_cache=cache,
+                           fault_plan=FaultPlan.parse("stale@0"))
+        eng.submit(p0, adapter="t0", max_new_tokens=3)
+        eng.submit(p1, adapter="t0", max_new_tokens=3)
+        r0, r1 = eng.run()
+        assert r0.finish_reason == "error"
+        assert r0.error_type == "AdapterCacheMiss"
+        assert "stale" in r0.error_message
+        assert r1.finish_reason == "length"
+        np.testing.assert_array_equal(
+            r1.tokens, _alone(mcfg, scfg, params, cache, p1, 3, 12, "t0"))
+        assert eng.stats().stale_injected == 1
+
+    def test_evict_and_slow_change_no_tokens(self):
+        """Forced eviction and slow ticks are pure stress: the states are
+        pinned at submit, so every stream stays bitwise — only the
+        counters move."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(11)
+        reqs = [(rng.integers(0, mcfg.vocab_size, P, dtype=np.int32), 4)
+                for P in (5, 6)]
+
+        def drive(plan):
+            eng = DecodeEngine(mcfg, scfg, params, slots=2, max_len=12,
+                               adapter_cache=cache, fault_plan=plan)
+            for p, g in reqs:
+                eng.submit(p, adapter="t0", max_new_tokens=g)
+            return eng.run(), eng.stats()
+
+        clean, _ = drive(None)
+        faulty, st = drive(FaultPlan.parse("evict@1,slow@2:0"))
+        assert st.forced_evictions == 1 and st.slow_ticks == 1
+        for a, b in zip(clean, faulty):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            assert a.finish_reason == b.finish_reason
+
+    def test_compiled_surface_is_fault_invariant(self):
+        """ACCEPTANCE: every fault/recovery path — quarantine, deadline,
+        preemption+resume, eviction, slow — reuses the SAME single
+        (prefill-into-slot, decode) pair; faults never compile."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(12)
+        eng = DecodeEngine(
+            mcfg, scfg, params, slots=2, max_len=14, adapter_cache=cache,
+            fault_plan=FaultPlan.parse("nan@2:0,evict@3,slow@1"))
+        for i in range(3):
+            eng.submit(rng.integers(0, mcfg.vocab_size, 4 + i,
+                                    dtype=np.int32),
+                       adapter="t0", max_new_tokens=5,
+                       deadline_ticks=4 if i == 2 else None)
+        for _ in range(2):
+            eng.step()
+        eng.submit(rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32),
+                   adapter="t0", max_new_tokens=2, priority=5)
+        results = eng.run()
+        assert len(results) == 4
+        assert all(r.finish_reason in FINISH_REASONS for r in results)
+        counts = eng.compile_counts()
+        assert counts["prefill_into_slot"] == 1, counts
+        assert counts["decode"] == {None: 1}, counts
+        assert counts["draft"] == 0 and counts["verify"] == {}, counts
+
+
+# The committed join/leave arrival trace (see tests/test_engine.py).
+_TRACE = [(1, 8, 8), (1, 8, 6), (1, 8, 4), (4, 8, 10), (6, 8, 10),
+          (11, 8, 8), (23, 8, 6), (23, 8, 10), (28, 8, 8), (30, 8, 4),
+          (32, 8, 4), (32, 8, 10)]
+
+
+def _drive_trace(eng, prompts, adapters):
+    streams: dict[int, list[int]] = {}
+
+    def on_token(rid, tok):
+        streams.setdefault(rid, []).append(tok)
+
+    i, step = 0, 0
+    while i < len(_TRACE) or eng.has_work():
+        while i < len(_TRACE) and _TRACE[i][0] <= step:
+            eng.submit(prompts[i], adapter=adapters[i],
+                       max_new_tokens=_TRACE[i][2], key_id=i)
+            i += 1
+        eng.step(on_token)
+        step += 1
+    return streams
+
+
+class TestDegradationLadder:
+    ML = 18
+    K = 3
+
+    def test_speculative_auto_disable_and_reenable(self):
+        """ACCEPTANCE: with non-identity adapters and a floor the accept
+        rate cannot clear, the engine disables speculation (plain decode,
+        counters record the transition), re-enables after the cooldown —
+        and the streams stay BITWISE plain-greedy throughout."""
+        mcfg, scfg, params, cache = _setup()
+        _, ad, _ = build_state(mcfg, DCFG, 10)
+        cache.update("t0", _perturb(ad, 7))
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, mcfg.vocab_size, P, dtype=np.int32)
+                   for _, P, _ in _TRACE]
+        ads = ["t0"] * len(_TRACE)
+        spec = DecodeEngine(mcfg, scfg, params, slots=4, max_len=self.ML,
+                            adapter_cache=cache, speculative_k=self.K,
+                            spec_accept_floor=0.99, spec_window=2,
+                            spec_reenable_after=2)
+        plain = DecodeEngine(mcfg, scfg, params, slots=4, max_len=self.ML,
+                             adapter_cache=cache)
+        got = _drive_trace(spec, prompts, ads)
+        want = _drive_trace(plain, prompts, ads)
+        assert got == want
+        st = spec.stats()
+        assert st.spec_disables >= 1, st
+        assert st.spec_reenables >= 1, st
+        assert st.verify_steps > 0        # it did speculate between trips
+        assert st.decode_steps > 0        # and fell back while disabled
+
+    def test_floor_zero_never_trips(self):
+        """The default floor (0.0) is OFF: imperfect drafts alone never
+        disable speculation."""
+        mcfg, scfg, params, cache = _setup()
+        _, ad, _ = build_state(mcfg, DCFG, 10)
+        cache.update("t0", _perturb(ad, 7))
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, mcfg.vocab_size, P, dtype=np.int32)
+                   for _, P, _ in _TRACE]
+        eng = DecodeEngine(mcfg, scfg, params, slots=4, max_len=self.ML,
+                           adapter_cache=cache, speculative_k=self.K)
+        _drive_trace(eng, prompts, ["t0"] * len(_TRACE))
+        st = eng.stats()
+        assert st.spec_disables == 0 and st.spec_reenables == 0
+        assert 0 < st.accepted_drafts < st.draft_steps, st
+
+    def test_busy_backpressure_on_thrashing_cache(self):
+        """ACCEPTANCE: when the LRU is thrashing (a full window of
+        evicting misses), submitting a COLD handle raises EngineBusy with
+        the retry-after hint instead of queueing work that evicts a hot
+        tenant; a RESIDENT handle keeps admitting."""
+        mcfg, scfg, params, cache = _setup(tenants=2)
+        h0 = cache.current_handle("t0")
+        h1 = cache.current_handle("t1")
+        cache.get_state(params, h0)
+        cache.max_bytes = cache.stats().current_bytes  # exactly one state
+        # alternate the two tenants: every lookup evicts the other
+        for _ in range(3):
+            cache.get_state(params, h1)
+            cache.get_state(params, h0)
+        assert cache.thrashing() and cache.is_resident(h0)
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=10,
+                           adapter_cache=cache)
+        rng = np.random.default_rng(13)
+        p = rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32)
+        with pytest.raises(EngineBusy) as ei:
+            eng.submit(p, adapter="t1", max_new_tokens=2)
+        assert ei.value.retry_after == cache.thrash_window
+        assert not eng.has_work()
+        assert eng.stats().busy_rejections == 1
+        # the resident tenant is NOT rejected
+        eng.submit(p, adapter="t0", max_new_tokens=2)
+        (r,) = eng.run()
+        assert r.finish_reason == "length" and r.tokens.shape == (2,)
+
+    def test_stale_handle_still_raises_through_backpressure(self):
+        """Backpressure only guards COLD-but-current handles; a stale
+        handle keeps its hard AdapterCacheMiss (it can never resolve)."""
+        from repro.core import AdapterCacheMiss
+        mcfg, scfg, params, cache = _setup(tenants=2)
+        stale = cache.current_handle("t0")
+        _, ad_new, _ = build_state(mcfg, DCFG, 99)
+        cache.update("t0", ad_new)
+        h0 = cache.current_handle("t0")
+        h1 = cache.current_handle("t1")
+        cache.get_state(params, h0)
+        cache.max_bytes = cache.stats().current_bytes
+        for _ in range(3):
+            cache.get_state(params, h1)
+            cache.get_state(params, h0)
+        assert cache.thrashing()
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=10,
+                           adapter_cache=cache)
+        with pytest.raises(AdapterCacheMiss, match="stale"):
+            eng.submit(np.zeros(3, np.int32), adapter=stale,
+                       max_new_tokens=2)
+
+
+class TestResultPickling:
+    def test_results_round_trip_including_errors(self):
+        """SATELLITE: RequestResult is picklable — the error rides as
+        ``error_type``/``error_message`` strings; the live exception is
+        a debug accessor that does not survive (and must not break) the
+        round trip."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(14)
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=12,
+                           adapter_cache=cache,
+                           fault_plan=FaultPlan.parse("stale@0"))
+        eng.submit(rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32),
+                   adapter="t0", max_new_tokens=3)
+        eng.submit(rng.integers(0, mcfg.vocab_size, 5, dtype=np.int32),
+                   adapter="t0", max_new_tokens=3)
+        results = eng.run()
+        err = next(r for r in results if r.finish_reason == "error")
+        ok = next(r for r in results if r.finish_reason == "length")
+        assert err.error is not None          # live, in-process
+        back_err, back_ok = pickle.loads(pickle.dumps([err, ok]))
+        assert back_err.error is None         # the live object stays home
+        assert back_err.error_type == "AdapterCacheMiss"
+        assert "stale" in back_err.error_message
+        assert back_err.finish_reason == "error"
+        np.testing.assert_array_equal(back_ok.tokens, ok.tokens)
+        np.testing.assert_array_equal(back_ok.prompt, ok.prompt)
+
+
+class TestEngineServerPlumbing:
+    def test_per_request_deadlines_and_priorities(self):
+        """EngineServer.run threads scalar or per-request deadline/
+        priority down to submit; a wrong-length list fails fast."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(15)
+        reqs = [Request(rng.integers(0, mcfg.vocab_size, P,
+                                     dtype=np.int32), "t0")
+                for P in (5, 6)]
+        server = EngineServer(mcfg, scfg, params, cache=cache, slots=2,
+                              max_len=14)
+        results = server.run(reqs, gen_len=8, deadline_ticks=2,
+                             priority=[0, 1])
+        assert [r.finish_reason for r in results] == ["timeout"] * 2
+        assert all(len(r.tokens) <= 3 for r in results)
+        with pytest.raises(ValueError, match="deadline_ticks"):
+            server.run(reqs, gen_len=2, deadline_ticks=[1, 2, 3])
+        with pytest.raises(ValueError, match="priority"):
+            server.run(reqs, gen_len=2, priority=[1])
+        assert not server.engine.has_work()
+
+    def test_server_fault_plan_pass_through(self):
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(16)
+        reqs = [Request(rng.integers(0, mcfg.vocab_size, 5,
+                                     dtype=np.int32), "t0")
+                for _ in range(2)]
+        server = EngineServer(mcfg, scfg, params, cache=cache, slots=2,
+                              max_len=12,
+                              fault_plan=FaultPlan.parse("nan@1:1"))
+        results = server.run(reqs, gen_len=5)
+        reasons = sorted(r.finish_reason for r in results)
+        assert reasons == ["error_numeric", "length"]
+        assert server.engine.stats().quarantined == 1
+
+
+# ---------------------------------------------------------------------------
+# Forced 2-device mesh (subprocess): containment under SPMD.
+# ---------------------------------------------------------------------------
+
+def _run_subprocess(code: str, devices: int):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = SRC
+    env.pop("REPRO_FORCE_TIER", None)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nERR:\n{out.stderr}"
+    return out.stdout
+
+
+_FAULT_SPMD = """
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core import AdapterStateCache, DoRAConfig
+    from repro.launch.engine import DecodeEngine
+    from repro.launch.faults import FaultPlan
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.steps import StepConfig
+    from repro.launch.train import build_state
+
+    assert jax.device_count() == 2
+    mesh = make_debug_mesh(2, 1)
+    DCFG = DoRAConfig(rank=4, alpha=8.0, mode="eager")
+    mcfg = get_config("qwen2-7b", smoke=True)
+    scfg = StepConfig(dora=DCFG)
+    params, _, _ = build_state(mcfg, DCFG, 0)
+    cache = AdapterStateCache.for_serving(mcfg, scfg, mesh)
+    _, ad, _ = build_state(mcfg, DCFG, 10)
+    cache.register("t0", ad)
+
+    ML = 14
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, mcfg.vocab_size, P, dtype=np.int32), g)
+            for P, g in [(5, 6), (6, 6), (4, 5), (5, 4)]]
+
+    def drive(plan):
+        eng = DecodeEngine(mcfg, scfg, params, slots=4, max_len=ML,
+                           adapter_cache=cache, mesh=mesh,
+                           fault_plan=plan)
+        for p, g in reqs:
+            eng.submit(p, adapter="t0", max_new_tokens=g)
+        return eng.run(), eng
+
+    clean, _ = drive(None)
+    # slot 1's row is poisoned at tick 2; every OTHER row must stay
+    # bitwise identical to the fault-free run under the same 2-device
+    # mesh — containment is an SPMD property too (the quarantine guard
+    # reads the same host logits sampling already fetched)
+    faulty, eng = drive(FaultPlan.parse("nan@2:1"))
+    assert eng.stats().quarantined == 1
+    for c, f in zip(clean, faulty):
+        if f.finish_reason == "error_numeric":
+            assert f.request_id == 1
+            assert np.array_equal(f.tokens, c.tokens[:len(f.tokens)])
+        else:
+            assert f.finish_reason == c.finish_reason
+            assert np.array_equal(f.tokens, c.tokens), f.request_id
+    counts = eng.compile_counts()
+    assert counts["prefill_into_slot"] == 1, counts
+    assert counts["decode"] == {None: 1}, counts
+    print("FAULT_SPMD_OK")
+"""
+
+
+@pytest.mark.slow
+def test_fault_containment_spmd():
+    """Acceptance on a forced 2-device CPU mesh: a quarantined row's
+    neighbours stream bitwise the fault-free run's tokens, and the fault
+    path compiles nothing."""
+    out = _run_subprocess(_FAULT_SPMD, 2)
+    assert "FAULT_SPMD_OK" in out, out

@@ -234,3 +234,96 @@ def test_rewound_rows_verify_as_one_window(l0, l1, k, seed):
                                   np.asarray(l_win[:, :1]))
     assert np.array_equal(np.asarray(verified["len"]),
                           [l0 + k + 1, l1 + k + 1])
+
+
+# ---------------------------------------------------------------------------
+# Invariant 6 — fault containment: under ANY seeded FaultPlan (random
+# NaN injections, forced evictions, stale handles, slow ticks) plus an
+# optional deadline, the engine (a) finishes every submitted request
+# exactly once with a reason from FINISH_REASONS, (b) leaks no slots,
+# (c) keeps unaffected requests' greedy streams BITWISE equal to the
+# fault-free run, (d) hands affected requests a PREFIX of their clean
+# stream (a fault may truncate, never corrupt), and (e) compiles
+# nothing on any fault path.
+# ---------------------------------------------------------------------------
+
+_FAULT_ML = 12
+_FAULT_REQS = [(5, 4), (6, 5), (4, 3), (5, 4)]   # (prompt_len, budget)
+
+
+@functools.lru_cache(maxsize=1)
+def _fault_setup():
+    from repro.configs import get_config
+    from repro.core import AdapterStateCache
+    from repro.launch.steps import StepConfig
+    from repro.launch.train import build_state
+
+    mcfg = get_config("qwen2-7b", smoke=True)
+    scfg = StepConfig(dora=DoRAConfig(rank=4, alpha=8.0, mode="eager"))
+    params, _, _ = build_state(mcfg, scfg.dora, 0)
+    cache = AdapterStateCache.for_serving(mcfg, scfg)
+    _, ad, _ = build_state(mcfg, scfg.dora, 10)
+    cache.register("t0", ad)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, mcfg.vocab_size, P, dtype=np.int32)
+               for P, _ in _FAULT_REQS]
+    return mcfg, scfg, params, cache, prompts
+
+
+def _fault_drive(plan, deadline):
+    from repro.launch.engine import DecodeEngine
+
+    mcfg, scfg, params, cache, prompts = _fault_setup()
+    eng = DecodeEngine(mcfg, scfg, params, slots=2, max_len=_FAULT_ML,
+                       adapter_cache=cache, fault_plan=plan)
+    for i, (p, (_, g)) in enumerate(zip(prompts, _FAULT_REQS)):
+        eng.submit(p, adapter="t0", max_new_tokens=g, key_id=i,
+                   deadline_ticks=deadline if i == 3 else None)
+    return eng.run(), eng
+
+
+@functools.lru_cache(maxsize=1)
+def _fault_clean_streams():
+    results, _ = _fault_drive(None, None)
+    return {r.request_id: tuple(int(t) for t in r.tokens)
+            for r in results}
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=_SEED,
+       n_nan=st.integers(min_value=0, max_value=2),
+       n_evict=st.integers(min_value=0, max_value=1),
+       n_stale=st.integers(min_value=0, max_value=1),
+       n_slow=st.integers(min_value=0, max_value=1),
+       deadline=st.sampled_from([None, 3]))
+def test_fault_containment_under_random_plan(seed, n_nan, n_evict,
+                                             n_stale, n_slow, deadline):
+    from repro.launch.engine import FINISH_REASONS
+    from repro.launch.faults import FaultPlan
+
+    plan = FaultPlan.random(seed, steps=12, slots=2, n_nan=n_nan,
+                            n_evict=n_evict, n_stale=n_stale,
+                            n_slow=n_slow)
+    clean = _fault_clean_streams()
+    results, eng = _fault_drive(plan, deadline)
+    # (a) exactly-once completion with a valid reason
+    assert sorted(r.request_id for r in results) == [0, 1, 2, 3]
+    assert all(r.finish_reason in FINISH_REASONS for r in results)
+    # (b) no slot leaks: queue drained, every row free
+    assert not eng.has_work()
+    # (c)/(d) containment: unaffected streams bitwise, affected streams
+    # a prefix — a fault truncates its own request, never rewrites it
+    for r in results:
+        got = tuple(int(t) for t in r.tokens)
+        want = clean[r.request_id]
+        affected = r.finish_reason in ("error", "error_numeric",
+                                       "timeout")
+        if affected:
+            assert got == want[:len(got)], \
+                (r.request_id, r.finish_reason, plan)
+        else:
+            assert got == want, (r.request_id, r.finish_reason, plan)
+    # (e) the fault paths reuse the clean executables
+    counts = eng.compile_counts()
+    assert counts["prefill_into_slot"] == 1, counts
+    assert counts["decode"] == {None: 1}, counts
