@@ -29,6 +29,18 @@ asserted against the real engine's counters) is committed and gated in
 baseline, which pays idle-row decode); measured tok/s stays
 informational.
 
+The paged section prices the BLOCK-PAGED engine (``paged=True``:
+pooled K/V blocks + chunked prefill) on a long-context variant of the
+same trace (one 48-token prompt among the 8-token neighbours): the
+schedule AND block-occupancy model (``simulate_paged`` — the same
+pure-host mirror, extended with the engine's block reserve/grow/free
+accounting) is asserted against the real paged engine's counters and
+``pool_stats()``, and the MEMORY model (``paged_cache_bytes_model`` —
+peak resident block bytes vs the rectangular ``slots * max_len``
+reservation, pure shape arithmetic) is committed and gated in
+``scripts/check_bench_drift.py`` (paged must stay strictly under the
+rectangular reservation for this trace).
+
 Absolute tok/s on this CPU is meaningless for TPU; the *ratio* isolates
 exactly the per-token norm work the cache removes, and is recorded in the
 committed ``BENCH_serve.json`` to seed the perf trajectory.
@@ -729,8 +741,292 @@ def run_speculative(arch="qwen2-7b", *, smoke=True, rank=64, slots=4,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache + chunked prefill (block pool vs rectangular HBM).
+# ---------------------------------------------------------------------------
+
+def make_longcontext_trace(trace_params, *, long_arrival: int,
+                           long_prompt_len: int, long_gen_len: int):
+    """The committed short-request arrival trace with ONE long prompt
+    spliced in at ``long_arrival`` (in arrival order — the engine's FIFO
+    queue sees it exactly where a real long-context tenant would land).
+    Deterministic given the parameters; ``scripts/check_bench_drift.py``
+    rebuilds it from the committed artifact."""
+    trace = make_arrival_trace(**trace_params)
+    req = {"arrival_step": int(long_arrival),
+           "prompt_len": int(long_prompt_len),
+           "gen_len": int(long_gen_len)}
+    idx = next((i for i, r in enumerate(trace)
+                if r["arrival_step"] > long_arrival), len(trace))
+    trace.insert(idx, req)
+    return trace
+
+
+def simulate_paged(trace, *, slots: int, max_len: int, block_size: int,
+                   n_blocks: int, chunk: int) -> dict:
+    """Pure-host mirror of the PAGED engine's scheduling AND block
+    accounting: FIFO admission reserves ``ceil((P+1)/block_size)`` blocks
+    up front (deferring the WHOLE queue when the pool can't cover the
+    head — the engine's head-of-line policy), the prompt streams in one
+    ``chunk`` per tick with the FINAL chunk sampling the first token
+    (the row joins decode the same tick), each decode tick grows the
+    active rows' block coverage to their write frontier, and retirement
+    frees a row's blocks. ``run_paged`` asserts every counter — and the
+    peak block occupancy — against the real engine.
+
+    Does NOT model reclaim-by-preemption: the committed trace must fit
+    ``n_blocks`` (a pool too small raises, rather than silently
+    diverging from the engine's victim policy)."""
+    if max_len % block_size:
+        raise ValueError(f"max_len={max_len} % block_size={block_size}")
+    max_blocks = max_len // block_size
+    if n_blocks < max_blocks:
+        raise ValueError(f"n_blocks={n_blocks} < max_blocks={max_blocks}")
+    from collections import deque
+    queue: deque = deque()
+    rows = [None] * slots
+    i, step = 0, 0
+    decode_steps = prefills = generated = slot_steps = 0
+    free, used, peak_used = n_blocks, 0, 0
+    resident_block_steps = deferral_ticks = 0
+    n = len(trace)
+
+    def blocks_for(upto):
+        return -(-upto // block_size)
+
+    def retire(j):
+        nonlocal free, used
+        free += rows[j]["blocks"]
+        used -= rows[j]["blocks"]
+        rows[j] = None
+
+    def has_work():
+        return bool(queue) or any(r is not None for r in rows)
+
+    while i < n or has_work():
+        while i < n and trace[i]["arrival_step"] <= step:
+            queue.append(trace[i])
+            i += 1
+        for j in range(slots):
+            if rows[j] is None and queue:
+                r = queue[0]
+                need = blocks_for(r["prompt_len"] + 1)
+                if free < need:
+                    deferral_ticks += 1
+                    break       # head-of-line: the engine stops admitting
+                queue.popleft()
+                free -= need
+                used += need
+                peak_used = max(peak_used, used)
+                rows[j] = {"p": r["prompt_len"], "budget": r["gen_len"],
+                           "chunk_next": 0, "prefilling": True,
+                           "pos": 0, "blocks": need, "emitted": 0}
+        # One prompt chunk per admitting slot; the FINAL chunk samples
+        # the first token and the row joins decode THIS tick.
+        for j in range(slots):
+            s = rows[j]
+            if s is None or not s["prefilling"]:
+                continue
+            if s["p"] - s["chunk_next"] <= chunk:
+                s["prefilling"] = False
+                s["pos"] = s["p"]
+                prefills += 1
+                generated += 1
+                s["emitted"] = 1
+                if s["emitted"] == s["budget"]:
+                    retire(j)
+            else:
+                s["chunk_next"] += chunk
+        active = [j for j in range(slots)
+                  if rows[j] is not None and not rows[j]["prefilling"]]
+        if active:
+            for j in active:    # cover this tick's K/V write at pos
+                s = rows[j]
+                need = blocks_for(s["pos"] + 1)
+                grow = need - s["blocks"]
+                if grow > 0:
+                    if free < grow:
+                        raise RuntimeError(
+                            "simulate_paged does not model reclaim "
+                            "preemption — size n_blocks above the "
+                            "trace's peak demand")
+                    free -= grow
+                    used += grow
+                    s["blocks"] = need
+                    peak_used = max(peak_used, used)
+            decode_steps += 1
+            slot_steps += len(active)
+            for j in active:
+                s = rows[j]
+                generated += 1
+                s["emitted"] += 1
+                s["pos"] += 1
+                if s["emitted"] == s["budget"]:
+                    retire(j)
+        resident_block_steps += used
+        step += 1
+    occ = slot_steps / (decode_steps * slots) if decode_steps else 0.0
+    return {"steps": step, "decode_steps": decode_steps,
+            "prefills": prefills, "generated_tokens": generated,
+            "slot_steps": slot_steps, "mean_occupancy": occ,
+            "peak_used_blocks": peak_used,
+            "resident_block_steps": resident_block_steps,
+            "mean_resident_blocks":
+                resident_block_steps / step if step else 0.0,
+            "deferral_ticks": deferral_ticks}
+
+
+def paged_cache_bytes_model(mcfg, *, slots: int, max_len: int,
+                            block_size: int, n_blocks: int,
+                            peak_used_blocks: int,
+                            mean_resident_blocks: float) -> dict:
+    """ANALYTIC K/V HBM residency of the paged cache vs the rectangular
+    one, priced from ``cache_shapes`` (pure shape arithmetic — machine-
+    independent, transfers to TPU):
+
+      - ``rect_kv_bytes``: the rectangular engine pins ``slots *
+        max_len`` K/V positions for its whole lifetime, long tenant or
+        not;
+      - ``pool_kv_bytes``: the paged pool's allocation (``n_blocks``
+        blocks + the int32 block table) — the engine sizes it to the
+        traffic, under the rectangular reservation;
+      - ``peak_resident_bytes``: blocks the committed long-context trace
+        ACTUALLY touches at its worst tick (``simulate_paged``'s peak,
+        asserted against the real engine's ``pool_stats``).
+
+    ``scripts/check_bench_drift.py`` re-prices this and fails when paged
+    residency stops beating the rectangular reservation."""
+    from repro.models import cache_shapes
+
+    def kv_bytes(shapes):
+        return sum(int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+                   for layer in shapes["stack"].values()
+                   for key, s in layer.items() if key in ("k", "v"))
+
+    paged = cache_shapes(mcfg, slots, max_len, row_lens=True,
+                         block_size=block_size, n_blocks=n_blocks)
+    rect = cache_shapes(mcfg, slots, max_len, row_lens=True)
+    bytes_per_block = kv_bytes(paged) // n_blocks
+    table_bytes = int(np.prod(paged["pages"].shape)) * 4
+    rect_kv_bytes = kv_bytes(rect)
+    pool_kv_bytes = bytes_per_block * n_blocks + table_bytes
+    peak_resident = bytes_per_block * peak_used_blocks + table_bytes
+    return {"arch": mcfg.name, "slots": slots, "max_len": max_len,
+            "block_size": block_size, "n_blocks": n_blocks,
+            "max_blocks": max_len // block_size,
+            "rect_blocks": slots * (max_len // block_size),
+            "bytes_per_block": bytes_per_block,
+            "table_bytes": table_bytes,
+            "rect_kv_bytes": rect_kv_bytes,
+            "pool_kv_bytes": pool_kv_bytes,
+            "peak_resident_bytes": peak_resident,
+            "mean_resident_bytes":
+                bytes_per_block * mean_resident_blocks + table_bytes,
+            "rect_over_paged_pool": rect_kv_bytes / pool_kv_bytes,
+            "rect_over_paged_peak": rect_kv_bytes / peak_resident}
+
+
+def run_paged(arch="qwen2-7b", *, smoke=True, rank=64, slots=4,
+              verbose=True) -> dict:
+    """Block-paged engine + chunked prefill on the LONG-CONTEXT trace
+    (the committed short-request trace plus one 48-token prompt).
+    Deterministic and gated twice over, like ``run_continuous``:
+
+      - the schedule/occupancy/block model (``simulate_paged``) must
+        reproduce the real paged engine's counters AND pool stats
+        exactly (asserted here);
+      - the committed memory model (``paged_cache_bytes_model``) must
+        keep paged residency strictly under the rectangular
+        ``slots * max_len`` reservation (gated in
+        ``scripts/check_bench_drift.py``, ``check_paged``).
+
+    Measured tok/s stays informational (CPU wall-clock)."""
+    from repro.launch.engine import DecodeEngine
+
+    trace_params = {"n_requests": 12, "mean_interarrival": 2.0,
+                    "prompt_len": 8, "gen_lens": (4, 6, 8, 10), "seed": 0}
+    paged_params = {"slots": slots, "max_len": 64, "block_size": 8,
+                    "n_blocks": 20, "prefill_chunk": 8,
+                    "long_arrival": 2, "long_prompt_len": 48,
+                    "long_gen_len": 6}
+    trace = make_longcontext_trace(
+        trace_params, long_arrival=paged_params["long_arrival"],
+        long_prompt_len=paged_params["long_prompt_len"],
+        long_gen_len=paged_params["long_gen_len"])
+    max_len = paged_params["max_len"]
+    sim = simulate_paged(trace, slots=slots, max_len=max_len,
+                         block_size=paged_params["block_size"],
+                         n_blocks=paged_params["n_blocks"],
+                         chunk=paged_params["prefill_chunk"])
+
+    mcfg = get_config(arch, smoke=smoke)
+    dcfg = DoRAConfig(rank=rank, alpha=2.0 * rank, mode="auto")
+    scfg = StepConfig(dora=dcfg)
+    params, adapters, _ = build_state(mcfg, dcfg, 0)
+    folded = jax.block_until_ready(jax.jit(make_precompute_step(
+        mcfg, scfg, fold_gsb=True))(params, adapters))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, mcfg.vocab_size, r["prompt_len"],
+                            dtype=np.int32) for r in trace]
+    gen_lens = [r["gen_len"] for r in trace]
+
+    engine = DecodeEngine(mcfg, scfg, params, slots=slots,
+                          max_len=max_len, adapters=folded, paged=True,
+                          block_size=paged_params["block_size"],
+                          n_blocks=paged_params["n_blocks"],
+                          prefill_chunk=paged_params["prefill_chunk"])
+    _drive_engine(engine, trace, prompts, gen_lens)
+    st = engine.stats()
+    for field in ("steps", "decode_steps", "prefills",
+                  "generated_tokens", "slot_steps"):
+        got = getattr(st, field)
+        want = sim[field]
+        assert got == want, (
+            f"paged engine {field}={got} but the committed scheduling "
+            f"model says {want} — simulate_paged no longer mirrors the "
+            f"engine; fix one of them before regenerating the artifact")
+    ps = engine.pool_stats()
+    assert ps["peak_used_blocks"] == sim["peak_used_blocks"], (
+        f"engine peak {ps['peak_used_blocks']} blocks != model "
+        f"{sim['peak_used_blocks']} — the block accounting in "
+        f"simulate_paged no longer mirrors the engine's pool")
+    assert ps["used_blocks"] == 0, f"blocks leaked after drain: {ps}"
+    t0 = time.perf_counter()
+    _drive_engine(engine, trace, prompts, gen_lens)
+    dt = time.perf_counter() - t0
+
+    model = paged_cache_bytes_model(
+        mcfg, slots=slots, max_len=max_len,
+        block_size=paged_params["block_size"],
+        n_blocks=paged_params["n_blocks"],
+        peak_used_blocks=sim["peak_used_blocks"],
+        mean_resident_blocks=sim["mean_resident_blocks"])
+    out = {"trace": dict(trace_params, **paged_params,
+                         gen_lens=list(trace_params["gen_lens"])),
+           "schedule_model": sim,
+           "memory_model": model,
+           "measured": {"engine_tok_s": sim["generated_tokens"] / dt}}
+    if verbose:
+        print(f"  paged: {sim['decode_steps']} decode steps over "
+              f"{sim['steps']} ticks, occupancy "
+              f"{sim['mean_occupancy']:.2f} "
+              f"(long P={paged_params['long_prompt_len']} admitted in "
+              f"{-(-paged_params['long_prompt_len'] // paged_params['prefill_chunk'])} chunks)")
+        print(f"  blocks: peak {sim['peak_used_blocks']}/"
+              f"{paged_params['n_blocks']} used (rectangular pins "
+              f"{model['rect_blocks']}); resident bytes peak "
+              f"{model['peak_resident_bytes']} vs rect "
+              f"{model['rect_kv_bytes']} "
+              f"({model['rect_over_paged_peak']:.2f}x smaller)")
+        print(f"  model == engine counters + pool stats: OK; "
+              f"{out['measured']['engine_tok_s']:.1f} tok/s (measured)")
+    save("serve_bench_paged", [out])
+    return out
+
+
 def write_artifact(rows, multi_tenant=None, continuous=None,
-                   speculative=None, path="BENCH_serve.json") -> str:
+                   speculative=None, paged=None,
+                   path="BENCH_serve.json") -> str:
     payload = {"bench": "serve_decode",
                "rows": rows,
                "notes": "smoke-config CPU decode; the cached/uncached "
@@ -750,13 +1046,21 @@ def write_artifact(rows, multi_tenant=None, continuous=None,
                         "accept-rate schedule model is gated (speculative "
                         "must need fewer full-DoRA verify steps than "
                         "plain decode emits tokens, at full AND degraded "
-                        "accept rates)."}
+                        "accept rates). paged: block-paged engine + "
+                        "chunked prefill on a long-context trace — the "
+                        "schedule/block model is asserted against the "
+                        "real engine and the memory model (peak resident "
+                        "block bytes vs the rectangular slots*max_len "
+                        "reservation) is gated (paged must stay strictly "
+                        "under rectangular)."}
     if multi_tenant is not None:
         payload["multi_tenant"] = multi_tenant
     if continuous is not None:
         payload["continuous"] = continuous
     if speculative is not None:
         payload["speculative"] = speculative
+    if paged is not None:
+        payload["paged"] = paged
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float)
         f.write("\n")
@@ -788,8 +1092,10 @@ def main() -> None:
     cont = run_continuous(args.arch, smoke=True, rank=args.rank)
     print("# Speculative decode: draft/verify vs plain on the same trace")
     spec = run_speculative(args.arch, smoke=True, rank=args.rank)
+    print("# Paged KV cache: block pool + chunked prefill, long-context trace")
+    pg = run_paged(args.arch, smoke=True, rank=args.rank)
     if args.artifact:
-        print(f"wrote {os.path.abspath(write_artifact(rows, mt, cont, spec, args.artifact))}")
+        print(f"wrote {os.path.abspath(write_artifact(rows, mt, cont, spec, pg, args.artifact))}")
 
 
 if __name__ == "__main__":

@@ -25,7 +25,14 @@ artifacts:
     accept-rate schedule model re-simulated from the committed trace at
     the committed draft window ``k`` — speculative decode must keep
     needing fewer full-DoRA steps (verify + fallback decode) than plain
-    decode emits tokens, at the full AND the degraded accept rate.
+    decode emits tokens, at the full AND the degraded accept rate;
+  - ``BENCH_serve.json`` (``paged`` section): the block-paged engine's
+    schedule/block model re-simulated from the committed long-context
+    trace, and its memory model re-priced from the current cache
+    shapes — paged residency (peak blocks actually touched, and the
+    pool allocation itself) must stay strictly under the rectangular
+    ``slots * max_len`` reservation, and the chunked admission must not
+    cost more ticks or decode steps than committed.
 
 Measured sections (HLO bytes-accessed, wall clocks, tok/s) are
 machine-dependent and stay informational — they are never gated here.
@@ -335,6 +342,114 @@ def check_speculative(artifact_path: str) -> int:
     return 0
 
 
+def check_paged(artifact_path: str) -> int:
+    """Gate the paged-cache schedule AND memory models: re-simulate the
+    committed long-context trace (pure host arithmetic — schedule plus
+    the engine's block reserve/grow/free accounting) and re-price the
+    residency from the CURRENT cache shapes. Fails when the paged
+    engine needs more ticks / decode steps / peak blocks than
+    committed, when a block grew, or when paged residency stops beating
+    the rectangular ``slots * max_len`` reservation — the tentpole's
+    whole point."""
+    from benchmarks.serve_bench import (make_longcontext_trace,
+                                        paged_cache_bytes_model,
+                                        simulate_paged)
+    from repro.configs import get_config
+
+    with open(artifact_path) as f:
+        committed = json.load(f)
+    section = committed.get("paged")
+    if not section:
+        print(f"ERROR: no paged section in {artifact_path} — "
+              f"regenerate: python -m benchmarks.serve_bench --smoke "
+              f"--artifact BENCH_serve.json")
+        return 1
+    tp = dict(section["trace"])
+    slots = tp.pop("slots")
+    max_len = tp.pop("max_len")
+    block_size = tp.pop("block_size")
+    n_blocks = tp.pop("n_blocks")
+    chunk = tp.pop("prefill_chunk")
+    long_kw = {k: tp.pop(k) for k in
+               ("long_arrival", "long_prompt_len", "long_gen_len")}
+    tp["gen_lens"] = tuple(tp["gen_lens"])
+    trace = make_longcontext_trace(tp, **long_kw)
+    sim = simulate_paged(trace, slots=slots, max_len=max_len,
+                         block_size=block_size, n_blocks=n_blocks,
+                         chunk=chunk)
+    mcfg = get_config("qwen2-7b", smoke=True)
+    model = paged_cache_bytes_model(
+        mcfg, slots=slots, max_len=max_len, block_size=block_size,
+        n_blocks=n_blocks, peak_used_blocks=sim["peak_used_blocks"],
+        mean_resident_blocks=sim["mean_resident_blocks"])
+
+    failures = []
+    improvements = []
+    sched = section["schedule_model"]
+    mem = section["memory_model"]
+    rows = [("paged steps", sim["steps"], sched["steps"], False),
+            ("paged decode_steps", sim["decode_steps"],
+             sched["decode_steps"], False),
+            ("paged mean_occupancy", sim["mean_occupancy"],
+             sched["mean_occupancy"], True),
+            ("peak_used_blocks", sim["peak_used_blocks"],
+             sched["peak_used_blocks"], False),
+            ("bytes_per_block", model["bytes_per_block"],
+             mem["bytes_per_block"], False),
+            ("peak_resident_bytes", model["peak_resident_bytes"],
+             mem["peak_resident_bytes"], False),
+            ("rect_kv_bytes", model["rect_kv_bytes"],
+             mem["rect_kv_bytes"], None)]
+    for name, now, want, higher_is_better in rows:
+        status = "ok"
+        if higher_is_better is None:
+            pass  # informational context row, never gated
+        elif higher_is_better and now < want * (1 - EPS):
+            status = "REGRESSION"
+            failures.append(f"{name}: {want:.4f} -> {now:.4f}")
+        elif higher_is_better is False and now > want * (1 + EPS):
+            status = "REGRESSION"
+            failures.append(f"{name}: {want:.4f} -> {now:.4f}")
+        elif (higher_is_better and now > want * (1 + EPS)) or \
+                (higher_is_better is False and now < want * (1 - EPS)):
+            status = "improved"
+            improvements.append(name)
+        print(f"  {name:>24}: {want:>10.4f} -> {now:>10.4f}  [{status}]")
+    if model["peak_resident_bytes"] >= model["rect_kv_bytes"]:
+        failures.append(
+            f"paged residency stopped beating the rectangular "
+            f"reservation: peak {model['peak_resident_bytes']} >= rect "
+            f"{model['rect_kv_bytes']} bytes — the block pool must not "
+            f"touch more HBM than the cache it replaces")
+    if model["pool_kv_bytes"] >= model["rect_kv_bytes"]:
+        failures.append(
+            f"the paged pool ALLOCATION stopped beating rectangular: "
+            f"{model['pool_kv_bytes']} >= {model['rect_kv_bytes']} bytes "
+            f"— n_blocks must stay under slots * max_blocks for the "
+            f"committed trace")
+    if sim["peak_used_blocks"] >= model["rect_blocks"]:
+        failures.append(
+            f"peak block demand {sim['peak_used_blocks']} >= the "
+            f"rectangular {model['rect_blocks']} blocks on the "
+            f"long-context trace")
+    if failures:
+        print("\npaged-drift FAIL:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        print("If intentional, regenerate and justify in the PR:\n"
+              "  python -m benchmarks.serve_bench --smoke --artifact "
+              "BENCH_serve.json")
+        return 1
+    if improvements:
+        print(f"\npaged-drift OK (improved: {', '.join(improvements)}) — "
+              f"regenerate BENCH_serve.json to record the better model.")
+    else:
+        print("\npaged-drift OK: the re-simulated paged schedule and "
+              "re-priced residency match the committed artifact and stay "
+              "under the rectangular reservation.")
+    return 0
+
+
 def check_degraded(artifact_path: str) -> int:
     """Gate the fault-containment schedule model (PR 7): re-simulate the
     committed continuous trace with ONE preemption and ONE quarantine
@@ -428,6 +543,8 @@ if __name__ == "__main__":
     rc = check_continuous(serve_path) or rc
     print()
     rc = check_speculative(serve_path) or rc
+    print()
+    rc = check_paged(serve_path) or rc
     print()
     rc = check_degraded(serve_path) or rc
     sys.exit(rc)

@@ -23,10 +23,12 @@
 #            submit-time adapter pinning)
 #   post-PR7 422 passed / 0 failed / 2 skipped (fault-tolerant serving:
 #            deadlines, preemption, quarantine, FaultPlan injection)
+#   post-PR8 428 passed / 0 failed / 2 skipped (paged KV cache + chunked
+#            prefill: block pool, paged==rect bitwise, check_paged gate)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-MIN_PASS="${REPRO_TIER1_MIN_PASS:-422}"
+MIN_PASS="${REPRO_TIER1_MIN_PASS:-428}"
 MAX_FAIL="${REPRO_TIER1_MAX_FAIL:-0}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 TIER="${REPRO_FORCE_TIER:-interpret}"
@@ -90,6 +92,10 @@ echo
 echo "fault-injection serve smoke (tier ${TIER}): quarantine + deadlines"
 python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \
     --prompt-len 16 --gen-len 4 --continuous --inject nan@3 --deadline 8
+echo
+echo "paged serve smoke (tier ${TIER}): block pool + chunked prefill + oracle"
+python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \
+    --prompt-len 16 --gen-len 4 --continuous --paged
 echo
 echo "bench smoke: compose kernels (incl. matmul-fused) + serving cache"
 python -m benchmarks.compose_bench --smoke

@@ -200,6 +200,24 @@ def plan_norm(cfg: DoRAConfig, *, d_out: int) -> KernelPlan:
     return KernelPlan(Tier.FUSED_FWD, backend.name, backend.interpret)
 
 
+def plan_gather(cfg: DoRAConfig | None, *, head_elems: int) -> KernelPlan:
+    """Resolve the paged K/V gather call site (block pool → logical view;
+    ``repro.kernels.paged_gather``). Forward-only by construction (the
+    cache carries no gradients), so the fused choice is Tier 2, like the
+    norm. ``head_elems`` = Hkv*hd, the flattened trailing dim of one
+    cache block — the 128-lane constraint applies to it; unsupported
+    shapes (and ``cfg=None``: serving a base model with no adapter
+    config) take the eager gather, which is bitwise-identical (both
+    tiers are pure copies + zero fill), so the fallback costs layout,
+    never parity."""
+    if cfg is None or not shape_supported(head_elems):
+        return KernelPlan(Tier.EAGER, "eager", False)
+    backend = resolve_backend(cfg)
+    if not backend.fused:
+        return KernelPlan(Tier.EAGER, backend.name, False)
+    return KernelPlan(Tier.FUSED_FWD, backend.name, backend.interpret)
+
+
 def select_tier(cfg: DoRAConfig, *, training: bool, rows: int,
                 d_out: int) -> Tier:
     return plan_compose(cfg, training=training, rows=rows,

@@ -1,5 +1,9 @@
 """Pallas TPU kernels for the DoRA hot spots (compose fwd/bwd, factored
-norm, norm assembly) with jit wrappers (ops) and pure-jnp oracles (ref)."""
+norm, norm assembly) with jit wrappers (ops) and pure-jnp oracles (ref),
+plus the paged K/V gather for the block-paged decode cache."""
 from repro.kernels.ops import fused_compose, fused_norm
+from repro.kernels.paged_gather import (paged_gather, paged_gather_ref,
+                                        paged_scatter)
 
-__all__ = ["fused_compose", "fused_norm"]
+__all__ = ["fused_compose", "fused_norm", "paged_gather",
+           "paged_gather_ref", "paged_scatter"]

@@ -34,6 +34,16 @@ module adds the scheduler subsystem that keeps the decode batch full:
     ``dora_linear_grouped`` (the PR-4 grouped gsB-folded compose, ≥2-row
     groups bitwise) with free slots absorbed into a neighbouring run.
 
+With ``paged=True`` the rectangular per-row K/V gives way to a
+block-paged cache: a per-layer block POOL plus a per-slot block TABLE
+(``cache["pages"]``, a traced operand — paging never recompiles), blocks
+allocated as a row's frontier crosses into them and freed at
+retirement/preemption/speculative rewind, and prompts admitted
+INCREMENTALLY in fixed-size chunks interleaved with decode ticks
+(``make_prefill_chunk_step``). Greedy paged streams are bitwise the
+rectangular streams; see ``docs/engine.md`` for the full contract and
+the allocation/reclaim policy.
+
 Scheduling is HOST logic over host mirrors (per-slot position/budget
 counters): the engine never reads ``cache["len"]`` back from the device,
 so the only per-step sync is the logits fetch that sampling needs anyway.
@@ -64,6 +74,7 @@ from repro.core.adapter_cache import (AdapterHandle, AdapterStateCache,
 from repro.launch.faults import FaultPlan
 from repro.launch.steps import (StepConfig, make_decode_step,
                                 make_draft_step,
+                                make_prefill_chunk_step,
                                 make_prefill_into_slot_step,
                                 make_verify_step)
 from repro.models import init_cache
@@ -195,6 +206,7 @@ class EngineStats:
 
 @dataclasses.dataclass
 class _Slot:
+    idx: int = -1                      # this slot's row index (fixed)
     req: EngineRequest | None = None
     handle: AdapterHandle | None = None
     state: Any = None                  # pinned serving tree for this row
@@ -211,10 +223,21 @@ class _Slot:
     #                                    key fold count (and so the
     #                                    temperature>0 stream) continuous
     #                                    across preempt/resume
+    prefilling: bool = False           # paged chunked admission in flight:
+    #                                    the slot holds a request but does
+    #                                    not decode yet
+    chunk_next: int = 0                # next chunk's start offset into the
+    #                                    prompt while prefilling
+
+    @property
+    def occupied(self) -> bool:
+        """The slot holds a request (decoding OR mid-admission)."""
+        return self.req is not None
 
     @property
     def active(self) -> bool:
-        return self.req is not None
+        """The slot decodes this tick (admission, if any, is complete)."""
+        return self.req is not None and not self.prefilling
 
 
 class DecodeEngine:
@@ -278,7 +301,11 @@ class DecodeEngine:
                  fault_plan: FaultPlan | None = None,
                  spec_accept_floor: float = 0.0,
                  spec_window: int = 4,
-                 spec_reenable_after: int = 8):
+                 spec_reenable_after: int = 8,
+                 paged: bool = False,
+                 block_size: int | None = None,
+                 n_blocks: int | None = None,
+                 prefill_chunk: int | None = None):
         kinds = mcfg.layer_kinds()
         if any(k != "attn" for k in kinds):
             raise NotImplementedError(
@@ -338,25 +365,86 @@ class DecodeEngine:
         self.spec_accept_floor = float(spec_accept_floor)
         self.spec_window = int(spec_window)
         self.spec_reenable_after = int(spec_reenable_after)
+        # -- paged K/V knobs -----------------------------------------------
+        self._paged = bool(paged)
+        if not self._paged and (block_size is not None or n_blocks is not None
+                                or prefill_chunk is not None):
+            raise ValueError(
+                "block_size / n_blocks / prefill_chunk require paged=True")
+        if self._paged:
+            if block_size is None:
+                # Largest divisor of max_len up to 16: always valid, and
+                # small enough that short tenants waste little slack.
+                block_size = max(d for d in range(1, min(16, self.max_len) + 1)
+                                 if self.max_len % d == 0)
+            self._block_size = int(block_size)
+            if self.max_len % self._block_size != 0:
+                raise ValueError(
+                    f"max_len={self.max_len} must be a multiple of "
+                    f"block_size={self._block_size}")
+            self._max_blocks = self.max_len // self._block_size
+            if n_blocks is None:
+                # Parity-safe default: enough blocks for every slot to
+                # reach max_len (same HBM as the rectangular cache).
+                # Pass a smaller pool to realise the paged memory win.
+                n_blocks = self.slots * self._max_blocks
+            self._n_blocks = int(n_blocks)
+            if self._n_blocks < self._max_blocks:
+                raise ValueError(
+                    f"n_blocks={self._n_blocks} < max_blocks="
+                    f"{self._max_blocks}: one slot alone must be able to "
+                    f"grow to max_len, or the engine could deadlock with "
+                    f"an admitted request it can never finish")
+            self._chunk = int(prefill_chunk if prefill_chunk is not None
+                              else self._block_size)
+            if not 1 <= self._chunk <= self.max_len:
+                raise ValueError(
+                    f"prefill_chunk={self._chunk} not in [1, "
+                    f"max_len={self.max_len}] (the chunk step's row writes "
+                    f"must fit the logical window)")
 
         # Pin the persistent cache to the serving shardings (and the step
         # OUTPUT caches to the same layout): the cache round-trips through
         # every prefill/decode, and an unpinned layout would let GSPMD
         # re-lay it out after the first call — one spurious recompile per
         # step fn, breaking the one-executable-per-signature contract.
-        self.cache = init_cache(mcfg, self.slots, self.max_len,
-                                row_lens=True)
+        self.cache = init_cache(
+            mcfg, self.slots, self.max_len, row_lens=True,
+            block_size=self._block_size if self._paged else None,
+            n_blocks=self._n_blocks if self._paged else None)
         cache_out_sh = None
         if mesh is not None:
             from repro.launch import sharding as S
-            c_sh = S.cache_sharding(mcfg, mesh, batch=self.slots)
+            c_sh = S.cache_sharding(
+                mcfg, mesh, batch=self.slots,
+                block_size=self._block_size if self._paged else None)
             self.cache = jax.device_put(self.cache, c_sh)
             cache_out_sh = c_sh
         self._prefill = jax.jit(
             make_prefill_into_slot_step(mcfg, scfg, mesh, seq=max_len),
             donate_argnums=(2,),
             out_shardings=(None, cache_out_sh))
+        self._chunk_prefill = None
+        if self._paged:
+            self._chunk_prefill = jax.jit(
+                make_prefill_chunk_step(mcfg, scfg, mesh, chunk=self._chunk),
+                donate_argnums=(2,),
+                out_shardings=(None, cache_out_sh))
         self._cache_out_sh = cache_out_sh
+        # -- host mirror of the block pool (paged only) --------------------
+        # The device never sees allocation logic: the engine owns the
+        # free list and the per-slot block lists, mirrors them into the
+        # int32 block table (cache["pages"]), and flushes the table as a
+        # TRACED operand before any device step that reads the cache —
+        # paging never recompiles anything.
+        if self._paged:
+            # pop() hands out ascending ids; freed blocks return LIFO.
+            self._free: list[int] = list(range(self._n_blocks - 1, -1, -1))
+            self._blocks: list[list[int]] = [[] for _ in range(self.slots)]
+            self._pages_np = np.full((self.slots, self._max_blocks), -1,
+                                     np.int32)
+            self._pages_dirty = False
+            self._peak_used = 0
         # Compiled decode steps per group signature (None = single
         # tenant). Same LRU discipline as MultiTenantServer._steps: each
         # entry pins a jitted executable.
@@ -370,7 +458,7 @@ class DecodeEngine:
         # (slot-handle layout, groups, stacked tree) of the last decode —
         # re-stacked only when the layout changes, never per token.
         self._grouping_cache: tuple | None = None
-        self._slots: list[_Slot] = [_Slot() for _ in range(self.slots)]
+        self._slots: list[_Slot] = [_Slot(idx=i) for i in range(self.slots)]
         self._queue: deque[EngineRequest] = deque()
         self._results: dict[int, RequestResult] = {}
         self._next_id = 0
@@ -512,7 +600,7 @@ class DecodeEngine:
     # -- scheduling ---------------------------------------------------------
 
     def has_work(self) -> bool:
-        return bool(self._queue) or any(s.active for s in self._slots)
+        return bool(self._queue) or any(s.occupied for s in self._slots)
 
     def stats(self) -> EngineStats:
         return EngineStats(slots=self.slots, steps=self._steps,
@@ -541,12 +629,113 @@ class DecodeEngine:
         the prefill, 1 per decode group-signature, 1 for the (adapter-
         free) draft, and 1 per (group-signature, window) verify."""
         return {"prefill_into_slot": self._prefill._cache_size(),
+                "prefill_chunk": (0 if self._chunk_prefill is None
+                                  else self._chunk_prefill._cache_size()),
                 "decode": {sig: fn._cache_size()
                            for sig, fn in self._decodes.items()},
                 "draft": (0 if self._draft is None
                           else self._draft._cache_size()),
                 "verify": {key: fn._cache_size()
                            for key, fn in self._verifies.items()}}
+
+    # -- block pool (paged K/V) ---------------------------------------------
+
+    def pool_stats(self) -> dict:
+        """Host-mirror block-pool accounting (paged engines only): pool
+        geometry, current and peak occupancy, and per-slot block counts.
+        ``used_blocks == 0`` after the engine drains is the no-leak
+        invariant the property suite exercises."""
+        if not self._paged:
+            raise ValueError("pool_stats() requires a paged engine "
+                             "(construct with paged=True)")
+        used = self._n_blocks - len(self._free)
+        return {"block_size": self._block_size,
+                "n_blocks": self._n_blocks,
+                "max_blocks": self._max_blocks,
+                "prefill_chunk": self._chunk,
+                "free_blocks": len(self._free),
+                "used_blocks": used,
+                "peak_used_blocks": self._peak_used,
+                "per_slot_blocks": [len(b) for b in self._blocks]}
+
+    def _ensure_blocks(self, idx: int, upto_len: int) -> bool:
+        """Grow slot ``idx``'s block list until it covers K/V positions
+        [0, upto_len); False (with the partial growth kept — the blocks
+        are reserved either way) when the pool runs dry."""
+        need = -(-upto_len // self._block_size)
+        blocks = self._blocks[idx]
+        while len(blocks) < need:
+            if not self._free:
+                return False
+            b = self._free.pop()
+            self._pages_np[idx, len(blocks)] = b
+            blocks.append(b)
+            self._pages_dirty = True
+        used = self._n_blocks - len(self._free)
+        if used > self._peak_used:
+            self._peak_used = used
+        return True
+
+    def _free_tail(self, idx: int, new_len: int) -> None:
+        """Return every block of slot ``idx`` past position ``new_len``
+        to the pool (a straddling block stays — it still holds live
+        K/V). A freed block's stale content is harmless wherever it is
+        reallocated: a slot only receives a new block when its frontier
+        crosses INTO it, so every stale position sits at-or-beyond the
+        new owner's causal frontier until overwritten."""
+        keep = -(-new_len // self._block_size)
+        blocks = self._blocks[idx]
+        while len(blocks) > keep:
+            b = blocks.pop()
+            self._pages_np[idx, len(blocks)] = -1
+            self._free.append(b)
+            self._pages_dirty = True
+
+    def _free_all(self, idx: int) -> None:
+        self._free_tail(idx, 0)
+
+    def _flush_pages(self) -> None:
+        """Mirror the host block table into ``cache["pages"]``. A FRESH
+        device array every time (the steps donate the cache); called
+        before every device step that reads the cache, so allocation and
+        freeing are visible exactly when they must be."""
+        if not self._pages_dirty:
+            return
+        arr = jnp.asarray(np.array(self._pages_np))
+        if self._cache_out_sh is not None:
+            arr = jax.device_put(arr, self._cache_out_sh["pages"])
+        cache = dict(self.cache)
+        cache["pages"] = arr
+        self.cache = cache
+        self._pages_dirty = False
+
+    def _block_victim(self) -> int | None:
+        """Deterministic reclaim order under pool exhaustion: lowest
+        priority first, most recently admitted among equals, highest
+        slot index as the final tie-break."""
+        occ = [i for i, s in enumerate(self._slots) if s.occupied]
+        if not occ:
+            return None
+        return min(occ, key=lambda i: (self._slots[i].req.priority,
+                                       -self._slots[i].admitted_step, -i))
+
+    def _ensure_active_blocks(self, rows: list[int], extra: int
+                              ) -> list[int]:
+        """Allocate so every row in ``rows`` can write K/V positions
+        pos..pos+extra-1 this tick. On pool exhaustion, reclaim by
+        preempting :meth:`_block_victim` slots (their requests re-queue
+        as continuations and resume bitwise) until the allocation fits.
+        Returns the rows still active — a row preempted as its own
+        victim drops out."""
+        for i in rows:
+            slot = self._slots[i]
+            while slot.active and not self._ensure_blocks(i, slot.pos + extra):
+                victim = self._block_victim()
+                if victim is None:     # unreachable: row i itself is occupied
+                    raise RuntimeError(
+                        "paged block pool exhausted with nothing to preempt")
+                self._preempt(victim)
+        return [i for i in rows if self._slots[i].active]
 
     def _sample_rows(self, logits_rows, key_ids_and_counts) -> list[int]:
         """One token per row. Greedy is a host argmax over the
@@ -592,10 +781,13 @@ class DecodeEngine:
         elif reason == "error_numeric":
             self._quarantined += 1
         self._retired += 1
+        if self._paged:
+            self._free_all(slot.idx)
         slot.req = None
         slot.handle = None
         slot.state = None
         slot.generated = []
+        slot.prefilling = False
 
     def _note_token(self, slot: _Slot, tok: int, on_token) -> str | None:
         """Record one sampled token; returns the finish reason if the
@@ -657,7 +849,7 @@ class DecodeEngine:
                     keep.append(req)
             self._queue = keep
         for slot in self._slots:
-            if (slot.active and slot.req.deadline_step is not None
+            if (slot.occupied and slot.req.deadline_step is not None
                     and self._steps >= slot.req.deadline_step):
                 self._finish(slot, "timeout")
 
@@ -727,9 +919,24 @@ class DecodeEngine:
         final-position logits ARE the plain decode logits at that
         frontier, and the sample-key fold count continues via n_prior).
         The continuation always fits: P' + budget' = P + budget <=
-        max_len keeps room for every remaining token."""
+        max_len keeps room for every remaining token.
+
+        A slot still MID-ADMISSION (paged chunked prefill) re-queues its
+        request UNCHANGED — it has produced nothing yet, so there is no
+        continuation to build — and returns its reserved blocks."""
         slot = self._slots[idx]
         req = slot.req
+        if slot.prefilling:
+            self._queue.append(dataclasses.replace(
+                req, preempted=req.preempted + 1))
+            self._preemptions += 1
+            self._free_all(idx)
+            slot.req = None
+            slot.handle = None
+            slot.state = None
+            slot.generated = []
+            slot.prefilling = False
+            return
         gen = np.asarray(slot.generated, np.int32)
         self._queue.append(dataclasses.replace(
             req,
@@ -744,16 +951,24 @@ class DecodeEngine:
                             else req.first_admitted),
             preempted=req.preempted + 1))
         self._preemptions += 1
+        if self._paged:
+            self._free_all(idx)
         slot.req = None
         slot.handle = None
         slot.state = None
         slot.generated = []
 
     def _admit_into(self, idx: int, slot: _Slot, req: EngineRequest,
-                    on_token) -> None:
-        """One admission: prefill INTO slot ``idx`` + first sampled token.
-        A request whose budget is one token retires here without ever
-        occupying a decode row."""
+                    on_token) -> bool:
+        """One admission. Rectangular path: prefill INTO slot ``idx`` +
+        first sampled token (a request whose budget is one token retires
+        here without ever occupying a decode row). Paged path: SEAT the
+        request (reserve blocks for the whole prompt + the first decode
+        write) and mark the slot ``prefilling`` — the prompt streams in
+        over :meth:`_chunk_tick` chunks, and the first token is sampled
+        by the FINAL chunk. Returns False only when a paged admission is
+        DEFERRED (the pool cannot hold the prompt right now; the request
+        goes back to the queue head and this tick stops admitting)."""
         if self._stale_pending and req.adapter is not None:
             # Fault injection: hand the admission a handle whose version
             # the registry never issued, with the pinned state stripped —
@@ -778,8 +993,31 @@ class DecodeEngine:
             # forever: the request is finished with an errored
             # result and admission moves on to the next one.
             self._error_result(req, e)
-            return
+            return True
         P = req.prompt.shape[0]
+        if self._paged:
+            # Admission-start gate: the WHOLE prompt (+ the first decode
+            # write) is reserved up front, so chunked prefill can never
+            # strand a half-admitted prompt on pool exhaustion. When the
+            # pool cannot cover it, the request defers at the queue HEAD
+            # (documented head-of-line policy: decode keeps running and
+            # retirements will free blocks) rather than being skipped.
+            need = -(-(P + 1) // self._block_size)
+            if len(self._free) < need:
+                self._queue.appendleft(req)
+                return False
+            slot.req = req
+            slot.handle = req.adapter
+            slot.state = state
+            slot.admitted_step = self._steps
+            slot.pos = 0
+            slot.n_prior = (0 if req.prefix is None
+                            else int(req.prefix.shape[0]))
+            slot.generated = []
+            slot.prefilling = True
+            slot.chunk_next = 0
+            self._ensure_blocks(idx, P + 1)
+            return True
         toks = np.zeros((1, self.max_len), np.int32)
         toks[0, :P] = req.prompt
         logits, self.cache = self._prefill(
@@ -814,30 +1052,36 @@ class DecodeEngine:
             # Quarantine at admission: the prefill produced non-finite
             # logits for THIS row — retire it before it ever decodes.
             self._finish(slot, "error_numeric")
-            return
+            return True
         tok = self._sample_rows([row], [(req.key_id, slot.n_prior)])[0]
         reason = self._note_token(slot, tok, on_token)
         if reason is not None:
             self._finish(slot, reason)   # slot free again
+        return True
 
     def _admit(self, on_token=None) -> None:
         """Fill free slots from the queue (highest priority first, FIFO
         among equals), then preempt: while a queued request outranks the
-        lowest-priority ACTIVE slot and no slot is free, that victim is
-        displaced (re-queued as a continuation) and the fill loop seats
-        the outranking request in its row. Each preemption strictly
-        raises the displaced slot's priority, so the loop terminates."""
+        lowest-priority OCCUPIED slot and no slot is free, that victim is
+        displaced (re-queued as a continuation — a mid-admission slot
+        re-queues its request unchanged) and the fill loop seats the
+        outranking request in its row. Each preemption strictly raises
+        the displaced slot's priority, so the loop terminates. A paged
+        admission deferred on block exhaustion stops the whole tick's
+        admitting (head-of-line)."""
         while True:
             for idx, slot in enumerate(self._slots):
-                while not slot.active and self._queue:
-                    self._admit_into(idx, slot, self._pop_next(), on_token)
+                while not slot.occupied and self._queue:
+                    if not self._admit_into(idx, slot, self._pop_next(),
+                                            on_token):
+                        return
             if not self._queue:
                 return
             best = max(r.priority for r in self._queue)
-            actives = [i for i, s in enumerate(self._slots) if s.active]
-            if not actives:
+            occupied = [i for i, s in enumerate(self._slots) if s.occupied]
+            if not occupied:
                 return
-            victim = min(actives,
+            victim = min(occupied,
                          key=lambda i: (self._slots[i].req.priority, i))
             if best <= self._slots[victim].req.priority:
                 return
@@ -847,19 +1091,22 @@ class DecodeEngine:
         """(tenant_groups | None, adapter tree) for the CURRENT slot
         table. Free slots are absorbed into a neighbouring run (their
         rows decode garbage that nothing reads), so the signature only
-        changes when the handle layout of ACTIVE slots changes — and the
-        (groups, stacked-tree) pair is cached on that layout: re-stacking
-        every tenant's full serving tree is a device-side copy that must
-        happen per admission/retirement, not per sampled token."""
+        changes when the handle layout of OCCUPIED slots changes — a
+        paged slot mid-chunked-admission already counts, so a prompt
+        streaming in does not flap the signature when it joins decode —
+        and the (groups, stacked-tree) pair is cached on that layout:
+        re-stacking every tenant's full serving tree is a device-side
+        copy that must happen per admission/retirement, not per sampled
+        token."""
         if self.adapter_cache is None:
             return None, self.adapters
-        layout = tuple((s.handle if s.active else None)
+        layout = tuple((s.handle if s.occupied else None)
                        for s in self._slots)
         if self._grouping_cache is not None \
                 and self._grouping_cache[0] == layout:
             return self._grouping_cache[1], self._grouping_cache[2]
         keys: list[Any] = list(layout)
-        states = {s.handle: s.state for s in self._slots if s.active}
+        states = {s.handle: s.state for s in self._slots if s.occupied}
         # forward fill from the left, then leading Nones from the right
         last = None
         for i, k in enumerate(keys):
@@ -966,8 +1213,23 @@ class DecodeEngine:
                 self._spec_reenables += 1
             return False
         k = self.speculative_k
-        return all(self._slots[i].pos + k + 1 <= self.max_len
-                   for i in active)
+        if not all(self._slots[i].pos + k + 1 <= self.max_len
+                   for i in active):
+            return False
+        if self._paged:
+            # A mid-admission slot degrades the tick to plain decode: the
+            # draft loop would advance ITS device length k+1 positions
+            # past the host chunk cursor, beyond what the next chunk
+            # rewrites. And the whole k+1 window must be block-backed up
+            # front — on exhaustion, fall back to plain decode (which
+            # needs one block at most) instead of preempting for
+            # speculation.
+            if any(s.prefilling for s in self._slots):
+                return False
+            if not all(self._ensure_blocks(i, self._slots[i].pos + k + 1)
+                       for i in active):
+                return False
+        return True
 
     def _quarantine(self, rows: list[int], logits_np: np.ndarray
                     ) -> tuple[list[int], np.ndarray]:
@@ -986,8 +1248,81 @@ class DecodeEngine:
             rows = [i for i in rows if self._slots[i].active]
         return rows, logits_np
 
+    def _chunk_tick(self, on_token) -> None:
+        """Paged chunked admission: ONE prompt chunk per mid-admission
+        slot per tick, through the traced batch-1 chunk step (slot,
+        start, chunk length all traced — one executable total). Chunk
+        starts are ``0, C, 2C, ...`` with the FINAL chunk re-anchored at
+        ``P - C`` (when P > C): its window overlaps the previous chunk
+        and rewrites those positions with bitwise-identical K/V, which
+        keeps every start in-range for the clamping dynamic-slice write.
+        The final chunk's last-position logits are the whole-prompt
+        prefill logits bitwise (causal rows are independent, earlier
+        chunks committed identical K/V), so the first token it samples —
+        and the NaN quarantine guarding it — match the rectangular
+        admission exactly.
+
+        Between a slot's chunks, the batched decode advances EVERY row's
+        device length by one and writes one garbage K/V row at the
+        mid-admission slot's drifted frontier; the chunk step takes its
+        start from the HOST mirror, and the drifted position always
+        falls inside the NEXT chunk's window, so the garbage is
+        overwritten before the final chunk reads it."""
+        for idx, slot in enumerate(self._slots):
+            if not slot.prefilling:
+                continue
+            req = slot.req
+            P = req.prompt.shape[0]
+            C = self._chunk
+            final = P - slot.chunk_next <= C
+            if final:
+                c_len = min(P, C)
+                start = P - c_len
+            else:
+                start, c_len = slot.chunk_next, C
+            toks = np.zeros((1, C), np.int32)
+            toks[0, :c_len] = req.prompt[start:start + c_len]
+            self._flush_pages()
+            logits, self.cache = self._chunk_prefill(
+                self.params, slot.state, self.cache,
+                {"tokens": jnp.asarray(toks),
+                 "slot": jnp.asarray(idx, jnp.int32),
+                 "start": jnp.asarray(start, jnp.int32),
+                 "chunk_len": jnp.asarray(c_len, jnp.int32)})
+            if not final:
+                slot.chunk_next = start + C
+                continue
+            # Final chunk: admission completes — the slot joins decode
+            # THIS tick (a prompt that fits one chunk matches the
+            # rectangular admission schedule exactly).
+            slot.prefilling = False
+            slot.pos = P
+            self._prefills += 1
+            self._admitted += 1
+            room = self.max_len - P
+            slot.budget = min(req.max_new_tokens, room)
+            slot.finish_cap = (req.resume_cap if req.resume_cap is not None
+                               else ("length" if req.max_new_tokens <= room
+                                     else "max_len"))
+            row = np.asarray(logits)[0]
+            if self._nan_targets([idx]):
+                row = np.full_like(row, np.nan)
+                self._injected_nans += 1
+            if not np.isfinite(row).all():
+                self._finish(slot, "error_numeric")
+                continue
+            tok = self._sample_rows([row], [(req.key_id, slot.n_prior)])[0]
+            reason = self._note_token(slot, tok, on_token)
+            if reason is not None:
+                self._finish(slot, reason)
+
     def _decode_tick(self, active: list[int], on_token) -> None:
         """One plain batched decode over the active slots."""
+        if self._paged:
+            active = self._ensure_active_blocks(active, 1)
+            if not active:
+                return
+            self._flush_pages()
         toks = np.zeros((self.slots, 1), np.int32)
         for i in active:
             toks[i, 0] = self._slots[i].last_token
@@ -1033,6 +1368,8 @@ class DecodeEngine:
 
         # -- draft: k greedy base-only tokens per row -----------------------
         self._sync_len(base_len)
+        if self._paged:
+            self._flush_pages()   # _speculative_ok grew the k+1 window
         draft = self._get_draft()
         drafts = np.zeros((self.slots, k), np.int32)
         for j in range(k):
@@ -1087,6 +1424,14 @@ class DecodeEngine:
                     break
             if slot.active:
                 new_len[i] = slot.pos
+        if self._paged:
+            # Speculative rewind frees the dead tail: blocks past each
+            # surviving row's accepted frontier (allocated for the k+1
+            # window) return to the pool; finished rows already freed
+            # everything in _finish.
+            for i in active:
+                if self._slots[i].active:
+                    self._free_tail(i, self._slots[i].pos)
         self._sync_len(new_len)
 
         # -- degradation ladder: track the accept rate ----------------------
@@ -1113,6 +1458,8 @@ class DecodeEngine:
         self._apply_tick_faults()
         self._expire_deadlines()
         self._admit(on_token)
+        if self._paged:
+            self._chunk_tick(on_token)
         active = [i for i, s in enumerate(self._slots) if s.active]
         if active:
             if self._speculative_ok(active):

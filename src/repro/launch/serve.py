@@ -469,7 +469,10 @@ class EngineServer:
                  cache: AdapterStateCache, slots: int, max_len: int,
                  mesh=None, temperature: float = 0.0, seed: int = 0,
                  allow_miss: bool = True, speculative_k: int = 0,
-                 fault_plan=None, spec_accept_floor: float = 0.0):
+                 fault_plan=None, spec_accept_floor: float = 0.0,
+                 paged: bool = False, block_size: int | None = None,
+                 n_blocks: int | None = None,
+                 prefill_chunk: int | None = None):
         from repro.launch.engine import DecodeEngine
         _check_cache_mesh(cache, mesh)
         self.cache = cache
@@ -479,7 +482,10 @@ class EngineServer:
                                    seed=seed, allow_miss=allow_miss,
                                    speculative_k=speculative_k,
                                    fault_plan=fault_plan,
-                                   spec_accept_floor=spec_accept_floor)
+                                   spec_accept_floor=spec_accept_floor,
+                                   paged=paged, block_size=block_size,
+                                   n_blocks=n_blocks,
+                                   prefill_chunk=prefill_chunk)
 
     def run(self, requests: Sequence[Request], *, gen_len: int,
             eos_id: int | None = None, on_token=None,
@@ -576,6 +582,14 @@ def main() -> None:
                     help="with --continuous: give every request a "
                          "deadline of N engine ticks (expired requests "
                          "retire with finish_reason='timeout')")
+    ap.add_argument("--paged", action="store_true",
+                    help="with --continuous: block-paged K/V cache + "
+                         "chunked prefill (see docs/engine.md); asserts "
+                         "the greedy token streams match a rectangular "
+                         "engine's bitwise and the block pool drains")
+    ap.add_argument("--block-size", type=int, default=0, metavar="B",
+                    help="with --paged: K/V block size (0 = auto: the "
+                         "largest divisor of max_len up to 16)")
     ap.add_argument("--priority", type=int, default=0, metavar="N",
                     help="with --continuous: submit the LAST request at "
                          "priority N — it admits ahead of the FIFO (and "
@@ -608,7 +622,8 @@ def main() -> None:
                               slots=args.batch, max_len=max_len,
                               temperature=args.temperature, seed=args.seed,
                               speculative_k=args.speculative,
-                              fault_plan=plan)
+                              fault_plan=plan, paged=args.paged,
+                              block_size=args.block_size or None)
         t0 = time.time()
         results = server.run(
             requests, gen_len=args.gen_len,
@@ -643,6 +658,30 @@ def main() -> None:
                   f"forced_evictions={st.forced_evictions} "
                   f"stale_injected={st.stale_injected} "
                   f"slow_ticks={st.slow_ticks}")
+        if args.paged:
+            ps = server.engine.pool_stats()
+            assert ps["used_blocks"] == 0, f"leaked blocks: {ps}"
+            assert ps["per_slot_blocks"] == [0] * args.batch, ps
+            counts = server.engine.compile_counts()
+            assert counts["prefill_chunk"] == 1, counts
+            print(f"  paged: block_size={ps['block_size']} "
+                  f"n_blocks={ps['n_blocks']} "
+                  f"chunk={ps['prefill_chunk']} "
+                  f"peak_used={ps['peak_used_blocks']} blocks "
+                  f"(pool drained)")
+            if args.temperature <= 0.0 and not faulty:
+                # the paged greedy oracle: the same requests through a
+                # RECTANGULAR engine must stream bitwise-identical tokens.
+                rect = EngineServer(mcfg, scfg, params, cache=cache,
+                                    slots=args.batch, max_len=max_len,
+                                    temperature=args.temperature,
+                                    seed=args.seed)
+                base = rect.run(requests, gen_len=args.gen_len)
+                for rs, rp in zip(results, base):
+                    assert rs.tokens.tolist() == rp.tokens.tolist(), (
+                        rs.request_id, rs.tokens, rp.tokens)
+                print("  paged greedy streams == rectangular engine "
+                      "(oracle OK)")
         if args.speculative > 0 and args.temperature <= 0.0 and not faulty:
             # the greedy-oracle check: same requests through a PLAIN
             # engine must yield bitwise-identical token streams.

@@ -374,16 +374,30 @@ def make_boundary_constraint(mesh, *, batch: int, seq: int,
     return constrain
 
 
-def cache_sharding(mcfg: ModelConfig, mesh, *, batch: int):
+def cache_sharding(mcfg: ModelConfig, mesh, *, batch: int,
+                   block_size: int | None = None):
     """Decode cache tree: KV [n_scan, B, T, Hkv, hd] — batch over dp, seq
-    over model; mamba h [n_scan, B, di, n] — d_inner over model."""
+    over model; mamba h [n_scan, B, di, n] — d_inner over model.
+
+    ``block_size``: the PAGED cache layout — block pools
+    [n_scan, n_blocks, bs, Hkv, hd] carry no batch dim (any pool block
+    serves any row), so they never shard over dp; the in-block seq dim
+    shards over model like the rectangular T dim when it divides. The
+    ``"pages"`` table (and ``"len"``) are tiny host-mirrored int32 state:
+    replicated."""
     b_ax = _dp_entry(mesh, batch)
     tp = dict(mesh.shape).get("model", 1)
     kinds = mcfg.layer_kinds()
     unit: dict[str, Any] = {}
     for i in range(mcfg.period):
         if kinds[i] == "attn":
-            kv = NamedSharding(mesh, P(None, b_ax, "model", None, None))
+            if block_size is not None:
+                bs_ax = "model" if tp > 1 and block_size % tp == 0 \
+                    else None
+                kv = NamedSharding(mesh, P(None, None, bs_ax, None, None))
+            else:
+                kv = NamedSharding(mesh, P(None, b_ax, "model", None,
+                                           None))
             unit[f"l{i}"] = {"k": kv, "v": kv}
         else:
             di_ok = mcfg.d_inner % tp == 0
@@ -393,7 +407,10 @@ def cache_sharding(mcfg: ModelConfig, mesh, *, batch: int):
                 "conv": NamedSharding(
                     mesh, P(None, b_ax, None, "model" if di_ok else None)),
             }
-    return {"stack": unit, "len": NamedSharding(mesh, P())}
+    out = {"stack": unit, "len": NamedSharding(mesh, P())}
+    if block_size is not None:
+        out["pages"] = NamedSharding(mesh, P())
+    return out
 
 
 def replicated(mesh):

@@ -246,6 +246,76 @@ def make_prefill_into_slot_step(mcfg: ModelConfig, scfg: StepConfig,
     return prefill_into_slot
 
 
+def make_prefill_chunk_step(mcfg: ModelConfig, scfg: StepConfig,
+                            mesh=None, *, chunk: int):
+    """(params, adapters, cache, batch_in) -> (logits [1, V], cache').
+
+    CHUNKED admission for the PAGED continuous-batching engine (see
+    :mod:`repro.launch.engine`): process ``chunk`` prompt tokens of one
+    request into its slot's pages of a RUNNING batch's paged cache, so a
+    long prompt is admitted incrementally — interleaved with decode ticks
+    — instead of stalling the batch behind one monolithic prefill.
+
+    ``cache`` is the engine's PAGED cache (block pools + ``"pages"``
+    table + per-row ``"len"``). ``batch_in``: ``"tokens"`` [1, chunk]
+    (the chunk's tokens, right-padded), ``"slot"`` / ``"start"`` /
+    ``"chunk_len"`` int32 scalars — ALL traced, so ONE compiled step
+    serves every slot, every chunk boundary and every ragged tail: the
+    compile surface stays one (chunk-prefill, decode) pair per
+    (slots, chunk, signature).
+
+    ``start`` is the HOST's admission frontier for the slot, not the
+    device ``len[slot]`` — decode ticks advance the whole [B] length
+    vector (admitting rows included), so the device value drifts by one
+    per interleaved tick; the chunk must write at the true prompt offset.
+    The step runs the forward over a batch-1 VIEW (shared pools, the
+    slot's page row, ``len=[start]``), then writes ``len[slot] =
+    start + chunk_len`` back into the full vector. The final chunk's
+    logits (gathered at ``chunk_len - 1``) are the first-token logits —
+    bitwise the padded whole-prompt prefill's, because every q row of a
+    causal forward depends only on positions ≤ its own, the gathered
+    paged view has the SAME [max_len] reduction extent as the
+    rectangular buffer, and masked/unallocated positions contribute
+    exactly-0.0 softmax weight in both.
+
+    Attention-only archs, like every continuous-batching step (SSM
+    states cannot rewind / re-view)."""
+    kinds = mcfg.layer_kinds()
+    if any(k != "attn" for k in kinds):
+        raise NotImplementedError(
+            f"chunked prefill requires attention-only caches: SSM states "
+            f"integrate every processed token and cannot be re-viewed at "
+            f"a chunk boundary (arch {mcfg.name!r} has layer kinds "
+            f"{kinds})")
+    constraint = (S.make_boundary_constraint(
+        mesh, batch=1, seq=chunk,
+        b_dout_axes=S.row_parallel_b_axes(mcfg, mesh))
+        if mesh is not None else None)
+
+    def prefill_chunk(params, adapters, cache, batch_in):
+        slot = jnp.asarray(batch_in["slot"], jnp.int32)
+        start = jnp.asarray(batch_in["start"], jnp.int32)
+        c_len = jnp.asarray(batch_in["chunk_len"], jnp.int32)
+        view = {
+            "stack": cache["stack"],              # shared block pools
+            "len": jnp.reshape(start, (1,)),      # host frontier, not
+                                                  # the drifted device len
+            "pages": jax.lax.dynamic_slice_in_dim(cache["pages"], slot, 1,
+                                                  axis=0),
+        }
+        logits, new_view, _ = forward(
+            mcfg, params, adapters, scfg.dora, cache=view, training=False,
+            boundary_constraint=constraint, tokens=batch_in["tokens"],
+            gather_position=c_len - 1)
+        new_len = cache["len"].at[slot].set(
+            (start + c_len).astype(cache["len"].dtype))
+        return logits[:, -1], {"stack": new_view["stack"],
+                               "len": new_len,
+                               "pages": cache["pages"]}
+
+    return prefill_chunk
+
+
 def make_precompute_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
                          fold_gsb: bool = False):
     """(params, adapters) -> serving adapter tree (jit-able).

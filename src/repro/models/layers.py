@@ -7,6 +7,7 @@ row-norm is over dim 1.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Any
 
@@ -15,6 +16,9 @@ import jax.numpy as jnp
 
 from repro.core import DoRAConfig
 from repro.core.adapter import dora_linear
+from repro.core.dispatch import plan_gather
+from repro.kernels.paged_gather import (paged_gather, paged_gather_ref,
+                                        paged_scatter)
 
 _F32 = jnp.float32
 
@@ -281,6 +285,29 @@ def attention(x, params, dora, mcfg, dcfg: DoRAConfig | None, *,
         new_cache = None
     else:
         pos = jnp.asarray(cache["len"])
+        pages = cache.get("pages")
+        if pages is not None and pos.ndim != 1:
+            raise ValueError("paged K/V requires per-row lengths "
+                             "(cache_shapes(..., row_lens=True))")
+        if pages is not None:
+            # Block-paged cache (launch/engine.py paged=True): gather the
+            # per-layer block pools [n_blocks, bs, Hkv, hd] through the
+            # per-row block table into the logical [B, max_len, Hkv, hd]
+            # view, run the UNCHANGED per-row-frontier path below, and
+            # scatter the written view back. Bitwise parity with the
+            # rectangular cache is by construction: unallocated blocks
+            # read as exact zeros, and every such position sits at/past
+            # its row's causal frontier where the -1e30 bias already
+            # drives the softmax weight to exactly 0.0. The table is a
+            # traced operand — paging never recompiles.
+            plan = plan_gather(dcfg, head_elems=hkv * hd)
+            gather = (functools.partial(paged_gather,
+                                        interpret=plan.interpret)
+                      if plan.fused else paged_gather_ref)
+            buf_k = gather(cache["k"], pages)
+            buf_v = gather(cache["v"], pages)
+        else:
+            buf_k, buf_v = cache["k"], cache["v"]
         if pos.ndim == 1:
             # Continuous batching (launch/engine.py): "len" is a [B] vector
             # of per-row cache lengths — every slot writes its new K/V at
@@ -292,16 +319,16 @@ def attention(x, params, dora, mcfg, dcfg: DoRAConfig | None, *,
                     buf, new, (p, zero, zero))
 
             ck = jax.vmap(_row_write)(
-                cache["k"], k.astype(cache["k"].dtype), pos)
+                buf_k, k.astype(buf_k.dtype), pos)
             cv = jax.vmap(_row_write)(
-                cache["v"], v.astype(cache["v"].dtype), pos)
+                buf_v, v.astype(buf_v.dtype), pos)
         else:
             zero = jnp.zeros((), pos.dtype)  # match index dtypes (x64-safe)
             ck = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype),
+                buf_k, k.astype(buf_k.dtype),
                 (zero, pos, zero, zero))
             cv = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype),
+                buf_v, v.astype(buf_v.dtype),
                 (zero, pos, zero, zero))
         # mask out unwritten cache rows via the causal offset: rows beyond
         # pos+s have k_pos > q_pos and are excluded by causality. Decode
@@ -313,7 +340,12 @@ def attention(x, params, dora, mcfg, dcfg: DoRAConfig | None, *,
         dense = s == 1 or pos.ndim == 1
         out = attention_core(q, ck, cv, offset=pos,
                              chunk=None if dense else mcfg.attn_chunk)
-        new_cache = {"k": ck, "v": cv, "len": pos + s}
+        if pages is not None:
+            new_cache = {"k": paged_scatter(cache["k"], pages, ck),
+                         "v": paged_scatter(cache["v"], pages, cv),
+                         "len": pos + s}
+        else:
+            new_cache = {"k": ck, "v": cv, "len": pos + s}
 
     out = out.reshape(b, s, hq * hd)
     wo = params["wo"]

@@ -270,27 +270,53 @@ def adapter_param_count(mcfg: ModelConfig, dcfg: DoRAConfig,
 # ---------------------------------------------------------------------------
 
 def cache_shapes(mcfg: ModelConfig, batch: int, max_len: int,
-                 dtype=None, *, row_lens: bool = False):
+                 dtype=None, *, row_lens: bool = False,
+                 block_size: int | None = None,
+                 n_blocks: int | None = None):
     """ShapeDtypeStruct tree for the decode cache.
 
     ``row_lens=True``: continuous-batching cache — ``"len"`` is a ``[B]``
     int32 vector of per-row cache lengths instead of one scalar, so every
     slot of the batch stands at its own position (requests join/leave
     mid-decode; see ``repro.launch.engine``). The scalar form stays the
-    default for training/static serving."""
+    default for training/static serving.
+
+    ``block_size``: block-PAGED cache — per-layer K/V become a shared
+    block pool ``[n_scan, n_blocks, block_size, Hkv, hd]`` (no batch
+    dim), addressed through a per-row block table ``"pages"``
+    ``[batch, max_len // block_size]`` int32 (``-1`` = unallocated, reads
+    as zeros). ``n_blocks`` defaults to ``batch * max_len // block_size``
+    (paged == rectangular bytes at full allocation; the engine sizes it
+    smaller to realize the HBM win). Requires ``row_lens=True`` and an
+    attention-only arch — paging is a serving-cache layout, and SSM
+    states are O(1) per row, not positional."""
     dtype = dtype or mcfg.dtype
     n_scan = mcfg.num_layers // mcfg.period
     kinds = mcfg.layer_kinds()
+    paged = block_size is not None
+    if paged:
+        if not row_lens:
+            raise ValueError("paged cache requires row_lens=True "
+                             "(per-row frontiers address the block table)")
+        if max_len % block_size != 0:
+            raise ValueError(f"max_len={max_len} must be a multiple of "
+                             f"block_size={block_size}")
+        if any(k != "attn" for k in kinds):
+            raise ValueError(f"paged cache requires an attention-only "
+                             f"arch; {mcfg.name!r} has {kinds}")
+        max_blocks = max_len // block_size
+        if n_blocks is None:
+            n_blocks = batch * max_blocks
     unit: dict[str, Any] = {}
     for i in range(mcfg.period):
         if kinds[i] == "attn":
+            kv_shape = ((n_scan, n_blocks, block_size, mcfg.num_kv_heads,
+                         mcfg.head_dim) if paged else
+                        (n_scan, batch, max_len, mcfg.num_kv_heads,
+                         mcfg.head_dim))
             unit[f"l{i}"] = {
-                "k": jax.ShapeDtypeStruct(
-                    (n_scan, batch, max_len, mcfg.num_kv_heads,
-                     mcfg.head_dim), dtype),
-                "v": jax.ShapeDtypeStruct(
-                    (n_scan, batch, max_len, mcfg.num_kv_heads,
-                     mcfg.head_dim), dtype),
+                "k": jax.ShapeDtypeStruct(kv_shape, dtype),
+                "v": jax.ShapeDtypeStruct(kv_shape, dtype),
             }
         else:
             unit[f"l{i}"] = {
@@ -299,16 +325,25 @@ def cache_shapes(mcfg: ModelConfig, batch: int, max_len: int,
                 "conv": jax.ShapeDtypeStruct(
                     (n_scan, batch, mcfg.ssm_conv - 1, mcfg.d_inner), dtype),
             }
-    return {"stack": unit,
-            "len": jax.ShapeDtypeStruct((batch,) if row_lens else (),
-                                        jnp.int32)}
+    out = {"stack": unit,
+           "len": jax.ShapeDtypeStruct((batch,) if row_lens else (),
+                                       jnp.int32)}
+    if paged:
+        out["pages"] = jax.ShapeDtypeStruct((batch, max_blocks), jnp.int32)
+    return out
 
 
 def init_cache(mcfg: ModelConfig, batch: int, max_len: int, dtype=None, *,
-               row_lens: bool = False):
-    return ctree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                     cache_shapes(mcfg, batch, max_len, dtype,
-                                  row_lens=row_lens))
+               row_lens: bool = False, block_size: int | None = None,
+               n_blocks: int | None = None):
+    shapes = cache_shapes(mcfg, batch, max_len, dtype, row_lens=row_lens,
+                          block_size=block_size, n_blocks=n_blocks)
+    cache = ctree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    if "pages" in cache:
+        # -1 = unallocated: a zeroed table would alias every row to
+        # block 0.
+        cache["pages"] = jnp.full(shapes["pages"].shape, -1, jnp.int32)
+    return cache
 
 
 # ---------------------------------------------------------------------------
@@ -327,7 +362,7 @@ def _apply_norm(x, p, mcfg: ModelConfig):
 
 
 def _layer_apply(x, p, a, c, mcfg, dcfg, *, kind, ffn, positions, length,
-                 training, constrain=None, tenant_groups=None):
+                 training, constrain=None, tenant_groups=None, pages=None):
     """One layer: pre-norm mixer + pre-norm FFN, residual adds.
 
     c: None (no cache) or this layer's cache dict. Returns (x, new_cache,
@@ -348,6 +383,8 @@ def _layer_apply(x, p, a, c, mcfg, dcfg, *, kind, ffn, positions, length,
         attn_cache = None
         if c is not None:
             attn_cache = {"k": c["k"], "v": c["v"], "len": length}
+            if pages is not None:
+                attn_cache["pages"] = pages
         y, new_c = L.attention(h, p["mixer"], (a or {}).get("mixer"), mcfg,
                                dcfg, positions=positions, cache=attn_cache,
                                training=training, constrain=constrain,
@@ -439,6 +476,10 @@ def forward(mcfg: ModelConfig, params, adapters, dcfg: DoRAConfig | None,
     stack_p = params["stack"]
     stack_a = adapters.get("stack", {})
     stack_c = cache["stack"] if cache is not None else None
+    # Paged serving cache: the per-row block table rides OUTSIDE the scan
+    # (like "len") — one table addresses every layer's pool, and it is
+    # read-only inside the forward (the engine owns allocation).
+    pages = cache.get("pages") if cache is not None else None
 
     if boundary_constraint is not None:
         x = boundary_constraint(x)
@@ -454,7 +495,7 @@ def forward(mcfg: ModelConfig, params, adapters, dcfg: DoRAConfig | None,
                 kind=kinds[i], ffn=ffns[i], positions=positions,
                 length=length, training=training,
                 constrain=boundary_constraint,
-                tenant_groups=tenant_groups)
+                tenant_groups=tenant_groups, pages=pages)
             if new_c is not None:
                 new_cs[li] = new_c
             aux_total = aux_total + aux
@@ -488,6 +529,8 @@ def forward(mcfg: ModelConfig, params, adapters, dcfg: DoRAConfig | None,
         (x, aux), new_stack_c = jax.lax.scan(
             body, (x, jnp.asarray(0.0, _F32)), (stack_p, stack_a, stack_c))
         new_cache = {"stack": new_stack_c, "len": length + S}
+        if pages is not None:
+            new_cache["pages"] = pages
 
     if gather_position is not None:
         x = jax.lax.dynamic_slice_in_dim(x, gather_position, 1, axis=1)

@@ -695,6 +695,129 @@ class TestSpeculative:
         assert jv.count("dot_general") == jdec.count("dot_general")
 
 
+class TestPaged:
+    """Block-paged KV cache + chunked prefill: paging is a LAYOUT
+    change, not a semantics change. Greedy streams are BITWISE the
+    rectangular engine's whatever the chunking, and with a chunk
+    covering the whole prompt the tick-level schedule is identical too
+    — while the cache lives in a block pool that drains to empty."""
+    ML = 18
+    BS = 6              # divides ML; default prefill_chunk = BS < P = 8
+
+    def test_paged_streams_equal_rectangular_bitwise(self):
+        """ACCEPTANCE: over the committed arrival trace, the paged
+        engine (chunk = 6 < P = 8, so every admission actually streams
+        in two chunks) emits exactly the rectangular engine's greedy
+        streams, drains its pool, and compiles one chunk-prefill + one
+        decode — never the monolithic prefill-into-slot."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, mcfg.vocab_size, P, dtype=np.int32)
+                   for _, P, _ in _TRACE]
+        ads = ["t0"] * len(_TRACE)
+        rect = DecodeEngine(mcfg, scfg, params, slots=4, max_len=self.ML,
+                            adapter_cache=cache)
+        paged = DecodeEngine(mcfg, scfg, params, slots=4, max_len=self.ML,
+                             adapter_cache=cache, paged=True,
+                             block_size=self.BS)
+        want = _drive_trace(rect, prompts, ads)
+        got = _drive_trace(paged, prompts, ads)
+        assert got == want
+        assert paged.stats().generated_tokens == rect.stats().generated_tokens
+        ps = paged.pool_stats()
+        assert ps["used_blocks"] == 0, f"leaked blocks: {ps}"
+        assert ps["per_slot_blocks"] == [0] * 4, ps
+        assert ps["peak_used_blocks"] > 0, ps
+        counts = paged.compile_counts()
+        assert counts["prefill_into_slot"] == 0, counts
+        assert counts["prefill_chunk"] == 1, counts
+        assert counts["decode"] == {None: 1}, counts
+
+    def test_chunk_covering_prompt_reproduces_rect_schedule(self):
+        """With prefill_chunk >= P every admission completes in ONE
+        tick, so the paged engine's tick-level counters — not just its
+        streams — equal the rectangular engine's exactly."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, mcfg.vocab_size, P, dtype=np.int32)
+                   for _, P, _ in _TRACE]
+        ads = ["t0"] * len(_TRACE)
+        rect = DecodeEngine(mcfg, scfg, params, slots=4, max_len=self.ML,
+                            adapter_cache=cache)
+        paged = DecodeEngine(mcfg, scfg, params, slots=4, max_len=self.ML,
+                             adapter_cache=cache, paged=True,
+                             block_size=self.BS, prefill_chunk=9)
+        want = _drive_trace(rect, prompts, ads)
+        got = _drive_trace(paged, prompts, ads)
+        assert got == want
+        st_r, st_p = rect.stats(), paged.stats()
+        for field in ("steps", "decode_steps", "prefills",
+                      "generated_tokens", "slot_steps"):
+            assert getattr(st_p, field) == getattr(st_r, field), field
+
+    def test_paged_speculative_streams_bitwise(self):
+        """Speculation composes with paging: a speculative paged engine
+        (non-identity adapters, so drafts are genuinely rejected AND
+        accepted) streams exactly the plain RECTANGULAR engine's greedy
+        tokens, and the rewind's block release leaves the pool drained."""
+        mcfg, scfg, params, cache = _setup()
+        _, ad, _ = build_state(mcfg, DCFG, 10)
+        cache.update("t0", _perturb(ad, 7))
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, mcfg.vocab_size, P, dtype=np.int32)
+                   for _, P, _ in _TRACE]
+        ads = ["t0"] * len(_TRACE)
+        spec = DecodeEngine(mcfg, scfg, params, slots=4, max_len=self.ML,
+                            adapter_cache=cache, paged=True,
+                            block_size=self.BS, speculative_k=3)
+        plain = DecodeEngine(mcfg, scfg, params, slots=4, max_len=self.ML,
+                             adapter_cache=cache)
+        got = _drive_trace(spec, prompts, ads)
+        want = _drive_trace(plain, prompts, ads)
+        assert got == want
+        st = spec.stats()
+        assert st.verify_steps > 0
+        assert 0 < st.accepted_drafts < st.draft_steps, st
+        assert spec.pool_stats()["used_blocks"] == 0
+
+    def test_small_pool_reclaims_and_stays_bitwise(self):
+        """A pool SMALLER than slots * max_blocks forces head-of-line
+        deferral and reclaim preemption mid-trace — the streams must
+        still be bitwise the rectangular engine's, and the pool must
+        never exceed its capacity nor leak."""
+        mcfg, scfg, params, cache = _setup()
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, mcfg.vocab_size, P, dtype=np.int32)
+                   for _, P, _ in _TRACE]
+        ads = ["t0"] * len(_TRACE)
+        rect = DecodeEngine(mcfg, scfg, params, slots=4, max_len=self.ML,
+                            adapter_cache=cache)
+        small = DecodeEngine(mcfg, scfg, params, slots=4, max_len=self.ML,
+                             adapter_cache=cache, paged=True,
+                             block_size=self.BS, n_blocks=8)  # < 4*3
+        want = _drive_trace(rect, prompts, ads)
+        got = _drive_trace(small, prompts, ads)
+        assert got == want
+        ps = small.pool_stats()
+        assert ps["used_blocks"] == 0, ps
+        assert 0 < ps["peak_used_blocks"] <= 8, ps
+
+    def test_paged_constructor_contracts(self):
+        """Paged kwargs on a rectangular engine, a non-dividing block
+        size, and an undersized pool are rejected loudly."""
+        mcfg, scfg, params, cache = _setup()
+        with pytest.raises(ValueError, match="paged"):
+            DecodeEngine(mcfg, scfg, params, slots=2, max_len=self.ML,
+                         adapter_cache=cache, block_size=self.BS)
+        with pytest.raises(ValueError, match="multiple"):
+            DecodeEngine(mcfg, scfg, params, slots=2, max_len=self.ML,
+                         adapter_cache=cache, paged=True, block_size=5)
+        with pytest.raises(ValueError, match="n_blocks"):
+            DecodeEngine(mcfg, scfg, params, slots=2, max_len=self.ML,
+                         adapter_cache=cache, paged=True,
+                         block_size=self.BS, n_blocks=2)
+
+
 # ---------------------------------------------------------------------------
 # Forced 2-device mesh (subprocess): join/leave trace under SPMD.
 # ---------------------------------------------------------------------------
@@ -844,3 +967,64 @@ def test_engine_spmd_speculative_oracle():
     accepting AND rejecting drafts."""
     out = _run_subprocess(_SPEC_SPMD, 2)
     assert "SPEC_SPMD_OK" in out, out
+
+
+_PAGED_SPMD = """
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core import AdapterStateCache, DoRAConfig
+    from repro.launch.engine import DecodeEngine
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.steps import StepConfig
+    from repro.launch.train import build_state
+
+    assert jax.device_count() == 2
+    mesh = make_debug_mesh(2, 1)     # slots shard over the data axis
+    DCFG = DoRAConfig(rank=4, alpha=8.0, mode="eager")
+    mcfg = get_config("qwen2-7b", smoke=True)
+    scfg = StepConfig(dora=DCFG)
+    params, _, _ = build_state(mcfg, DCFG, 0)
+    cache = AdapterStateCache.for_serving(mcfg, scfg, mesh)
+    _, ad, _ = build_state(mcfg, DCFG, 10)
+    cache.register("t0", ad)
+
+    ML = 12
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, mcfg.vocab_size, P, dtype=np.int32), g)
+            for P, g in [(5, 5), (6, 2), (4, 4), (5, 3), (6, 4)]]
+
+    # prefill_chunk=3 < every P: admission genuinely streams in chunks
+    # under SPMD (the block pool is replicated host state; the pool
+    # arrays shard like the rectangular cache did)
+    paged = DecodeEngine(mcfg, scfg, params, slots=4, max_len=ML,
+                         adapter_cache=cache, mesh=mesh, paged=True,
+                         block_size=6, prefill_chunk=3)
+    rect = DecodeEngine(mcfg, scfg, params, slots=4, max_len=ML,
+                        adapter_cache=cache, mesh=mesh)
+    for p, g in reqs:
+        paged.submit(p, adapter="t0", max_new_tokens=g)
+        rect.submit(p, adapter="t0", max_new_tokens=g)
+    got = paged.run()
+    want = rect.run()
+    for rp, rr in zip(got, want):
+        assert np.array_equal(rp.tokens, rr.tokens), rp.request_id
+    counts = paged.compile_counts()
+    assert counts["prefill_into_slot"] == 0, counts
+    assert counts["prefill_chunk"] == 1, counts
+    assert counts["decode"] == {None: 1}, counts
+    ps = paged.pool_stats()
+    assert ps["used_blocks"] == 0 and ps["peak_used_blocks"] > 0, ps
+    print("PAGED_SPMD_OK")
+"""
+
+
+@pytest.mark.slow
+def test_engine_spmd_paged_oracle():
+    """Acceptance on a forced 2-device CPU mesh: the block-paged engine
+    with multi-chunk admission streams exactly the rectangular engine's
+    greedy tokens under SPMD, with one compiled chunk-prefill + decode
+    pair and a fully drained pool."""
+    out = _run_subprocess(_PAGED_SPMD, 2)
+    assert "PAGED_SPMD_OK" in out, out

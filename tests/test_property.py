@@ -327,3 +327,111 @@ def test_fault_containment_under_random_plan(seed, n_nan, n_evict,
     counts = eng.compile_counts()
     assert counts["prefill_into_slot"] == 1, counts
     assert counts["decode"] == {None: 1}, counts
+
+
+# ---------------------------------------------------------------------------
+# Invariant 7 — paged block-pool conservation: under ANY interleaving of
+# admission (chunked prefill), decode, speculative rewind, deadline
+# expiry, retirement and reclaim preemption, every block in the pool is
+# owned by EXACTLY ONE of (the free list, one live slot) after EVERY
+# engine tick — no leaks, no block aliased to two rows — the host block
+# table mirrors each slot's ownership list exactly, and the pool drains
+# to fully-free when the engine does.
+# ---------------------------------------------------------------------------
+
+_PAGED_ML = 12
+_PAGED_BS = 4            # max_blocks = 3 per row
+
+
+@functools.lru_cache(maxsize=1)
+def _paged_setup():
+    from repro.configs import get_config
+    from repro.core import AdapterStateCache
+    from repro.launch.steps import StepConfig
+    from repro.launch.train import build_state
+
+    mcfg = get_config("qwen2-7b", smoke=True)
+    scfg = StepConfig(dora=DoRAConfig(rank=4, alpha=8.0, mode="eager"))
+    params, _, _ = build_state(mcfg, scfg.dora, 0)
+    cache = AdapterStateCache.for_serving(mcfg, scfg)
+    _, ad, _ = build_state(mcfg, scfg.dora, 10)
+    # Random-B adapter: speculative drafts diverge from the full path,
+    # so some drafts are REJECTED and the rewind path (and its
+    # _free_tail block release) actually runs.
+    key = jax.random.PRNGKey(7)
+    cnt = [0]
+
+    def perturb(path, leaf):
+        cnt[0] += 1
+        if "'B'" in "/".join(str(p) for p in path):
+            return 0.1 * jax.random.normal(
+                jax.random.fold_in(key, cnt[0]), leaf.shape, leaf.dtype)
+        return leaf
+
+    cache.register("t0", jax.tree_util.tree_map_with_path(perturb, ad))
+    return mcfg, scfg, params, cache
+
+
+def _assert_block_conservation(eng, n_blocks):
+    free = list(eng._free)
+    owned = [b for bl in eng._blocks for b in bl]
+    assert len(set(free)) == len(free), f"free list duplicates: {free}"
+    assert len(set(owned)) == len(owned), \
+        f"block aliased to two live slots: {eng._blocks}"
+    assert not set(free) & set(owned), \
+        f"block both free and owned: {free} vs {eng._blocks}"
+    assert sorted(free + owned) == list(range(n_blocks)), \
+        f"pool leak: free={free} owned={eng._blocks}"
+    for i, bl in enumerate(eng._blocks):
+        row = eng._pages_np[i]
+        assert list(row[:len(bl)]) == bl, (i, bl, row)
+        assert all(v == -1 for v in row[len(bl):]), (i, bl, row)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=_SEED,
+       n_blocks=st.sampled_from([3, 4, 6]),
+       chunk=st.sampled_from([3, 5, 12]),
+       spec_k=st.sampled_from([0, 2]),
+       n_reqs=st.integers(min_value=3, max_value=6))
+def test_paged_block_pool_conservation(seed, n_blocks, chunk, spec_k,
+                                       n_reqs):
+    from repro.launch.engine import DecodeEngine
+
+    mcfg, scfg, params, cache = _paged_setup()
+    rng = np.random.default_rng(seed)
+    eng = DecodeEngine(mcfg, scfg, params, slots=2, max_len=_PAGED_ML,
+                       adapter_cache=cache, paged=True,
+                       block_size=_PAGED_BS, n_blocks=n_blocks,
+                       prefill_chunk=chunk, speculative_k=spec_k)
+    # Random arrivals, prompt lengths, budgets, priorities and deadlines:
+    # a tight pool (n_blocks as low as one row's worth) forces head-of-
+    # line deferral and reclaim preemption; priorities force displacement
+    # mid-decode AND mid-prefill; deadlines force expiry in every phase.
+    reqs = sorted(
+        ({"at": int(rng.integers(0, 8)),
+          "prompt": rng.integers(0, mcfg.vocab_size,
+                                 int(rng.integers(2, 9)), dtype=np.int32),
+          "budget": int(rng.integers(1, 4)),
+          "priority": int(rng.integers(0, 2)),
+          "deadline": (int(rng.integers(2, 6))
+                       if rng.random() < 0.3 else None)}
+         for _ in range(n_reqs)),
+        key=lambda r: r["at"])
+    i = tick = 0
+    while i < len(reqs) or eng.has_work():
+        while i < len(reqs) and reqs[i]["at"] <= tick:
+            eng.submit(reqs[i]["prompt"], adapter="t0",
+                       max_new_tokens=reqs[i]["budget"],
+                       priority=reqs[i]["priority"],
+                       deadline_ticks=reqs[i]["deadline"])
+            i += 1
+        eng.step()
+        _assert_block_conservation(eng, n_blocks)
+        tick += 1
+        assert tick < 400, "engine failed to drain the trace"
+    ps = eng.pool_stats()
+    assert ps["used_blocks"] == 0 and ps["free_blocks"] == n_blocks, ps
+    assert ps["per_slot_blocks"] == [0, 0], ps
+    results = eng.pop_results()
+    assert sorted(r.request_id for r in results) == list(range(n_reqs))
