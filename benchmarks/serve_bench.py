@@ -41,6 +41,17 @@ reservation, pure shape arithmetic) is committed and gated in
 ``scripts/check_bench_drift.py`` (paged must stay strictly under the
 rectangular reservation for this trace).
 
+The fleet section prices THOUSAND-ADAPTER serving (``dynamic_grouping``)
+on a churny multi-tenant trace (N tenants ≫ slots): the SIGNATURE model
+(``simulate_fleet`` — the static engine compiles one decode executable
+per distinct slot layout the trace visits, the dynamic engine exactly
+ONE) is asserted against both real engines along with the bitwise
+dynamic-vs-static stream oracle, and the ADMISSION model
+(``fleet_admission_bytes_model`` — a host-spilled tenant re-admits for
+one state copy, a cold tenant pays the full W-reading precompute) is
+committed and gated in ``scripts/check_bench_drift.py``
+(``check_fleet``: spilled must stay strictly cheaper than cold).
+
 Absolute tok/s on this CPU is meaningless for TPU; the *ratio* isolates
 exactly the per-token norm work the cache removes, and is recorded in the
 committed ``BENCH_serve.json`` to seed the perf trajectory.
@@ -1024,8 +1035,305 @@ def run_paged(arch="qwen2-7b", *, smoke=True, rank=64, slots=4,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Fleet serving (traced dynamic grouping + tiered adapter cache).
+# ---------------------------------------------------------------------------
+
+def make_fleet_trace(*, n_requests=12, tenants=5, mean_interarrival=2.0,
+                     prompt_len=8, gen_lens=(4, 6, 8, 10), seed=0):
+    """The committed arrival trace with a per-request TENANT drawn from
+    a second deterministic stream: N adapters ≫ slots, so the slot
+    table's adapter layout churns on almost every admission.
+    ``scripts/check_bench_drift.py`` rebuilds the trace from the
+    committed parameters (``check_fleet``)."""
+    trace = make_arrival_trace(n_requests=n_requests,
+                               mean_interarrival=mean_interarrival,
+                               prompt_len=prompt_len, gen_lens=gen_lens,
+                               seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    for r in trace:
+        r["tenant"] = int(rng.integers(tenants))
+    return trace
+
+
+def simulate_fleet(trace, *, slots: int) -> dict:
+    """:func:`simulate_continuous` extended with the slot table's TENANT
+    layout, mirroring the engine's static signature rule
+    (``DecodeEngine._slot_grouping``): free slots are absorbed into a
+    neighbouring run, occupied slots collapse to run-length
+    ``(start, size)`` blocks, and a single distinct tenant is the
+    ``None`` signature. The STATIC engine compiles one decode executable
+    per distinct signature the trace visits; the DYNAMIC engine compiles
+    exactly ONE (``"dynamic"``) regardless of the tenant mix —
+    ``run_fleet`` asserts BOTH counts against the real engines, and
+    ``check_fleet`` re-simulates them from the committed trace."""
+    from collections import deque
+    queue: deque = deque()
+    table = [None] * slots      # [remaining tokens, tenant] per busy slot
+    i, step = 0, 0
+    decode_steps = prefills = generated = slot_steps = 0
+    signatures: set = set()
+    n = len(trace)
+
+    def has_work():
+        return bool(queue) or any(v is not None for v in table)
+
+    def signature():
+        # the engine's rule: forward fill from the left, then leading
+        # Nones from the right; one distinct tenant -> None; else
+        # run-length (start, size) blocks.
+        keys = [(table[j][1] if table[j] is not None else None)
+                for j in range(slots)]
+        last = None
+        for j, k in enumerate(keys):
+            if k is None:
+                keys[j] = last
+            else:
+                last = k
+        nxt = None
+        for j in reversed(range(slots)):
+            if keys[j] is None:
+                keys[j] = nxt
+            else:
+                nxt = keys[j]
+        if len(set(keys)) == 1:
+            return None
+        runs: list = []
+        for k in keys:
+            if runs and runs[-1][0] == k:
+                runs[-1] = (k, runs[-1][1] + 1)
+            else:
+                runs.append((k, 1))
+        groups, start = [], 0
+        for _, cnt in runs:
+            groups.append((start, cnt))
+            start += cnt
+        return tuple(groups)
+
+    while i < n or has_work():
+        while i < n and trace[i]["arrival_step"] <= step:
+            queue.append(trace[i])
+            i += 1
+        for j in range(slots):
+            while table[j] is None and queue:
+                r = queue.popleft()
+                prefills += 1
+                generated += 1                  # first token from prefill
+                if r["gen_len"] - 1 > 0:
+                    table[j] = [r["gen_len"] - 1, r["tenant"]]
+        active = [j for j in range(slots) if table[j] is not None]
+        if active:
+            signatures.add(signature())
+            decode_steps += 1
+            slot_steps += len(active)
+            for j in active:
+                generated += 1
+                table[j][0] -= 1
+                if table[j][0] == 0:
+                    table[j] = None
+        step += 1
+    occ = slot_steps / (decode_steps * slots) if decode_steps else 0.0
+    return {"steps": step, "decode_steps": decode_steps,
+            "prefills": prefills, "generated_tokens": generated,
+            "slot_steps": slot_steps, "mean_occupancy": occ,
+            "static_signatures": len(signatures),
+            "signature_keys": sorted(str(s) for s in signatures),
+            "dynamic_signatures": 1}
+
+
+def fleet_admission_bytes_model(d_out: int, d_in: int, rank: int,
+                                dtype_size: int = 4) -> dict:
+    """ANALYTIC per-adapted-layer admission cost of the two not-resident
+    tenant kinds, in bytes moved (machine-independent, transfers to
+    TPU):
+
+      - ``cold``: a registered-but-dropped (or never-precomputed)
+        adapter pays the full precompute — the factored norm READS
+        W [d_out, d_in] + A + B + m, then WRITES the serving state
+        (A + gsB + g, with |gsB| == |B|);
+      - ``spilled``: the state already exists in the host tier —
+        admission is ONE host→device copy of the state bytes; no W
+        read, no norm arithmetic. A spilled tenant therefore costs
+        queue latency only, never an ``AdapterCacheMiss``.
+
+    Gated in ``scripts/check_bench_drift.py`` (``check_fleet``): spilled
+    admission must stay strictly cheaper than cold."""
+    a = rank * d_in * dtype_size
+    b = d_out * rank * dtype_size
+    vec = d_out * dtype_size          # m / g row vectors (fp32)
+    w = d_out * d_in * dtype_size
+    state = a + b + vec               # A + gsB + g
+    cold = (w + a + b + vec) + state  # norm reads + state write
+    return {"d_out": d_out, "d_in": d_in, "rank": rank,
+            "dtype_size": dtype_size,
+            "state_bytes": state,
+            "cold_admission_bytes": cold,
+            "spilled_admission_bytes": state,
+            "model_ratio_cold_over_spilled": cold / state}
+
+
+def _drive_fleet(engine, trace, prompts):
+    """:func:`_drive_engine` with per-request adapter routing."""
+    i, step = 0, 0
+    while i < len(trace) or engine.has_work():
+        while i < len(trace) and trace[i]["arrival_step"] <= step:
+            engine.submit(prompts[i],
+                          adapter=f"tenant-{trace[i]['tenant']}",
+                          max_new_tokens=trace[i]["gen_len"])
+            i += 1
+        engine.step()
+        step += 1
+
+
+def run_fleet(arch="qwen2-7b", *, smoke=True, rank=64, slots=3, tenants=5,
+              verbose=True) -> dict:
+    """Fleet serving on the committed churny multi-tenant trace.
+    Deterministic and gated three ways (``check_fleet``):
+
+      - the schedule + SIGNATURE model (``simulate_fleet``) must
+        reproduce the real engines' counters, the static engine's
+        decode-executable count, and the dynamic engine's constant ONE
+        (asserted here against both real engines);
+      - the dynamic engine's greedy streams are asserted bitwise
+        identical to the static engine's (the tentpole's oracle);
+      - the admission model (``fleet_admission_bytes_model``) must keep
+        a spilled tenant strictly cheaper to admit than a cold one
+        (measured cold-precompute vs host-reload wall times stay
+        informational)."""
+    from repro.launch.engine import DecodeEngine
+
+    trace_params = {"n_requests": 12, "tenants": tenants,
+                    "mean_interarrival": 2.0, "prompt_len": 8,
+                    "gen_lens": (4, 6, 8, 10), "seed": 0}
+    trace = make_fleet_trace(**trace_params)
+    max_len = trace_params["prompt_len"] + max(trace_params["gen_lens"])
+    sim = simulate_fleet(trace, slots=slots)
+
+    mcfg = get_config(arch, smoke=smoke)
+    dcfg = DoRAConfig(rank=rank, alpha=2.0 * rank, mode="auto")
+    scfg = StepConfig(dora=dcfg)
+    params, _, _ = build_state(mcfg, dcfg, 0)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, mcfg.vocab_size, r["prompt_len"],
+                            dtype=np.int32) for r in trace]
+
+    def perturbed(ad, seed):
+        # distinct non-zero B per tenant: seed-built B is 0, and the
+        # bitwise dynamic-vs-static oracle needs tenants to differ.
+        key = jax.random.PRNGKey(seed)
+        cnt = [0]
+
+        def go(path, leaf):
+            cnt[0] += 1
+            if "'B'" in "/".join(str(p) for p in path):
+                return 0.1 * jax.random.normal(
+                    jax.random.fold_in(key, cnt[0]), leaf.shape,
+                    leaf.dtype)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(go, ad)
+
+    def fleet_cache():
+        cache = AdapterStateCache.for_serving(mcfg, scfg)
+        for t in range(tenants):
+            _, ad_t, _ = build_state(mcfg, dcfg, 10 + t)
+            cache.register(f"tenant-{t}", perturbed(ad_t, 100 + t))
+        return cache
+
+    dyn = DecodeEngine(mcfg, scfg, params, slots=slots, max_len=max_len,
+                       adapter_cache=fleet_cache(), dynamic_grouping=True)
+    _drive_fleet(dyn, trace, prompts)
+    st = dyn.stats()
+    for field in ("decode_steps", "prefills", "generated_tokens",
+                  "slot_steps"):
+        got, want = getattr(st, field), sim[field]
+        assert got == want, (
+            f"dynamic engine {field}={got} but the committed scheduling "
+            f"model says {want} — simulate_fleet no longer mirrors the "
+            f"engine; fix one of them before regenerating the artifact")
+    dyn_counts = dyn.compile_counts()
+    assert dyn_counts["decode"] == {"dynamic": 1}, (
+        "the dynamic engine compiled more than ONE decode executable "
+        "over the churny fleet trace — tenant churn leaked into the "
+        "compile signature", dyn_counts)
+    assert dyn_counts["adapter_insert"] == 1, dyn_counts
+    dyn_tokens = {r.request_id: r.tokens.tolist()
+                  for r in dyn.pop_results()}
+
+    static = DecodeEngine(mcfg, scfg, params, slots=slots,
+                          max_len=max_len, adapter_cache=fleet_cache())
+    _drive_fleet(static, trace, prompts)
+    static_tokens = {r.request_id: r.tokens.tolist()
+                     for r in static.pop_results()}
+    assert dyn_tokens == static_tokens, (
+        "dynamic-grouped streams diverged from the static engine — the "
+        "bitwise oracle is broken", dyn_tokens, static_tokens)
+    sta_counts = static.compile_counts()
+    assert len(sta_counts["decode"]) == sim["static_signatures"], (
+        f"static engine compiled {len(sta_counts['decode'])} decode "
+        f"signatures but simulate_fleet predicts "
+        f"{sim['static_signatures']} — the signature rule in "
+        f"simulate_fleet no longer mirrors _slot_grouping")
+
+    # timed second pass on the dynamic engine (compiles are warm)
+    t0 = time.perf_counter()
+    _drive_fleet(dyn, trace, prompts)
+    dt = time.perf_counter() - t0
+    dyn.pop_results()
+
+    # measured cold-precompute vs spilled-reload admission on the
+    # TIERED cache (informational — the gate prices the bytes model)
+    tiered = AdapterStateCache.for_serving(mcfg, scfg)
+    handles = []
+    for t in range(2):
+        _, ad_t, _ = build_state(mcfg, dcfg, 10 + t)
+        handles.append(tiered.register(f"tier-{t}", ad_t))
+    jax.block_until_ready(tiered.get_state(params, handles[0]))
+    tiered.max_bytes = tiered.stats().current_bytes   # room for ONE state
+    tiered.host_max_bytes = 10 * tiered.max_bytes     # spill tier on
+    jax.block_until_ready(tiered.get_state(params, handles[1]))
+    assert tiered.is_spilled(handles[0]), \
+        "eviction under a host budget must SPILL, not drop"
+    t0 = time.perf_counter()
+    jax.block_until_ready(tiered.get_state(params, handles[0]))  # reload
+    t_reload = time.perf_counter() - t0
+    tiered.invalidate("tier-1")                       # cold in both tiers
+    t0 = time.perf_counter()
+    jax.block_until_ready(tiered.get_state(params, handles[1]))  # cold
+    t_cold = time.perf_counter() - t0
+    tstats = tiered.stats().as_dict()
+    assert tstats["reloads"] >= 1 and tstats["spills"] >= 2, tstats
+
+    model = fleet_admission_bytes_model(mcfg.d_model, mcfg.d_model, rank)
+    out = {"trace": dict(trace_params, slots=slots, max_len=max_len,
+                         gen_lens=list(trace_params["gen_lens"])),
+           "schedule_model": sim,
+           "admission_model": model,
+           "measured": {"engine_tok_s": sim["generated_tokens"] / dt,
+                        "cold_admission_ms": 1e3 * t_cold,
+                        "spilled_reload_ms": 1e3 * t_reload,
+                        "tiered_cache": tstats}}
+    if verbose:
+        print(f"  fleet: {trace_params['n_requests']} requests x "
+              f"{tenants} tenants through {slots} slots — dynamic "
+              f"compiled 1 decode executable, static needed "
+              f"{sim['static_signatures']} "
+              f"({sim['decode_steps']} decode steps, occupancy "
+              f"{sim['mean_occupancy']:.2f})")
+        print(f"  oracle: dynamic greedy streams == static (bitwise); "
+              f"{out['measured']['engine_tok_s']:.1f} tok/s (measured)")
+        print(f"  admission model: cold "
+              f"{model['cold_admission_bytes']} B vs spilled "
+              f"{model['spilled_admission_bytes']} B "
+              f"({model['model_ratio_cold_over_spilled']:.1f}x); "
+              f"measured cold {1e3 * t_cold:.1f} ms vs reload "
+              f"{1e3 * t_reload:.1f} ms")
+    save("serve_bench_fleet", [out])
+    return out
+
+
 def write_artifact(rows, multi_tenant=None, continuous=None,
-                   speculative=None, paged=None,
+                   speculative=None, paged=None, fleet=None,
                    path="BENCH_serve.json") -> str:
     payload = {"bench": "serve_decode",
                "rows": rows,
@@ -1052,7 +1360,14 @@ def write_artifact(rows, multi_tenant=None, continuous=None,
                         "real engine and the memory model (peak resident "
                         "block bytes vs the rectangular slots*max_len "
                         "reservation) is gated (paged must stay strictly "
-                        "under rectangular)."}
+                        "under rectangular). fleet: traced dynamic "
+                        "grouping vs static signatures on a churny "
+                        "multi-tenant trace — the signature model (static "
+                        "compiles one decode executable per distinct slot "
+                        "layout, dynamic exactly ONE) and the admission "
+                        "model (a spilled tenant admits strictly cheaper "
+                        "than a cold one) are gated; wall times are "
+                        "informational."}
     if multi_tenant is not None:
         payload["multi_tenant"] = multi_tenant
     if continuous is not None:
@@ -1061,6 +1376,8 @@ def write_artifact(rows, multi_tenant=None, continuous=None,
         payload["speculative"] = speculative
     if paged is not None:
         payload["paged"] = paged
+    if fleet is not None:
+        payload["fleet"] = fleet
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float)
         f.write("\n")
@@ -1094,8 +1411,10 @@ def main() -> None:
     spec = run_speculative(args.arch, smoke=True, rank=args.rank)
     print("# Paged KV cache: block pool + chunked prefill, long-context trace")
     pg = run_paged(args.arch, smoke=True, rank=args.rank)
+    print("# Fleet: traced dynamic grouping vs static signatures, tiered cache")
+    fl = run_fleet(args.arch, smoke=True, rank=args.rank)
     if args.artifact:
-        print(f"wrote {os.path.abspath(write_artifact(rows, mt, cont, spec, pg, args.artifact))}")
+        print(f"wrote {os.path.abspath(write_artifact(rows, mt, cont, spec, pg, fl, args.artifact))}")
 
 
 if __name__ == "__main__":

@@ -32,7 +32,13 @@ artifacts:
     shapes — paged residency (peak blocks actually touched, and the
     pool allocation itself) must stay strictly under the rectangular
     ``slots * max_len`` reservation, and the chunked admission must not
-    cost more ticks or decode steps than committed.
+    cost more ticks or decode steps than committed;
+  - ``BENCH_serve.json`` (``fleet`` section): the dynamic-grouping
+    signature model re-simulated from the committed churny multi-tenant
+    trace — the dynamic engine must keep compiling exactly ONE decode
+    executable while the static engine needs one per distinct slot
+    layout, and the tiered-cache admission model must keep a spilled
+    tenant strictly cheaper to re-admit than a cold one.
 
 Measured sections (HLO bytes-accessed, wall clocks, tok/s) are
 machine-dependent and stay informational — they are never gated here.
@@ -450,6 +456,111 @@ def check_paged(artifact_path: str) -> int:
     return 0
 
 
+def check_fleet(artifact_path: str) -> int:
+    """Gate the fleet-serving models (PR 9): re-simulate the committed
+    churny multi-tenant trace (pure host arithmetic mirroring
+    ``DecodeEngine._slot_grouping``) and re-price the admission bytes
+    model. Fails when
+
+      1. the dynamic engine stops compiling exactly ONE decode
+         executable over the trace (churn-invariance is the tentpole);
+      2. the re-simulated signature counts diverge from the committed
+         ones (the simulator and ``_slot_grouping`` are asserted equal
+         against the REAL engines at artifact-regeneration time, so a
+         drift here means one of them changed without the other);
+      3. the committed trace stops exercising churn (static needs ≤ 1
+         signature — the dynamic win would be vacuous);
+      4. a spilled tenant stops being strictly cheaper to re-admit than
+         a cold one (the tiered cache's whole point), or its modelled
+         bytes grow."""
+    from benchmarks.serve_bench import (fleet_admission_bytes_model,
+                                        make_fleet_trace, simulate_fleet)
+
+    with open(artifact_path) as f:
+        committed = json.load(f)
+    section = committed.get("fleet")
+    if not section:
+        print(f"ERROR: no fleet section in {artifact_path} — "
+              f"regenerate: python -m benchmarks.serve_bench --smoke "
+              f"--artifact BENCH_serve.json")
+        return 1
+    tp = dict(section["trace"])
+    slots = tp.pop("slots")
+    tp.pop("max_len", None)
+    tp["gen_lens"] = tuple(tp["gen_lens"])
+    trace = make_fleet_trace(**tp)
+    sim = simulate_fleet(trace, slots=slots)
+    sched = section["schedule_model"]
+    am = section["admission_model"]
+    model = fleet_admission_bytes_model(am["d_out"], am["d_in"],
+                                        am["rank"], am["dtype_size"])
+
+    failures = []
+    improvements = []
+    rows = [("dynamic signatures", sim["dynamic_signatures"],
+             sched["dynamic_signatures"], False),
+            ("static signatures", sim["static_signatures"],
+             sched["static_signatures"], None),
+            ("fleet decode_steps", sim["decode_steps"],
+             sched["decode_steps"], False),
+            ("spilled admission B", model["spilled_admission_bytes"],
+             am["spilled_admission_bytes"], False),
+            ("cold admission B", model["cold_admission_bytes"],
+             am["cold_admission_bytes"], None)]
+    for name, now, want, higher_is_better in rows:
+        status = "ok"
+        if higher_is_better is None:
+            pass  # informational context row, gated separately below
+        elif higher_is_better is False and now > want * (1 + EPS):
+            status = "REGRESSION"
+            failures.append(f"{name}: {want:.4f} -> {now:.4f}")
+        elif higher_is_better is False and now < want * (1 - EPS):
+            status = "improved"
+            improvements.append(name)
+        print(f"  {name:>24}: {want:>10.4f} -> {now:>10.4f}  [{status}]")
+    if sim["dynamic_signatures"] != 1:
+        failures.append(
+            f"the dynamic engine's decode-executable count is "
+            f"{sim['dynamic_signatures']}, not 1 — tenant churn leaked "
+            f"into the compile signature")
+    if sim["static_signatures"] != sched["static_signatures"]:
+        failures.append(
+            f"re-simulated static signature count "
+            f"{sim['static_signatures']} != committed "
+            f"{sched['static_signatures']} — simulate_fleet or the trace "
+            f"generator changed without regenerating the artifact (the "
+            f"simulator is asserted against the real engine there)")
+    if sim["static_signatures"] <= sim["dynamic_signatures"]:
+        failures.append(
+            f"the committed trace no longer exercises tenant churn: the "
+            f"static engine needs only {sim['static_signatures']} "
+            f"signature(s) — the dynamic win would be vacuous")
+    if model["spilled_admission_bytes"] >= model["cold_admission_bytes"]:
+        failures.append(
+            f"a spilled tenant stopped being strictly cheaper to admit "
+            f"than a cold one: spilled "
+            f"{model['spilled_admission_bytes']} B >= cold "
+            f"{model['cold_admission_bytes']} B — the host tier must "
+            f"save the W-reading precompute, not just move it")
+    if failures:
+        print("\nfleet-drift FAIL:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        print("If intentional, regenerate and justify in the PR:\n"
+              "  python -m benchmarks.serve_bench --smoke --artifact "
+              "BENCH_serve.json")
+        return 1
+    if improvements:
+        print(f"\nfleet-drift OK (improved: {', '.join(improvements)}) — "
+              f"regenerate BENCH_serve.json to record the better model.")
+    else:
+        print("\nfleet-drift OK: ONE dynamic decode executable vs "
+              f"{sim['static_signatures']} static signatures on the "
+              "committed churny trace; spilled admission stays cheaper "
+              "than cold.")
+    return 0
+
+
 def check_degraded(artifact_path: str) -> int:
     """Gate the fault-containment schedule model (PR 7): re-simulate the
     committed continuous trace with ONE preemption and ONE quarantine
@@ -547,4 +658,6 @@ if __name__ == "__main__":
     rc = check_paged(serve_path) or rc
     print()
     rc = check_degraded(serve_path) or rc
+    print()
+    rc = check_fleet(serve_path) or rc
     sys.exit(rc)

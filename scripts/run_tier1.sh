@@ -5,16 +5,27 @@
 # count.
 #
 # Usage:  scripts/run_tier1.sh [extra pytest args...]
-# Env:    REPRO_TIER1_MIN_PASS  recorded floor (default below)
-#         REPRO_TIER1_MAX_FAIL  allowed failures (default 0)
-#         REPRO_FORCE_TIER      tier to force (default: interpret;
-#                               "default" = leave the dispatch unforced,
-#                               the CI matrix's other leg)
+# Env:    REPRO_TIER1_MIN_PASS     recorded floor (default below)
+#         REPRO_TIER1_MAX_FAIL     allowed failures (default 0)
+#         REPRO_TIER1_INSTALL_DEV  "1": pip-install requirements-dev.txt
+#                                  first (CI does this; containers without
+#                                  network keep the gated skips instead)
+#         REPRO_FORCE_TIER         tier to force (default: interpret;
+#                                  "default" = leave the dispatch
+#                                  unforced, the CI matrix's other leg)
 #
-# Baselines (keep in sync with ROADMAP.md):
+# The "N skipped" column is the two hypothesis-gated modules
+# (tests/test_property.py, tests/test_ssm_scan.py): with
+# requirements-dev.txt installed (CI always does) they RUN and the
+# expected skip count is 0; without it they self-skip. The pass floor
+# below is the hypothesis-absent count — CI's dev-installed runs pass
+# MORE, never fewer.
+#
+# Baselines (keep in sync with ROADMAP.md; "2 skipped" rows were
+# measured on hypothesis-absent containers, see above):
 #   seed     127 passed / 81 failed / 2 collection errors
-#   post-PR1 250 passed / 0 failed / 2 skipped (hypothesis absent) — every
-#            seed failure was JAX API drift, absorbed by src/repro/compat/
+#   post-PR1 250 passed / 0 failed / 2 skipped — every seed failure was
+#            JAX API drift, absorbed by src/repro/compat/
 #   post-PR2 292 passed / 0 failed / 2 skipped
 #   post-PR3 317 passed / 0 failed / 2 skipped (SPMD compose + CI gates)
 #   post-PR4 358 passed / 0 failed / 2 skipped (multi-tenant serving + docs)
@@ -25,11 +36,16 @@
 #            deadlines, preemption, quarantine, FaultPlan injection)
 #   post-PR8 428 passed / 0 failed / 2 skipped (paged KV cache + chunked
 #            prefill: block pool, paged==rect bitwise, check_paged gate)
+#   post-PR9 443 passed / 0 failed / 2 skipped (fleet serving: traced
+#            dynamic grouping, tiered adapter cache, churn fuzzer)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-MIN_PASS="${REPRO_TIER1_MIN_PASS:-428}"
+MIN_PASS="${REPRO_TIER1_MIN_PASS:-443}"
 MAX_FAIL="${REPRO_TIER1_MAX_FAIL:-0}"
+if [ "${REPRO_TIER1_INSTALL_DEV:-0}" = "1" ]; then
+    pip install -q -r requirements-dev.txt
+fi
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 TIER="${REPRO_FORCE_TIER:-interpret}"
 if [ "${TIER}" = "default" ]; then
@@ -51,6 +67,15 @@ summary="$(grep -E '[0-9]+ (passed|failed|error)' "$out" | tail -1)"
 passed="$(grep -oE '[0-9]+ passed' "$out" | tail -1 | grep -oE '[0-9]+' || echo 0)"
 failed="$(grep -oE '[0-9]+ failed' "$out" | tail -1 | grep -oE '[0-9]+' || echo 0)"
 errors="$(grep -oE '[0-9]+ errors?' "$out" | tail -1 | grep -oE '[0-9]+' || echo 0)"
+skipped="$(grep -oE '[0-9]+ skipped' "$out" | tail -1 | grep -oE '[0-9]+' || echo 0)"
+# The only sanctioned skips are the two hypothesis-gated modules, and
+# only when hypothesis is absent: with it installed, 0 skips expected —
+# a new unexplained skip is a silently-disabled test, which is a FAIL.
+if python -c "import hypothesis" >/dev/null 2>&1; then
+    EXPECT_SKIP=0
+else
+    EXPECT_SKIP=2
+fi
 
 echo
 echo "tier-1 summary: ${summary:-<no pytest summary found>}"
@@ -66,7 +91,13 @@ if [ "${passed}" -lt "${MIN_PASS}" ]; then
     echo "tier-1 FAIL: ${passed} passed < recorded floor ${MIN_PASS}"
     exit 1
 fi
-echo "tier-1 OK: ${passed} passed, ${failed} failed (floor ${MIN_PASS}, tier ${TIER})"
+if [ $# -eq 0 ] && [ "${skipped}" -ne "${EXPECT_SKIP}" ]; then
+    echo "tier-1 FAIL: ${skipped} skipped != expected ${EXPECT_SKIP}" \
+         "(hypothesis $(python -c 'import hypothesis' >/dev/null 2>&1 \
+          && echo present || echo absent))"
+    exit 1
+fi
+echo "tier-1 OK: ${passed} passed, ${failed} failed, ${skipped} skipped (floor ${MIN_PASS}, tier ${TIER})"
 
 # End-to-end smokes (still under the forced tier, so the fused kernels and
 # the frozen-adapter cache path are exercised through the Pallas
@@ -96,6 +127,10 @@ echo
 echo "paged serve smoke (tier ${TIER}): block pool + chunked prefill + oracle"
 python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \
     --prompt-len 16 --gen-len 4 --continuous --paged
+echo
+echo "fleet serve smoke (tier ${TIER}): dynamic grouping, ONE decode executable"
+python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \
+    --prompt-len 8 --gen-len 4 --rank 4 --fleet 5
 echo
 echo "bench smoke: compose kernels (incl. matmul-fused) + serving cache"
 python -m benchmarks.compose_bench --smoke

@@ -17,7 +17,7 @@ from repro.core.factored_norm import (
     assemble_norm, norm_peft_eye, norm_dense_ba, dtype_eps,
 )
 from repro.core.compose import (
-    compose_stable, compose_naive, magnitude_scale,
+    compose_stable, compose_naive, magnitude_scale, select_tenant,
 )
 from repro.core.dispatch import Tier, select_tier
 
@@ -31,5 +31,6 @@ __all__ = [
     "CacheStats",
     "factored_norm_terms", "factored_norm_sharded", "assemble_norm",
     "norm_peft_eye", "norm_dense_ba", "dtype_eps", "compose_stable",
-    "compose_naive", "magnitude_scale", "Tier", "select_tier",
+    "compose_naive", "magnitude_scale", "select_tenant", "Tier",
+    "select_tier",
 ]

@@ -213,10 +213,12 @@ def dora_linear(x, W, adapter: dict[str, Any], cfg: DoRAConfig, *,
     constraint (its feature entry replicated), which every
     sequence-parallel boundary constraint is.
 
-    ``tenant_groups``: multi-tenant serving (static, trace-time). A tuple
-    of ``(start, size)`` row blocks partitioning x's leading (batch) dim,
-    one per tenant, with adapter leaves carrying a leading tenant dim K =
-    ``len(tenant_groups)`` — see :func:`dora_linear_grouped`.
+    ``tenant_groups``: multi-tenant serving. EITHER a static tuple of
+    ``(start, size)`` row blocks partitioning x's leading (batch) dim —
+    one per tenant, compile-time signature — OR a TRACED int32 ``[B]``
+    array of per-row positions into the stacked tenant dim (dynamic fleet
+    serving: one executable for every tenant mix). Adapter leaves carry a
+    leading tenant dim K — see :func:`dora_linear_grouped`.
     """
     if tenant_groups is not None:
         return dora_linear_grouped(x, W, adapter, cfg, tenant_groups,
@@ -331,9 +333,8 @@ def check_tenant_groups(tenant_groups, batch: int) -> tuple:
 def dora_linear_grouped(x, W, adapter: dict[str, Any], cfg: DoRAConfig,
                         tenant_groups, *, bias=None, training: bool = False,
                         constrain=None):
-    """Multi-tenant adapted linear: one call serves a batch whose rows are
-    grouped by adapter (x [B, ..., d_in], rows ``start:start+size`` of
-    group k using adapter k).
+    """Multi-tenant adapted linear: one call serves a batch whose rows use
+    per-row adapters out of a K-stacked serving tree (x [B, ..., d_in]).
 
     ``adapter`` leaves carry a leading tenant dim K (``stack_adapter_
     states``) and MUST be a folded serving tree — ``"g"`` and ``"gsB"``
@@ -343,12 +344,27 @@ def dora_linear_grouped(x, W, adapter: dict[str, Any], cfg: DoRAConfig,
     once (the cache-hit path prices identically to single-tenant cached
     decode — gated in ``scripts/check_bench_drift.py``).
 
-    Grouping is STATIC (a compile-time signature): each group's rows are a
-    contiguous static slice run through the *same ops as the homogeneous
-    path*, so a mixed-adapter batch is bitwise-equal (fp32) to serving each
-    tenant sequentially with its own precomputed state — for groups of
-    ≥ 2 rows (XLA's single-row matmuls take a gemv path whose reduction
-    order differs; 1-row groups are allclose, see docs/numerics.md).
+    ``tenant_groups`` selects one of TWO grouping contracts:
+
+    - **Static** (a tuple of ``(start, size)`` row blocks): grouping is a
+      compile-time signature; each group's rows are a contiguous static
+      slice run through the *same ops as the homogeneous path*, so a
+      mixed-adapter batch is bitwise-equal (fp32) to serving each tenant
+      sequentially with its own precomputed state — for groups of ≥ 2
+      rows (XLA's single-row matmuls take a gemv path whose reduction
+      order differs; 1-row groups are allclose, see docs/numerics.md).
+      One executable per tenant-mix signature.
+    - **Dynamic** (a TRACED int32 ``[B]`` array of per-row stack
+      positions): the fleet-serving path. Every tenant's contribution is
+      computed by ONE K-batched contraction (reduction order independent
+      of the index values) and each row's result is then a pure gather
+      (:func:`repro.core.compose.select_tenant`) — so admission and
+      retirement change VALUES, never the compile signature: one decode
+      executable serves every tenant mix. Per-row results are BITWISE
+      per-tenant-sequential serving (the select touches no arithmetic);
+      the price is K× adapter-path FLOPs per call, the XLA-expressible
+      form of the S-LoRA gathered-BGMV kernel (a Pallas gather-BGMV is
+      the TPU-tier residual, ROADMAP).
     """
     if training:
         raise ValueError(
@@ -369,6 +385,9 @@ def dora_linear_grouped(x, W, adapter: dict[str, Any], cfg: DoRAConfig,
         raise NotImplementedError(
             "grouped multi-tenant serving of stacked/expert weights "
             f"(W rank {W.ndim}) is not supported")
+    if not isinstance(tenant_groups, (tuple, list)):
+        return _dora_linear_dyn(x, W, A, g, gsB, tenant_groups, bias=bias,
+                                constrain=constrain)
     groups = check_tenant_groups(tenant_groups, x.shape[0])
     K = A.shape[0]
     if len(groups) != K:
@@ -400,6 +419,51 @@ def dora_linear_grouped(x, W, adapter: dict[str, Any], cfg: DoRAConfig,
         yk = jax.lax.slice_in_dim(y32, start, start + size, axis=0)
         deltas.append(((gk - 1.0) * yk + tk).astype(y_base.dtype))
     y = y_base + jnp.concatenate(deltas, axis=0)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def _dora_linear_dyn(x, W, A, g, gsB, idx, *, bias=None, constrain=None):
+    """Traced dynamic grouped compose (fleet serving): per-row adapters
+    selected by a traced int32 stack position ``idx`` [B].
+
+    Bitwise contract (locked in tests/test_engine.py + tests/test_
+    property.py): the K-batched einsums below reduce over the SAME axes
+    in the SAME order as the homogeneous gsB fast path's ``x @ Aᵀ`` /
+    fp32 ``h·gsBᵀ`` for every stacked k, and the per-row select is a pure
+    gather — so row b's output is bitwise ``dora_linear`` under adapter
+    ``idx[b]``. The g term is row-local elementwise, applied per row from
+    the gathered ``g[idx]``."""
+    from repro.core.compose import select_tenant
+    if x.ndim != 3:
+        raise NotImplementedError(
+            f"dynamic grouped serving expects [B, S, d_in] activations "
+            f"(got ndim={x.ndim}); the serving steps always run the "
+            f"model's batched token layout")
+    idx = jnp.asarray(idx, jnp.int32)
+    plan_sh = as_compose_sharding(constrain)
+    cfn = plan_sh if plan_sh is not None else constrain
+    W = jax.lax.stop_gradient(W)
+    y_base = x @ W.T
+    if cfn is not None:
+        y_base = cfn(y_base)
+    y32 = y_base.astype(_F32)
+    A = jax.lax.stop_gradient(A)
+    gsB = jax.lax.stop_gradient(gsB)
+    g = jax.lax.stop_gradient(g)
+    # All-K down-projection, THEN the gather: [B, S, K, r]. One gemm over
+    # the shared d_in reduction — the selected slice is bitwise x @ A[k]ᵀ.
+    h_all = jnp.einsum("bsd,krd->bskr", x, A)
+    h = select_tenant(h_all, idx)                       # [B, S, r]
+    # All-K folded up-projection in fp32 (preferred_element_type pins the
+    # accumulator exactly like the homogeneous path's dot_general).
+    t_all = jnp.einsum("bsr,kor->bsko", h.astype(_F32), gsB.astype(_F32),
+                       preferred_element_type=_F32)     # [B, S, K, d_out]
+    t = select_tenant(t_all, idx)                       # [B, S, d_out]
+    g_row = jnp.take(g.astype(_F32), idx, axis=0)       # [B, d_out]
+    delta = ((g_row[:, None, :] - 1.0) * y32 + t).astype(y_base.dtype)
+    y = y_base + delta
     if bias is not None:
         y = y + bias
     return y

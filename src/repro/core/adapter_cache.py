@@ -73,6 +73,13 @@ class CacheStats:
     current_bytes: int
     max_bytes: int | None
     thrashing: bool = False    # every recent lookup was an evicting miss
+    # -- host spill tier (all zero without host_max_bytes) ------------------
+    host_entries: int = 0      # states resident in the host tier
+    host_bytes: int = 0        # bytes the host tier holds
+    host_max_bytes: int | None = None
+    spills: int = 0            # device evictions preserved to host
+    reloads: int = 0           # host states promoted back to device
+    host_drops: int = 0        # states dropped from the host tier (true loss)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -95,6 +102,29 @@ def mesh_fingerprint(mesh) -> tuple | None:
         return None
     shape = dict(mesh.shape)
     return tuple((a, shape[a]) for a in mesh.axis_names)
+
+
+def _tree_to_host(tree):
+    """Move a device state tree to host RAM: (numpy tree, shardings tree).
+    The shardings are captured leaf-wise so a reload can ``device_put``
+    each buffer back exactly where the precompute had pinned it."""
+    import jax
+    host = jax.tree_util.tree_map(lambda l: np.asarray(jax.device_get(l)),
+                                  tree)
+    shardings = jax.tree_util.tree_map(
+        lambda l: getattr(l, "sharding", None), tree)
+    return host, shardings
+
+
+def _tree_to_device(host_tree, sh_tree):
+    """Inverse of :func:`_tree_to_host`: bitwise the original state (a
+    device_get/device_put round trip never rewrites bits)."""
+    import jax
+
+    def put(a, s):
+        return jax.device_put(a, s) if s is not None else jax.device_put(a)
+
+    return jax.tree_util.tree_map(put, host_tree, sh_tree)
 
 
 def serving_state_nbytes(tree) -> int:
@@ -130,16 +160,33 @@ class AdapterStateCache:
     least-recently-used states are evicted past it. A single state larger
     than the whole budget is kept (serving must proceed) and everything
     else is evicted around it.
+
+    ``host_max_bytes`` turns the single-tier LRU into a TIERED cache: a
+    device-HBM LRU over a host-RAM spill tier. Device eviction then
+    SPILLS the state to host (``jax.device_get``, shardings captured)
+    instead of dropping it, a later lookup RELOADS it (``device_put``
+    back under the captured shardings — bitwise the original precompute,
+    at host-copy cost instead of a full recompute), and only host-tier
+    overflow truly drops a state (``host_drops``). A spilled state never
+    raises :class:`AdapterCacheMiss` under warm-only routing
+    (``allow_miss=False``) — spilled-but-registered is servable — and a
+    reload is NOT an evicting miss for :meth:`thrashing`: backpressure
+    (:class:`repro.launch.engine.EngineBusy`) is reserved for handles
+    that would pay a full precompute. Every state is resident in exactly
+    ONE tier (spill moves it, reload moves it back); version bumps and
+    :meth:`invalidate` clear BOTH tiers.
     """
 
     def __init__(self, precompute: Callable[[Any, Any], Any], *,
                  max_bytes: int | None = None,
+                 host_max_bytes: int | None = None,
                  act_dtype: Any = np.float32,
                  fold_gsb: bool = True,
                  sharding: Any = None,
                  thrash_window: int = 4):
         self._precompute = precompute
         self.max_bytes = max_bytes
+        self.host_max_bytes = host_max_bytes
         self.act_dtype = np.dtype(act_dtype).name
         self.fold_gsb = bool(fold_gsb)
         self.sharding = sharding
@@ -148,11 +195,20 @@ class AdapterStateCache:
         self.thrash_window = int(thrash_window)
         self._registry: dict[str, tuple[int, Any]] = {}
         self._lru: "OrderedDict[AdapterKey, tuple[Any, int]]" = OrderedDict()
+        # Host spill tier: key -> (host numpy tree, captured shardings
+        # tree, nbytes). LRU-ordered; only populated when host_max_bytes
+        # is set.
+        self._host: "OrderedDict[AdapterKey, tuple[Any, Any, int]]" = \
+            OrderedDict()
         self._hits = 0
         self._misses = 0
         self._evictions = 0
         self._invalidations = 0
         self._current_bytes = 0
+        self._host_bytes = 0
+        self._spills = 0
+        self._reloads = 0
+        self._host_drops = 0
         # Sliding window over the last `thrash_window` lookups: True iff
         # the lookup was a miss whose insertion evicted someone. All-True
         # (with a full window) = the working set cannot fit — every
@@ -163,6 +219,7 @@ class AdapterStateCache:
 
     @classmethod
     def for_serving(cls, mcfg, scfg, mesh=None, *, max_bytes=None,
+                    host_max_bytes=None,
                     fold_gsb: bool = True) -> "AdapterStateCache":
         """Model-level cache: precompute = jitted ``make_precompute_step``
         (mesh-aware — cached leaves land pinned to the serving shardings),
@@ -171,7 +228,8 @@ class AdapterStateCache:
         from repro.launch.steps import make_precompute_step
         fn = jax.jit(make_precompute_step(mcfg, scfg, mesh,
                                           fold_gsb=fold_gsb))
-        return cls(fn, max_bytes=max_bytes, act_dtype=mcfg.dtype,
+        return cls(fn, max_bytes=max_bytes, host_max_bytes=host_max_bytes,
+                   act_dtype=mcfg.dtype,
                    fold_gsb=fold_gsb, sharding=mesh_fingerprint(mesh))
 
     # -- registry (raw trainable trees + versions) --------------------------
@@ -250,6 +308,22 @@ class AdapterStateCache:
             self._hits += 1
             self._recent_evicting.append(False)
             return self._lru[key][0]
+        if key in self._host:
+            # Spilled-but-registered: promote back to the device tier at
+            # host-copy cost — NEVER an AdapterCacheMiss (warm-only
+            # routing included), never a full precompute, and not an
+            # evicting miss for the thrash window (the insertion may
+            # still spill a neighbour, but THIS lookup paid no norm
+            # work).
+            host_tree, sh_tree, nbytes = self._host.pop(key)
+            self._host_bytes -= nbytes
+            state = _tree_to_device(host_tree, sh_tree)
+            self._reloads += 1
+            self._lru[key] = (state, nbytes)
+            self._current_bytes += nbytes
+            self._evict_over_budget()
+            self._recent_evicting.append(False)
+            return state
         if not allow_miss:
             raise AdapterCacheMiss(
                 f"adapter state not precomputed and allow_miss=False: "
@@ -271,19 +345,43 @@ class AdapterStateCache:
         if self.max_bytes is None:
             return
         while self._current_bytes > self.max_bytes and len(self._lru) > 1:
-            _, (_, nbytes) = self._lru.popitem(last=False)
+            key, (state, nbytes) = self._lru.popitem(last=False)
             self._current_bytes -= nbytes
             self._evictions += 1
+            if self.host_max_bytes is not None:
+                # Spill instead of drop: the state moves (never copies —
+                # exactly one tier holds it) to host RAM with its device
+                # shardings captured, so a reload lands bitwise-identical
+                # and correctly placed.
+                host_tree, sh_tree = _tree_to_host(state)
+                self._host[key] = (host_tree, sh_tree, nbytes)
+                self._host_bytes += nbytes
+                self._spills += 1
+                self._shrink_host_tier()
+
+    def _shrink_host_tier(self) -> None:
+        while (self._host_bytes > self.host_max_bytes
+               and len(self._host) > 1):
+            _, (_, _, nbytes) = self._host.popitem(last=False)
+            self._host_bytes -= nbytes
+            self._host_drops += 1
 
     def invalidate(self, adapter_id: str | None = None) -> int:
         """Drop cached states (all of one adapter's versions, or the whole
-        cache). The registry (raw trees) is untouched. Returns the number
-        of states dropped."""
+        cache) from BOTH tiers — a stale spilled state must never be
+        reloadable after a version bump. The registry (raw trees) is
+        untouched. Returns the number of states dropped."""
         doomed = [k for k in self._lru
                   if adapter_id is None or k.adapter_id == adapter_id]
         for k in doomed:
             _, nbytes = self._lru.pop(k)
             self._current_bytes -= nbytes
+        doomed_host = [k for k in self._host
+                       if adapter_id is None or k.adapter_id == adapter_id]
+        for k in doomed_host:
+            _, _, nbytes = self._host.pop(k)
+            self._host_bytes -= nbytes
+        doomed += doomed_host
         self._invalidations += len(doomed)
         # An explicit drop (publish, operator action, fault injection) is
         # not thrash: the next few lookups will miss because WE removed
@@ -295,6 +393,14 @@ class AdapterStateCache:
         """Whether ``handle``'s state is servable from the LRU right now
         (no staleness check, no LRU-order side effects)."""
         return self.make_key(handle) in self._lru
+
+    def is_spilled(self, handle: AdapterHandle) -> bool:
+        """Whether ``handle``'s state sits in the host spill tier: not
+        device-resident, but servable at host-copy cost (a reload, not a
+        precompute) — the backpressure exemption
+        (:class:`repro.launch.engine.EngineBusy` never refuses a spilled
+        handle). Always False without a host tier."""
+        return self.make_key(handle) in self._host
 
     def thrashing(self) -> bool:
         """True when the last ``thrash_window`` lookups were ALL evicting
@@ -310,6 +416,10 @@ class AdapterStateCache:
         """LRU order, least recently used first (eviction order)."""
         return tuple(self._lru.keys())
 
+    def spilled_keys(self) -> tuple[AdapterKey, ...]:
+        """Host-tier keys, least recently spilled first (drop order)."""
+        return tuple(self._host.keys())
+
     def stats(self) -> CacheStats:
         return CacheStats(hits=self._hits, misses=self._misses,
                           evictions=self._evictions,
@@ -317,4 +427,10 @@ class AdapterStateCache:
                           entries=len(self._lru),
                           current_bytes=self._current_bytes,
                           max_bytes=self.max_bytes,
-                          thrashing=self.thrashing())
+                          thrashing=self.thrashing(),
+                          host_entries=len(self._host),
+                          host_bytes=self._host_bytes,
+                          host_max_bytes=self.host_max_bytes,
+                          spills=self._spills,
+                          reloads=self._reloads,
+                          host_drops=self._host_drops)

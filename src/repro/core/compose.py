@@ -73,3 +73,27 @@ def compose_inner(base, lora, s: float):
     (paper §4 Tier 1): d_mag = rowsum(dY ⊙ inner) / w_norm."""
     return (base.astype(_F32) + jnp.asarray(float(s), _F32)
             * lora.astype(_F32)).astype(base.dtype)
+
+
+def select_tenant(all_k, idx):
+    """Exact per-row tenant select for the TRACED dynamic grouped compose
+    (fleet serving, see :func:`repro.core.adapter.dora_linear_grouped`).
+
+    ``all_k`` is an all-tenant intermediate ``[B, S, K, ...]`` — every
+    row's contribution computed for every stacked tenant ``k`` by ONE
+    batched contraction whose reduction order is tenant-independent —
+    and ``idx`` the traced per-row int32 tenant index ``[B]``. The
+    select is a pure gather (``take_along_axis`` on the K axis): no
+    arithmetic touches the values, so row ``b``'s result is BITWISE the
+    homogeneous single-tenant computation under adapter ``idx[b]``.
+    Selecting AFTER the contraction is the whole trick — gathering the
+    per-row adapter first and batching the matmuls would put each row
+    through a different (M=1 gemv) reduction order and break bitwise
+    parity with sequential serving (docs/numerics.md)."""
+    b = all_k.shape[0]
+    if idx.shape != (b,):
+        raise ValueError(
+            f"per-row tenant index has shape {idx.shape}; need ({b},) — "
+            f"one stacked-tenant position per batch row")
+    ix = idx.reshape((b,) + (1,) * (all_k.ndim - 1)).astype(jnp.int32)
+    return jnp.squeeze(jnp.take_along_axis(all_k, ix, axis=2), axis=2)

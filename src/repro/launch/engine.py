@@ -32,7 +32,18 @@ module adds the scheduler subsystem that keeps the decode batch full:
     coincide take the single-tenant bitwise path (``groups=None``);
     mixed-handle slot tables group contiguous same-handle runs through
     ``dora_linear_grouped`` (the PR-4 grouped gsB-folded compose, ≥2-row
-    groups bitwise) with free slots absorbed into a neighbouring run.
+    groups bitwise) with free slots absorbed into a neighbouring run;
+  - **dynamic grouping** — with ``dynamic_grouping=True`` the static
+    (start, size) signature gives way to a device-resident FLEET STACK
+    of serving states indexed by a TRACED per-row int32 position
+    (``batch_in["adapter_idx"]``): tenant churn — admissions,
+    retirements, version bumps — changes VALUES, never the compile
+    signature, so a fleet of thousands of adapters decodes through
+    exactly ONE executable (``compile_counts()["decode"]`` has the
+    single key ``"dynamic"``). Greedy dynamic streams are bitwise the
+    static grouped streams AND per-tenant batched sequential serving
+    (``select_tenant`` gathers after tenant-independent contractions;
+    docs/serving.md).
 
 With ``paged=True`` the rectangular per-row K/V gives way to a
 block-paged cache: a per-layer block POOL plus a per-slot block TABLE
@@ -178,6 +189,10 @@ class EngineStats:
     draft_steps: int = 0        # base-only draft forwards (speculative)
     verify_steps: int = 0       # full-DoRA k+1-window verifies (= spec ticks)
     accepted_drafts: int = 0    # draft tokens the verify accepted
+    stack_inserts: int = 0      # fleet-stack state writes (dynamic grouping):
+    #                             one per DISTINCT handle admission, zero per
+    #                             token — the churn-cost counter the fleet
+    #                             bench prices
     # -- robustness counters (all zero on a sunny-day run) ------------------
     preemptions: int = 0        # slots displaced by higher-priority requests
     timeouts: int = 0           # requests retired by deadline expiry
@@ -275,6 +290,19 @@ class DecodeEngine:
     sampling not yet implemented) or when any active row's window would
     overflow ``max_len``.
 
+    Fleet semantics (PR 9): ``dynamic_grouping=True`` (cache-routed
+    engines only) replaces the static per-layout decode signatures with
+    ONE traced executable — slots index a device-resident fleet stack of
+    serving states by per-row int32 position, so admissions/retirements/
+    version bumps never recompile (``compile_counts()["decode"]`` stays
+    ``{"dynamic": 1}`` under arbitrary churn) at the cost of K× adapter-
+    path FLOPs per decode (K = slots; the base matmul still dominates).
+    Greedy dynamic streams are bitwise the static grouped streams and
+    per-tenant batched sequential serving. ``max_active_per_adapter``
+    caps how many slots one adapter id may hold simultaneously: excess
+    requests wait in the queue (keeping their positions) so a hot
+    tenant's burst cannot starve the fleet.
+
     Failure semantics (PR 7): requests may carry a ``priority`` (higher
     preempts lower when no slot is free — the victim re-queues as a
     continuation and resumes bitwise) and ``deadline_ticks`` (expiry
@@ -295,6 +323,8 @@ class DecodeEngine:
                  slots: int, max_len: int, adapters=None,
                  adapter_cache: AdapterStateCache | None = None,
                  mesh=None, allow_miss: bool = True,
+                 dynamic_grouping: bool = False,
+                 max_active_per_adapter: int | None = None,
                  temperature: float = 0.0, seed: int = 0,
                  speculative_k: int = 0,
                  max_cached_steps: int = 16,
@@ -342,6 +372,16 @@ class DecodeEngine:
                 f"{mesh_fingerprint(mesh)} — build the cache with "
                 f"AdapterStateCache.for_serving(mcfg, scfg, mesh) for "
                 f"THIS mesh")
+        if dynamic_grouping and adapter_cache is None:
+            raise ValueError(
+                "dynamic_grouping=True requires an adapter_cache: the fleet "
+                "stack is indexed by per-request adapter handles, which "
+                "only cache-routed engines carry")
+        if max_active_per_adapter is not None and max_active_per_adapter < 1:
+            raise ValueError(
+                f"max_active_per_adapter={max_active_per_adapter} < 1 would "
+                f"make every adapter-carrying request permanently "
+                f"inadmissible")
         self.mcfg = mcfg
         self.scfg = scfg
         self.params = params
@@ -458,6 +498,24 @@ class DecodeEngine:
         # (slot-handle layout, groups, stacked tree) of the last decode —
         # re-stacked only when the layout changes, never per token.
         self._grouping_cache: tuple | None = None
+        # -- dynamic fleet stack (dynamic_grouping=True) --------------------
+        # K = slots stacked positions over the full serving-tree structure;
+        # positions are handed out per DISTINCT handle (refcounted across
+        # the slots sharing it) and recycled at last retirement. Occupied
+        # slots ≤ slots, so distinct handles ≤ slots and _dyn_free can
+        # never underflow at assignment time (the seating slot is still
+        # free when its position is claimed).
+        self._dynamic = bool(dynamic_grouping)
+        self.max_active_per_adapter = (
+            None if max_active_per_adapter is None
+            else int(max_active_per_adapter))
+        self._dyn_stack = None               # leaves [n_scan, K, ...]
+        self._dyn_pos: dict[AdapterHandle, list] = {}   # handle→[pos, refs]
+        self._dyn_free: list[int] = list(range(self.slots - 1, -1, -1))
+        self._dyn_insert: Callable | None = None
+        self._dyn_idx_np = np.zeros((self.slots,), np.int32)
+        self._dyn_idx_cached = None          # device mirror of _dyn_idx_np
+        self._stack_inserts = 0
         self._slots: list[_Slot] = [_Slot(idx=i) for i in range(self.slots)]
         self._queue: deque[EngineRequest] = deque()
         self._results: dict[int, RequestResult] = {}
@@ -529,8 +587,12 @@ class DecodeEngine:
             # path on yet one more full precompute — refuse it with a
             # retry hint instead. Stale/unregistered handles fall through
             # to get_state below so they keep raising their own errors.
+            # SPILLED handles are exempt: a host-tier state costs one
+            # host→device reload (queue latency), never a precompute, so
+            # refusing it would turn the cheap case into a retry storm.
             if (self.adapter_cache.thrashing()
-                    and not self.adapter_cache.is_resident(handle)):
+                    and not self.adapter_cache.is_resident(handle)
+                    and not self.adapter_cache.is_spilled(handle)):
                 try:
                     cur = self.adapter_cache.current_handle(
                         handle.adapter_id)
@@ -612,6 +674,7 @@ class DecodeEngine:
                            draft_steps=self._draft_steps,
                            verify_steps=self._verify_steps,
                            accepted_drafts=self._accepted_drafts,
+                           stack_inserts=self._stack_inserts,
                            preemptions=self._preemptions,
                            timeouts=self._timeouts,
                            quarantined=self._quarantined,
@@ -627,8 +690,13 @@ class DecodeEngine:
         """How many executables each step fn holds — the compile-count
         acceptance: after any join/leave trace this must be exactly 1 for
         the prefill, 1 per decode group-signature, 1 for the (adapter-
-        free) draft, and 1 per (group-signature, window) verify."""
+        free) draft, and 1 per (group-signature, window) verify. A
+        dynamic-grouping engine has exactly ONE decode signature (the
+        ``"dynamic"`` key) no matter the tenant mix, plus one traced
+        ``adapter_insert`` executable for fleet-stack writes."""
         return {"prefill_into_slot": self._prefill._cache_size(),
+                "adapter_insert": (0 if self._dyn_insert is None
+                                   else self._dyn_insert._cache_size()),
                 "prefill_chunk": (0 if self._chunk_prefill is None
                                   else self._chunk_prefill._cache_size()),
                 "decode": {sig: fn._cache_size()
@@ -783,6 +851,8 @@ class DecodeEngine:
         self._retired += 1
         if self._paged:
             self._free_all(slot.idx)
+        if self._dynamic and slot.handle is not None:
+            self._dyn_release(slot.handle)
         slot.req = None
         slot.handle = None
         slot.state = None
@@ -897,13 +967,33 @@ class DecodeEngine:
             self._injected_nans += 1
         return logits_np
 
-    def _pop_next(self) -> EngineRequest:
-        """Pop the highest-priority queued request (earliest submitted
-        among equals — all-default-priority queues stay exactly FIFO)."""
-        best = 0
+    def _adapter_eligible(self, req: EngineRequest) -> bool:
+        """Per-adapter admission rate limit (``max_active_per_adapter``):
+        a request is held in the queue — WITHOUT losing its position —
+        while its adapter already occupies that many slots, so one hot
+        tenant's burst cannot monopolise the slot table and starve the
+        fleet. No limit set (or a fixed-adapter engine): always True."""
+        if self.max_active_per_adapter is None or req.adapter is None:
+            return True
+        n = sum(1 for s in self._slots
+                if s.occupied and s.handle is not None
+                and s.handle.adapter_id == req.adapter.adapter_id)
+        return n < self.max_active_per_adapter
+
+    def _pop_next(self) -> EngineRequest | None:
+        """Pop the highest-priority ELIGIBLE queued request (earliest
+        submitted among equals — all-default-priority queues stay exactly
+        FIFO); None when every queued request is rate-limited by
+        ``max_active_per_adapter`` (ineligible requests keep their queue
+        positions)."""
+        best = -1
         for j, r in enumerate(self._queue):
-            if r.priority > self._queue[best].priority:
+            if not self._adapter_eligible(r):
+                continue
+            if best < 0 or r.priority > self._queue[best].priority:
                 best = j
+        if best < 0:
+            return None
         if best == 0:
             return self._queue.popleft()
         self._queue.rotate(-best)
@@ -931,6 +1021,8 @@ class DecodeEngine:
                 req, preempted=req.preempted + 1))
             self._preemptions += 1
             self._free_all(idx)
+            if self._dynamic and slot.handle is not None:
+                self._dyn_release(slot.handle)
             slot.req = None
             slot.handle = None
             slot.state = None
@@ -953,6 +1045,8 @@ class DecodeEngine:
         self._preemptions += 1
         if self._paged:
             self._free_all(idx)
+        if self._dynamic and slot.handle is not None:
+            self._dyn_release(slot.handle)
         slot.req = None
         slot.handle = None
         slot.state = None
@@ -1009,6 +1103,8 @@ class DecodeEngine:
             slot.req = req
             slot.handle = req.adapter
             slot.state = state
+            if self._dynamic:
+                self._dyn_assign(idx, req.adapter, state)
             slot.admitted_step = self._steps
             slot.pos = 0
             slot.n_prior = (0 if req.prefix is None
@@ -1018,6 +1114,11 @@ class DecodeEngine:
             slot.chunk_next = 0
             self._ensure_blocks(idx, P + 1)
             return True
+        if self._dynamic:
+            # Claim the fleet-stack position BEFORE the prefill: a
+            # budget-1 request that retires inside this admission still
+            # releases a position it actually held.
+            self._dyn_assign(idx, req.adapter, state)
         toks = np.zeros((1, self.max_len), np.int32)
         toks[0, :P] = req.prompt
         logits, self.cache = self._prefill(
@@ -1072,12 +1173,21 @@ class DecodeEngine:
         while True:
             for idx, slot in enumerate(self._slots):
                 while not slot.occupied and self._queue:
-                    if not self._admit_into(idx, slot, self._pop_next(),
-                                            on_token):
+                    req = self._pop_next()
+                    if req is None:
+                        break   # every queued request is rate-limited
+                    if not self._admit_into(idx, slot, req, on_token):
                         return
             if not self._queue:
                 return
-            best = max(r.priority for r in self._queue)
+            # Preemption considers ELIGIBLE queued requests only: a
+            # rate-limited request must not displace anyone (it could
+            # not be seated in the freed slot anyway).
+            elig = [r.priority for r in self._queue
+                    if self._adapter_eligible(r)]
+            if not elig:
+                return
+            best = max(elig)
             occupied = [i for i, s in enumerate(self._slots) if s.occupied]
             if not occupied:
                 return
@@ -1086,6 +1196,71 @@ class DecodeEngine:
             if best <= self._slots[victim].req.priority:
                 return
             self._preempt(victim)
+
+    # -- dynamic fleet stack (traced grouping) ------------------------------
+
+    def _dyn_insert_fn(self):
+        """ONE jitted fleet-stack writer: position traced, stack donated —
+        admissions at every position share a single executable
+        (``compile_counts()["adapter_insert"]``)."""
+        if self._dyn_insert is None:
+            def insert(stack, state, pos):
+                def upd(big, leaf):
+                    starts = (jnp.zeros((), jnp.int32), pos) + tuple(
+                        jnp.zeros((), jnp.int32)
+                        for _ in range(leaf.ndim - 1))
+                    return jax.lax.dynamic_update_slice(
+                        big, jnp.expand_dims(leaf, 1).astype(big.dtype),
+                        starts)
+                return jax.tree_util.tree_map(upd, stack, state)
+            self._dyn_insert = jax.jit(insert, donate_argnums=(0,))
+        return self._dyn_insert
+
+    def _dyn_assign(self, idx: int, handle, state) -> None:
+        """Give slot ``idx`` a fleet-stack position for ``handle``: slots
+        sharing a handle share its position (refcounted), a NEW handle
+        claims a free position and writes its serving tree there (the one
+        churn-time device copy — decode ticks never restack). The stack
+        is built lazily from the first state's leaf shapes (zeros rows:
+        finite garbage nothing indexes)."""
+        ent = self._dyn_pos.get(handle)
+        if ent is not None:
+            ent[1] += 1
+        else:
+            pos = self._dyn_free.pop()
+            self._dyn_pos[handle] = ent = [pos, 1]
+            if self._dyn_stack is None:
+                self._dyn_stack = jax.tree_util.tree_map(
+                    lambda l: jnp.zeros(
+                        (l.shape[0], self.slots) + l.shape[1:], l.dtype),
+                    state)
+            self._dyn_stack = self._dyn_insert_fn()(
+                self._dyn_stack, state, jnp.asarray(pos, jnp.int32))
+            self._stack_inserts += 1
+        self._dyn_idx_np[idx] = ent[0]
+        self._dyn_idx_cached = None
+
+    def _dyn_release(self, handle) -> None:
+        """Drop one slot's claim on ``handle``'s position; the LAST claim
+        recycles it (the stale stack row needs no zeroing — no live row's
+        index points at it)."""
+        ent = self._dyn_pos.get(handle)
+        if ent is None:
+            return
+        ent[1] -= 1
+        if ent[1] == 0:
+            del self._dyn_pos[handle]
+            self._dyn_free.append(ent[0])
+
+    def _dyn_idx(self):
+        """Device mirror of the per-slot position vector — the traced
+        ``batch_in["adapter_idx"]`` operand; rebuilt only when an
+        admission moved a slot's index, never per token. Free slots keep
+        a stale (in-range) position: their rows decode garbage nothing
+        reads, exactly like the static path's absorbed free slots."""
+        if self._dyn_idx_cached is None:
+            self._dyn_idx_cached = jnp.asarray(np.array(self._dyn_idx_np))
+        return self._dyn_idx_cached
 
     def _slot_grouping(self):
         """(tenant_groups | None, adapter tree) for the CURRENT slot
@@ -1100,6 +1275,10 @@ class DecodeEngine:
         token."""
         if self.adapter_cache is None:
             return None, self.adapters
+        if self._dynamic:
+            # The signature is the CONSTANT "dynamic": churn moved values
+            # (stack rows, index vector), never the trace.
+            return "dynamic", self._dyn_stack
         layout = tuple((s.handle if s.occupied else None)
                        for s in self._slots)
         if self._grouping_cache is not None \
@@ -1143,9 +1322,11 @@ class DecodeEngine:
         if groups in self._decodes:
             self._decodes.move_to_end(groups)
             return self._decodes[groups]
+        dyn = groups == "dynamic"
         fn = jax.jit(make_decode_step(self.mcfg, self.scfg, self.mesh,
                                       batch=self.slots,
-                                      tenant_groups=groups),
+                                      tenant_groups=None if dyn else groups,
+                                      dynamic_groups=dyn),
                      donate_argnums=(2,),
                      out_shardings=(None, self._cache_out_sh))
         self._decodes[groups] = fn
@@ -1167,9 +1348,11 @@ class DecodeEngine:
         if key in self._verifies:
             self._verifies.move_to_end(key)
             return self._verifies[key]
+        dyn = groups == "dynamic"
         fn = jax.jit(make_verify_step(self.mcfg, self.scfg, self.mesh,
                                       batch=self.slots, window=window,
-                                      tenant_groups=groups),
+                                      tenant_groups=None if dyn else groups,
+                                      dynamic_groups=dyn),
                      donate_argnums=(2,),
                      out_shardings=(None, self._cache_out_sh))
         self._verifies[key] = fn
@@ -1328,8 +1511,11 @@ class DecodeEngine:
             toks[i, 0] = self._slots[i].last_token
         groups, adapters = self._slot_grouping()
         decode = self._get_decode(groups)
+        batch_in = {"tokens": jnp.asarray(toks)}
+        if groups == "dynamic":
+            batch_in["adapter_idx"] = self._dyn_idx()
         logits, self.cache = decode(self.params, adapters, self.cache,
-                                    {"tokens": jnp.asarray(toks)})
+                                    batch_in)
         logits_np = np.asarray(logits)      # the sampling sync
         self._decode_steps += 1
         self._slot_steps += len(active)
@@ -1390,8 +1576,11 @@ class DecodeEngine:
             win[i, 1:] = drafts[i]
         groups, adapters = self._slot_grouping()
         verify = self._get_verify(groups, k + 1)
+        batch_in = {"tokens": jnp.asarray(win)}
+        if groups == "dynamic":
+            batch_in["adapter_idx"] = self._dyn_idx()
         logits, self.cache = verify(self.params, adapters, self.cache,
-                                    {"tokens": jnp.asarray(win)})
+                                    batch_in)
         logits_np = np.asarray(logits)       # [slots, k+1, V]
         self._verify_steps += 1
         # Quarantine BEFORE acceptance: a poisoned row emits nothing (its

@@ -218,13 +218,23 @@ class MultiTenantServer:
 
     def __init__(self, mcfg, scfg: StepConfig, params, *,
                  cache: AdapterStateCache, mesh=None,
-                 max_cached_steps: int = 32, engine_slots: int = 8):
+                 max_cached_steps: int = 32, engine_slots: int = 8,
+                 dynamic_grouping: bool = False,
+                 max_active_per_adapter: int | None = None):
         _check_cache_mesh(cache, mesh)
         self.mcfg = mcfg
         self.scfg = scfg
         self.params = params
         self.cache = cache
         self.mesh = mesh
+        # Fleet knobs, threaded into every engine this server builds:
+        # dynamic_grouping swaps the engine's static group signatures for
+        # the traced fleet stack (one decode executable under churn);
+        # max_active_per_adapter rate-limits slots per adapter id. The
+        # STATIC batch path (same-length serve()) is unaffected — its
+        # grouping is per-call, not per-engine.
+        self.dynamic_grouping = bool(dynamic_grouping)
+        self.max_active_per_adapter = max_active_per_adapter
         # Mixed-length batches route through a continuous-batching engine
         # with this FIXED slot count (requests beyond it queue and join
         # as rows retire) — decoupled from the batch size, so varying
@@ -278,7 +288,10 @@ class MultiTenantServer:
         else:
             eng = DecodeEngine(self.mcfg, self.scfg, self.params,
                                slots=slots, max_len=max_len,
-                               adapter_cache=self.cache, mesh=self.mesh)
+                               adapter_cache=self.cache, mesh=self.mesh,
+                               dynamic_grouping=self.dynamic_grouping,
+                               max_active_per_adapter=(
+                                   self.max_active_per_adapter))
             self._engines[key] = eng
             while len(self._engines) > self.max_cached_engines:
                 self._engines.popitem(last=False)
@@ -472,7 +485,9 @@ class EngineServer:
                  fault_plan=None, spec_accept_floor: float = 0.0,
                  paged: bool = False, block_size: int | None = None,
                  n_blocks: int | None = None,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None,
+                 dynamic_grouping: bool = False,
+                 max_active_per_adapter: int | None = None):
         from repro.launch.engine import DecodeEngine
         _check_cache_mesh(cache, mesh)
         self.cache = cache
@@ -485,7 +500,10 @@ class EngineServer:
                                    spec_accept_floor=spec_accept_floor,
                                    paged=paged, block_size=block_size,
                                    n_blocks=n_blocks,
-                                   prefill_chunk=prefill_chunk)
+                                   prefill_chunk=prefill_chunk,
+                                   dynamic_grouping=dynamic_grouping,
+                                   max_active_per_adapter=(
+                                       max_active_per_adapter))
 
     def run(self, requests: Sequence[Request], *, gen_len: int,
             eos_id: int | None = None, on_token=None,
@@ -590,6 +608,13 @@ def main() -> None:
     ap.add_argument("--block-size", type=int, default=0, metavar="B",
                     help="with --paged: K/V block size (0 = auto: the "
                          "largest divisor of max_len up to 16)")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="fleet-serving demo: N tenants over --batch "
+                         "slots, a churny mixed-adapter trace through the "
+                         "TRACED dynamic-grouping engine; asserts the "
+                         "greedy streams match the static-signature "
+                         "engine bitwise and that the dynamic decode "
+                         "held exactly ONE executable")
     ap.add_argument("--priority", type=int, default=0, metavar="N",
                     help="with --continuous: submit the LAST request at "
                          "priority N — it admits ahead of the FIFO (and "
@@ -604,6 +629,54 @@ def main() -> None:
 
     rng = np.random.default_rng(args.seed)
     max_len = args.prompt_len + args.gen_len
+
+    if args.fleet > 1:
+        cache = AdapterStateCache.for_serving(mcfg, scfg)
+        for t in range(args.fleet):
+            _, ad_t, _ = build_state(mcfg, dcfg, args.seed + 1 + t)
+            cache.register(f"tenant-{t}", ad_t)
+        n_req = max(2 * args.batch, args.fleet)
+        requests = [Request(rng.integers(
+            0, mcfg.vocab_size,
+            int(rng.integers(args.prompt_len // 2, args.prompt_len + 1)),
+            dtype=np.int32), f"tenant-{int(rng.integers(args.fleet))}")
+            for _ in range(n_req)]
+        dyn = EngineServer(mcfg, scfg, params, cache=cache,
+                           slots=args.batch, max_len=max_len,
+                           temperature=args.temperature, seed=args.seed,
+                           dynamic_grouping=True)
+        t0 = time.time()
+        results = dyn.run(requests, gen_len=args.gen_len)
+        dt = time.time() - t0
+        st = dyn.engine.stats()
+        counts = dyn.engine.compile_counts()
+        assert counts["decode"] == {"dynamic": 1}, (
+            f"dynamic decode grew extra executables: {counts['decode']}")
+        assert counts["adapter_insert"] == 1, counts
+        print(f"fleet: {n_req} requests x {args.fleet} tenants through "
+              f"{args.batch} slots in {dt:.2f}s "
+              f"({st.generated_tokens / dt:.1f} tok/s, "
+              f"{st.stack_inserts} stack inserts, ONE dynamic decode "
+              f"executable)")
+        if args.temperature <= 0.0:
+            # the fleet oracle: the same churny trace through a STATIC-
+            # signature engine must stream bitwise-identical tokens —
+            # while compiling one decode per distinct slot layout.
+            static = EngineServer(mcfg, scfg, params, cache=cache,
+                                  slots=args.batch, max_len=max_len,
+                                  temperature=args.temperature,
+                                  seed=args.seed)
+            base = static.run(requests, gen_len=args.gen_len)
+            for rs, rp in zip(results, base):
+                assert rs.tokens.tolist() == rp.tokens.tolist(), (
+                    rs.request_id, rs.tokens, rp.tokens)
+            n_sigs = len(static.engine.compile_counts()["decode"])
+            print(f"  dynamic greedy streams == static engine (oracle "
+                  f"OK; static needed {n_sigs} decode signatures)")
+        for r in results[:2]:
+            print(f"  req{r.request_id}: P={len(r.prompt)} "
+                  f"-> {r.tokens.tolist()} ({r.finish_reason})")
+        return
 
     if args.continuous:
         from repro.launch.engine import FINISH_REASONS

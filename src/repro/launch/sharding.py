@@ -237,6 +237,25 @@ def adapter_sharding(mcfg: ModelConfig, dcfg: DoRAConfig, mesh,
     return {"stack": walk(shapes["stack"])}
 
 
+def fleet_stack_sharding(adapter_shardings, mesh):
+    """Sharding tree for a device-resident FLEET STACK of serving states
+    (dynamic grouped decode, see ``DecodeEngine(dynamic_grouping=True)``).
+
+    The fleet stack holds K tenants' folded serving leaves stacked on a
+    new axis 1 — ``[n_scan, K, ...]``, the ``stack_adapter_states(...,
+    axis=1)`` layout — and is indexed per row by a TRACED int32 position,
+    so the K axis must be REPLICATED: sharding it would turn the
+    per-row ``take_along_axis`` gather into cross-device traffic on the
+    decode hot path. Every other dim keeps the per-tenant serving
+    sharding (A congruent with W's d_in, g/gsB row-sharded on d_out)
+    unchanged — insert the tenant axis, touch nothing else."""
+    def stackify(sh):
+        spec = list(sh.spec)
+        spec.insert(1, None)
+        return NamedSharding(mesh, P(*spec))
+    return ctree.map(stackify, adapter_shardings)
+
+
 def opt_state_sharding(adapter_shardings, mesh, adapter_shapes=None):
     """AdamW moments: adapter sharding + ZeRO-1-style data-sharding.
 

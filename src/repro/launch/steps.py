@@ -358,7 +358,8 @@ def make_precompute_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
 
 
 def make_decode_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
-                     batch: int, tenant_groups=None):
+                     batch: int, tenant_groups=None,
+                     dynamic_groups: bool = False):
     """(params, adapters, cache, tokens [B,1]) -> (logits [B,V], cache').
 
     One new token against a pre-filled cache (the ``decode_*`` /
@@ -372,15 +373,29 @@ def make_decode_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
     grouped by adapter (static compile-time signature); the adapter tree
     must be the stacked folded serving state. The grouped step's jaxpr
     contains zero ``dora_wnorm``-tagged ops: a cache hit does no norm
-    work (asserted in ``tests/test_serve_multitenant.py``)."""
+    work (asserted in ``tests/test_serve_multitenant.py``).
+
+    ``dynamic_groups``: fleet serving — each row's adapter is selected by
+    the TRACED int32 per-row stack position ``batch_in["adapter_idx"]``
+    ([B]) out of the K-stacked adapter tree, so tenant churn changes
+    VALUES, never this step's compile signature: ONE decode executable
+    serves every tenant mix (see ``repro.core.dora_linear_grouped``).
+    Mutually exclusive with a static ``tenant_groups``."""
+    if dynamic_groups and tenant_groups is not None:
+        raise ValueError(
+            "dynamic_groups=True takes the per-row adapter index from "
+            "batch_in['adapter_idx']; a static tenant_groups signature "
+            "cannot be given at the same time")
 
     def decode_step(params, adapters, cache, batch_in):
         is_embeds = "embeds" in batch_in
         kw = ({"embeds": batch_in["embeds"]} if is_embeds
               else {"tokens": batch_in["tokens"]})
+        tg = (jnp.asarray(batch_in["adapter_idx"], jnp.int32)
+              if dynamic_groups else tenant_groups)
         logits, new_cache, _ = forward(
             mcfg, params, adapters, scfg.dora, cache=cache,
-            training=False, tenant_groups=tenant_groups, **kw)
+            training=False, tenant_groups=tg, **kw)
         return logits[:, -1], new_cache
 
     return decode_step
@@ -415,7 +430,8 @@ def make_draft_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
 
 
 def make_verify_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
-                     batch: int, window: int, tenant_groups=None):
+                     batch: int, window: int, tenant_groups=None,
+                     dynamic_groups: bool = False):
     """(params, adapters, cache, tokens [B,window]) ->
     (logits [B,window,V], cache').
 
@@ -433,13 +449,24 @@ def make_verify_step(mcfg: ModelConfig, scfg: StepConfig, mesh=None, *,
     ``models/layers.py``), overwriting the draft step's base-path K/V
     with full-path values. The ENGINE owns the rewind: it re-syncs
     ``"len"`` to each row's accepted frontier after this step (the step
-    itself advances ``len`` by ``window`` like any forward)."""
+    itself advances ``len`` by ``window`` like any forward).
+
+    ``dynamic_groups``: as for :func:`make_decode_step` — per-row
+    adapters from the traced ``batch_in["adapter_idx"]``, one verify
+    executable per window across every tenant mix."""
     del mesh
+    if dynamic_groups and tenant_groups is not None:
+        raise ValueError(
+            "dynamic_groups=True takes the per-row adapter index from "
+            "batch_in['adapter_idx']; a static tenant_groups signature "
+            "cannot be given at the same time")
 
     def verify_step(params, adapters, cache, batch_in):
+        tg = (jnp.asarray(batch_in["adapter_idx"], jnp.int32)
+              if dynamic_groups else tenant_groups)
         logits, new_cache, _ = forward(
             mcfg, params, adapters, scfg.dora, cache=cache,
-            training=False, tenant_groups=tenant_groups,
+            training=False, tenant_groups=tg,
             tokens=batch_in["tokens"])
         return logits, new_cache
 

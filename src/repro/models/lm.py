@@ -440,10 +440,12 @@ def forward(mcfg: ModelConfig, params, adapters, dcfg: DoRAConfig | None,
     one row regardless of how much right-padding the bucket added.
     Overrides ``loss_slice``.
     ``tenant_groups``: multi-tenant serving — STATIC (start, size) row
-    blocks grouping the batch by adapter; ``adapters`` must be a stacked
-    folded serving tree (leaves [n_scan, K, ...], see
-    ``repro.core.stack_adapter_states``). Serving-only: requires
-    ``training=False``.
+    blocks grouping the batch by adapter, OR a TRACED int32 [B] array of
+    per-row positions into the stacked tenant dim (dynamic fleet serving:
+    tenant churn changes values, never the compile signature); either
+    way ``adapters`` must be a stacked folded serving tree (leaves
+    [n_scan, K, ...], see ``repro.core.stack_adapter_states``).
+    Serving-only: requires ``training=False``.
     """
     if tenant_groups is not None and training:
         raise ValueError("tenant_groups is a serving-only path "

@@ -226,3 +226,153 @@ class TestKeying:
         assert mesh_fingerprint(None) is None
         mesh = make_mesh((1, 1), ("data", "model"))
         assert mesh_fingerprint(mesh) == (("data", 1), ("model", 1))
+
+
+def _tiered(max_dev: int, max_host: int | None):
+    return AdapterStateCache(_precompute, act_dtype=jnp.float32,
+                             fold_gsb=True, max_bytes=max_dev,
+                             host_max_bytes=max_host)
+
+
+class TestHostTier:
+    """PR 9 tiered cache: device-LRU eviction SPILLS to a host-RAM tier
+    instead of discarding; a later lookup RELOADS (host→device copy, not
+    a precompute, not a miss). Conservation: every byte lives in exactly
+    one tier, and the two tiers' byte counters never double-count or
+    leak across spill/reload/invalidate cycles."""
+
+    def test_spill_moves_bytes_exactly_once(self, setup):
+        W, _ = setup
+        cache = _tiered(2 * STATE_BYTES, 10 * STATE_BYTES)
+        hs = [cache.register(f"t{i}", _tenant(i)) for i in range(3)]
+        for h in hs:
+            cache.get_state(W, h)
+        st = cache.stats()
+        # t0 spilled; t1/t2 device-resident — no byte counted twice,
+        # none dropped.
+        assert st.entries == 2 and st.host_entries == 1
+        assert st.current_bytes == 2 * STATE_BYTES
+        assert st.host_bytes == STATE_BYTES
+        assert st.spills == 1 and st.reloads == 0
+        assert cache.is_spilled(hs[0]) and not cache.is_resident(hs[0])
+        # exactly-one-tier residency for every tenant
+        for h in hs:
+            assert cache.is_resident(h) != cache.is_spilled(h)
+
+    def test_reload_is_bitwise_and_not_a_miss(self, setup):
+        W, _ = setup
+        cache = _tiered(2 * STATE_BYTES, 10 * STATE_BYTES)
+        hs = [cache.register(f"t{i}", _tenant(i)) for i in range(3)]
+        fresh = {h: {k: np.asarray(v) for k, v in
+                     cache.get_state(W, h).items()} for h in hs}
+        misses_before = cache.stats().misses
+        state = cache.get_state(W, hs[0])          # reload from host
+        st = cache.stats()
+        assert st.reloads == 1
+        assert st.misses == misses_before, \
+            "a host-tier reload must not count as a miss"
+        for k in ("A", "g", "gsB"):
+            np.testing.assert_array_equal(np.asarray(state[k]),
+                                          fresh[hs[0]][k])
+        # the reload moved it back: device-resident, host slot freed
+        assert cache.is_resident(hs[0]) and not cache.is_spilled(hs[0])
+        assert st.host_bytes == STATE_BYTES        # the NEW spill victim
+        assert st.current_bytes == 2 * STATE_BYTES
+
+    def test_reload_does_not_feed_the_thrash_signal(self, setup):
+        W, _ = setup
+        cache = AdapterStateCache(_precompute, act_dtype=jnp.float32,
+                                  fold_gsb=True, max_bytes=STATE_BYTES,
+                                  host_max_bytes=10 * STATE_BYTES,
+                                  thrash_window=2)
+        hs = [cache.register(f"t{i}", _tenant(i)) for i in range(2)]
+        cache.get_state(W, hs[0])
+        cache.get_state(W, hs[1])       # evicting miss → spills t0
+        assert not cache.thrashing()
+        # ping-pong between the two: every lookup is now a RELOAD (the
+        # other tenant spills), and reloads must read as warm traffic —
+        # the thrash window never fills with evicting misses.
+        for _ in range(4):
+            cache.get_state(W, hs[0])
+            cache.get_state(W, hs[1])
+        st = cache.stats()
+        assert st.reloads == 8 and not cache.thrashing()
+
+    def test_warm_only_routing_serves_spilled_states(self, setup):
+        """allow_miss=False means 'no precompute on the serve path'; a
+        spilled state costs a host→device copy, not a precompute, so it
+        must serve — the EngineBusy/backpressure exemption."""
+        W, _ = setup
+        cache = _tiered(STATE_BYTES, 10 * STATE_BYTES)
+        hs = [cache.register(f"t{i}", _tenant(i)) for i in range(2)]
+        cache.get_state(W, hs[0])
+        cache.get_state(W, hs[1])                  # spills t0
+        assert cache.is_spilled(hs[0])
+        state = cache.get_state(W, hs[0], allow_miss=False)   # no raise
+        assert cache.stats().reloads == 1
+        np.testing.assert_array_equal(
+            np.asarray(state["g"]),
+            np.asarray(_precompute(W, cache.adapters("t0"))["g"]))
+        # a COLD tenant still raises under warm-only routing
+        h2 = cache.register("cold", _tenant(5))
+        with pytest.raises(AdapterCacheMiss):
+            cache.get_state(W, h2, allow_miss=False)
+
+    def test_version_bump_invalidates_both_tiers(self, setup):
+        W, _ = setup
+        cache = _tiered(STATE_BYTES, 10 * STATE_BYTES)
+        hs = [cache.register(f"t{i}", _tenant(i)) for i in range(2)]
+        cache.get_state(W, hs[0])
+        cache.get_state(W, hs[1])                  # t0 spilled
+        assert cache.is_spilled(hs[0])
+        adp2 = dict(_tenant(0))
+        adp2["B"] = adp2["B"] + 0.1
+        cache.update("t0", adp2)
+        st = cache.stats()
+        # the spilled v0 state is gone — a reload must NEVER resurrect a
+        # stale version from the host tier
+        assert not cache.is_spilled(hs[0]) and not cache.is_resident(hs[0])
+        assert st.host_bytes == 0 and st.host_entries == 0
+        with pytest.raises(AdapterCacheMiss, match="stale adapter handle"):
+            cache.get_state(W, hs[0])
+        # explicit invalidate() also clears the host tier
+        cache.get_state(W, cache.current_handle("t0"))
+        cache.get_state(W, hs[1])                  # spills t0@v1
+        assert cache.invalidate("t0") == 1
+        assert cache.stats().host_entries == 0
+
+    def test_host_budget_drops_oldest_spill(self, setup):
+        W, _ = setup
+        cache = _tiered(STATE_BYTES, 2 * STATE_BYTES)
+        hs = [cache.register(f"t{i}", _tenant(i)) for i in range(4)]
+        for h in hs:
+            cache.get_state(W, h)
+        st = cache.stats()
+        # t0..t2 spilled in order; the 2-state host budget dropped t0
+        assert st.spills == 3 and st.host_drops == 1
+        assert st.host_entries == 2
+        assert st.host_bytes == 2 * STATE_BYTES
+        assert [k.adapter_id for k in cache.spilled_keys()] == ["t1", "t2"]
+        assert not cache.is_spilled(hs[0])
+        # a dropped spill is simply cold again: next lookup is a miss
+        misses = cache.stats().misses
+        cache.get_state(W, hs[0])
+        assert cache.stats().misses == misses + 1
+
+    def test_no_host_tier_is_the_legacy_cache(self, setup):
+        """host_max_bytes=None (the default) keeps PR-4 semantics
+        bitwise: evictions discard, is_spilled is always False, and the
+        tier counters stay zero."""
+        W, _ = setup
+        cache = AdapterStateCache(_precompute, act_dtype=jnp.float32,
+                                  fold_gsb=True, max_bytes=STATE_BYTES)
+        hs = [cache.register(f"t{i}", _tenant(i)) for i in range(2)]
+        cache.get_state(W, hs[0])
+        cache.get_state(W, hs[1])
+        st = cache.stats()
+        assert st.evictions == 1 and st.spills == 0
+        assert st.host_entries == 0 and st.host_bytes == 0
+        assert not cache.is_spilled(hs[0])
+        misses = st.misses
+        cache.get_state(W, hs[0])                  # full precompute again
+        assert cache.stats().misses == misses + 1

@@ -818,6 +818,192 @@ class TestPaged:
                          block_size=self.BS, n_blocks=2)
 
 
+class TestFleetServing:
+    """PR 9 traced dynamic grouping + the per-adapter rate limit.
+
+    Contract under test: a DYNAMIC engine (``dynamic_grouping=True``)
+    serves arbitrary tenant mixes through exactly ONE decode executable
+    (tenant churn changes values — stack rows, the per-row index — never
+    the compile signature) while streaming tokens bitwise-identical to
+    the STATIC-signature engine and to each request served alone."""
+    ML = 14
+
+    def _fleet(self, tenants=3):
+        mcfg, scfg, params, cache = _setup(tenants=tenants)
+        # distinct non-zero B per tenant: seed-built trees have B == 0,
+        # so every tenant would otherwise stream identical tokens and a
+        # mis-indexed fleet stack could never be caught.
+        for t in range(tenants):
+            cache.update(f"t{t}", _perturb(cache.adapters(f"t{t}"), 40 + t))
+        return mcfg, scfg, params, cache
+
+    def _trace(self, mcfg, n=7, tenants=3, seed=0):
+        rng = np.random.default_rng(seed)
+        return [(rng.integers(0, mcfg.vocab_size, 4 + (i % 3),
+                              dtype=np.int32),
+                 3 + (i % 3), f"t{i % tenants}") for i in range(n)]
+
+    def _run(self, mcfg, scfg, params, cache, reqs, **kw):
+        eng = DecodeEngine(mcfg, scfg, params, slots=3, max_len=self.ML,
+                           adapter_cache=cache, **kw)
+        for p, g, a in reqs:
+            eng.submit(p, adapter=a, max_new_tokens=g)
+        res = eng.run()
+        return eng, {r.request_id: r.tokens.tolist() for r in res}
+
+    def test_dynamic_streams_match_static_and_oracle_bitwise(self):
+        """ACCEPTANCE: a mixed-tenant trace through the dynamic engine is
+        bitwise the static-signature engine AND each request served alone
+        (per-tenant sequential serving)."""
+        mcfg, scfg, params, cache = self._fleet()
+        reqs = self._trace(mcfg)
+        e_dyn, dyn = self._run(mcfg, scfg, params, cache, reqs,
+                               dynamic_grouping=True)
+        _, sta = self._run(mcfg, scfg, params, cache, reqs)
+        assert dyn == sta, "dynamic streams diverged from static grouping"
+        for (p, g, a), (rid, toks) in zip(reqs, sorted(dyn.items())):
+            np.testing.assert_array_equal(
+                toks, _alone(mcfg, scfg, params, cache, p, g, self.ML, a),
+                err_msg=f"request {rid} under dynamic grouping diverged "
+                        f"from serving it alone")
+        counts = e_dyn.compile_counts()
+        assert counts["decode"] == {"dynamic": 1}, counts
+        assert counts["adapter_insert"] == 1, counts
+
+    def test_compile_counts_are_churn_invariant(self):
+        """ACCEPTANCE (seeded mirror of the hypothesis churn fuzzer): N
+        adapters ≫ slots, random submit/update interleavings across
+        waves — the dynamic engine ends every wave with exactly ONE
+        decode executable and ONE adapter_insert executable, and every
+        request finishes exactly once."""
+        tenants = 4
+        mcfg, scfg, params, cache = self._fleet(tenants=tenants)
+        eng = DecodeEngine(mcfg, scfg, params, slots=2, max_len=self.ML,
+                           adapter_cache=cache, dynamic_grouping=True)
+        rng = np.random.default_rng(7)
+        submitted, finished = [], []
+        for wave in range(3):
+            for _ in range(4):
+                t = int(rng.integers(tenants))
+                p = rng.integers(0, mcfg.vocab_size,
+                                 int(rng.integers(3, 7)), dtype=np.int32)
+                submitted.append(eng.submit(
+                    p, adapter=f"t{t}", max_new_tokens=int(
+                        rng.integers(2, 5))))
+            for _ in range(int(rng.integers(1, 6))):
+                if eng.has_work():
+                    eng.step()
+            finished += [r.request_id for r in eng.pop_results()]
+            # churn BETWEEN waves: version-bump a random tenant (new
+            # handle → new stack position; pinned in-flight states keep
+            # serving v_old) and drop another tenant's cached state.
+            bump = int(rng.integers(tenants))
+            cache.update(f"t{bump}",
+                         _perturb(cache.adapters(f"t{bump}"), 90 + wave))
+            cache.invalidate(f"t{int(rng.integers(tenants))}")
+            counts = eng.compile_counts()
+            assert counts["decode"] == {"dynamic": 1}, (wave, counts)
+        finished += [r.request_id for r in eng.run()]
+        assert sorted(finished) == sorted(submitted), \
+            "requests lost or double-finished under churn"
+        assert len(set(finished)) == len(finished)
+        counts = eng.compile_counts()
+        assert counts["decode"] == {"dynamic": 1}, counts
+        assert counts["adapter_insert"] == 1, counts
+        assert counts["prefill_into_slot"] == 1, counts
+        assert eng.stats().stack_inserts > 0
+        # fleet positions drained with the slot table
+        assert len(eng._dyn_free) == eng.slots and not eng._dyn_pos
+
+    def test_dynamic_speculative_and_paged_stay_bitwise(self):
+        """The dynamic stack composes with the PR-8 tick modes: greedy
+        speculative and paged dynamic streams equal the plain static
+        streams bitwise, with one ("dynamic", window) verify signature."""
+        mcfg, scfg, params, cache = self._fleet()
+        reqs = self._trace(mcfg)
+        _, plain = self._run(mcfg, scfg, params, cache, reqs)
+        e_spec, spec = self._run(mcfg, scfg, params, cache, reqs,
+                                 dynamic_grouping=True, speculative_k=2)
+        assert spec == plain
+        assert list(e_spec.compile_counts()["verify"]) == [("dynamic", 3)]
+        e_paged, paged = self._run(mcfg, scfg, params, cache, reqs,
+                                   dynamic_grouping=True, paged=True)
+        assert paged == plain
+        assert e_paged.pool_stats()["used_blocks"] == 0
+
+    def test_max_active_per_adapter_prevents_starvation(self):
+        """SATELLITE: a hot tenant's burst is rate-limited to its slot
+        share — the fleet's other tenants admit and finish while the
+        burst drains, instead of queueing behind it."""
+        mcfg, scfg, params, cache = self._fleet(tenants=2)
+        eng = DecodeEngine(mcfg, scfg, params, slots=3, max_len=self.ML,
+                           adapter_cache=cache, max_active_per_adapter=1)
+        rng = np.random.default_rng(3)
+        p = rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32)
+        hot = [eng.submit(p, adapter="t0", max_new_tokens=4)
+               for _ in range(5)]
+        other = eng.submit(p, adapter="t1", max_new_tokens=4)
+        max_hot = 0
+        while eng.has_work():
+            eng.step()
+            max_hot = max(max_hot, sum(
+                1 for s in eng._slots
+                if s.occupied and s.handle.adapter_id == "t0"))
+        results = {r.request_id: r for r in eng.pop_results()}
+        assert max_hot == 1, \
+            f"rate limit violated: {max_hot} concurrent t0 slots"
+        assert len(results) == 6
+        assert all(r.finish_reason == "length" for r in results.values())
+        # no starvation: t1 finished before the hot burst drained
+        assert results[other].finished_step < max(
+            results[rid].finished_step for rid in hot)
+        # the limit never displaced anyone — it holds requests in the
+        # queue, it does not preempt
+        assert eng.stats().preemptions == 0
+
+    def test_rate_limited_requests_keep_queue_order(self):
+        """Held-back requests keep their queue positions: once the hot
+        tenant's slot frees, its NEXT request admits in FIFO order."""
+        mcfg, scfg, params, cache = self._fleet(tenants=2)
+        eng = DecodeEngine(mcfg, scfg, params, slots=2, max_len=self.ML,
+                           adapter_cache=cache, max_active_per_adapter=1)
+        rng = np.random.default_rng(4)
+        p = rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32)
+        rids = [eng.submit(p, adapter="t0", max_new_tokens=3)
+                for _ in range(3)]
+        results = {r.request_id: r for r in eng.run()}
+        admits = [results[r].admitted_step for r in rids]
+        assert admits == sorted(admits), "rate-limited FIFO order broken"
+
+    def test_dynamic_requires_adapter_cache(self):
+        mcfg, scfg, params, cache = _setup()
+        h = cache.current_handle("t0")
+        fixed = cache.get_state(params, h)
+        with pytest.raises(ValueError, match="dynamic_grouping"):
+            DecodeEngine(mcfg, scfg, params, slots=2, max_len=10,
+                         adapters=fixed, dynamic_grouping=True)
+        with pytest.raises(ValueError, match="max_active_per_adapter"):
+            DecodeEngine(mcfg, scfg, params, slots=2, max_len=10,
+                         adapter_cache=cache, max_active_per_adapter=0)
+
+    def test_dynamic_decode_jaxpr_has_zero_norm_work(self):
+        """The dynamic grouped step keeps the serving contract: zero
+        ``dora_wnorm`` ops per token (all norm work was precomputed)."""
+        mcfg, scfg, params, cache = self._fleet()
+        eng, _ = self._run(mcfg, scfg, params, cache, self._trace(mcfg),
+                           dynamic_grouping=True)
+        step = make_decode_step(mcfg, scfg, batch=3, dynamic_groups=True)
+        groups, adapters = eng._slot_grouping()
+        assert groups == "dynamic"
+        cache_tree = init_cache(mcfg, 3, self.ML, row_lens=True)
+        jaxpr = jax.make_jaxpr(step)(
+            params, adapters, cache_tree,
+            {"tokens": jnp.zeros((3, 1), jnp.int32),
+             "adapter_idx": jnp.zeros((3,), jnp.int32)})
+        assert "dora_wnorm" not in str(jaxpr), \
+            "dynamic decode recomputes norm work per token"
+
+
 # ---------------------------------------------------------------------------
 # Forced 2-device mesh (subprocess): join/leave trace under SPMD.
 # ---------------------------------------------------------------------------

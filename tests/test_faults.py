@@ -510,6 +510,42 @@ class TestDegradationLadder:
         (r,) = eng.run()
         assert r.finish_reason == "length" and r.tokens.shape == (2,)
 
+    def test_spilled_handle_exempt_from_backpressure(self):
+        """ACCEPTANCE (PR 9 tiered cache): a handle whose state sits in
+        the HOST spill tier is never refused with EngineBusy — it costs
+        one host→device reload (queue latency), not the precompute the
+        backpressure guards against — and serving it raises no
+        AdapterCacheMiss even under warm-only routing."""
+        mcfg, scfg, params, cache = _setup(tenants=3)
+        h0 = cache.current_handle("t0")
+        h1 = cache.current_handle("t1")
+        h2 = cache.current_handle("t2")
+        cache.get_state(params, h0)
+        cache.max_bytes = cache.stats().current_bytes   # one state fits
+        cache.host_max_bytes = 10 * cache.max_bytes     # spill tier on
+        cache.get_state(params, h1)                     # evicts t0 → spills
+        assert cache.is_spilled(h0)
+        # freeze the host tier (no further spills) and thrash the device
+        # LRU with the OTHER two tenants: every lookup an evicting miss,
+        # while t0 stays parked in the spill tier
+        cache.host_max_bytes = None
+        for _ in range(3):
+            cache.get_state(params, h2)
+            cache.get_state(params, h1)
+        assert cache.thrashing()
+        assert cache.is_spilled(h0) and not cache.is_resident(h0)
+        eng = DecodeEngine(mcfg, scfg, params, slots=1, max_len=10,
+                           adapter_cache=cache, allow_miss=False)
+        rng = np.random.default_rng(14)
+        p = rng.integers(0, mcfg.vocab_size, 4, dtype=np.int32)
+        # the SPILLED tenant submits and serves despite the thrash —
+        # and despite allow_miss=False (a reload is not a miss)
+        eng.submit(p, adapter="t0", max_new_tokens=2)
+        (r,) = eng.run()
+        assert r.finish_reason == "length" and r.tokens.shape == (2,)
+        assert eng.stats().busy_rejections == 0
+        assert cache.stats().reloads >= 1
+
     def test_stale_handle_still_raises_through_backpressure(self):
         """Backpressure only guards COLD-but-current handles; a stale
         handle keeps its hard AdapterCacheMiss (it can never resolve)."""

@@ -9,6 +9,15 @@ Invariant 2 — compose identity: Y_base + compose(Y_base, Y_lora, g, s)
 Invariant 3 — tier equivalence: eager and interpret-mode fused paths agree.
 
 Invariant 4 — chunking invariance: any chunk budget gives the same norm.
+
+Invariant 5 — speculative rewind is invisible (bitwise never-drafted).
+
+Invariant 6 — fault containment under random FaultPlans.
+
+Invariant 7 — paged block-pool conservation under any interleaving.
+
+Invariant 8 — fleet churn: dynamic grouping serves any adapter churn
+            through ONE decode executable, bitwise the static engine.
 """
 import functools
 
@@ -435,3 +444,140 @@ def test_paged_block_pool_conservation(seed, n_blocks, chunk, spec_k,
     assert ps["per_slot_blocks"] == [0, 0], ps
     results = eng.pop_results()
     assert sorted(r.request_id for r in results) == list(range(n_reqs))
+
+
+# ---------------------------------------------------------------------------
+# Invariant 8 — fleet churn: with N adapters ≫ slots and ANY seeded
+# interleaving of submits, engine ticks, adapter version bumps and cache
+# drops, the DYNAMIC-grouping engine (a) streams every request bitwise
+# identical to the static-signature engine over the same trace (which
+# tests/test_engine.py pins to per-tenant-sequential serving), (b) keeps
+# compile counts churn-invariant — exactly ONE decode executable and ONE
+# stack-insert executable no matter which tenants come and go — and
+# (c) finishes every submitted request exactly once, draining its fleet
+# stack positions with the slot table. This is the PR-9 contract: tenant
+# churn changes VALUES (stack rows, the per-row adapter index), never
+# the compile signature.
+# ---------------------------------------------------------------------------
+
+_FLEET_ML = 14
+_FLEET_SLOTS = 2
+
+
+@functools.lru_cache(maxsize=1)
+def _fleet_setup():
+    from repro.configs import get_config
+    from repro.launch.steps import StepConfig
+    from repro.launch.train import build_state
+
+    mcfg = get_config("qwen2-7b", smoke=True)
+    scfg = StepConfig(dora=DoRAConfig(rank=4, alpha=8.0, mode="eager"))
+    params, _, _ = build_state(mcfg, scfg.dora, 0)
+    _, base, _ = build_state(mcfg, scfg.dora, 10)
+    return mcfg, scfg, params, base
+
+
+def _perturb_b(ad, seed, scale=0.1):
+    """Replace every B leaf with seeded noise: seed-built trees have
+    B == 0, so without this every tenant would stream identical tokens
+    and a mis-indexed fleet stack could never be caught."""
+    key = jax.random.PRNGKey(seed)
+    cnt = [0]
+
+    def go(path, leaf):
+        cnt[0] += 1
+        if "'B'" in "/".join(str(p) for p in path):
+            return scale * jax.random.normal(
+                jax.random.fold_in(key, cnt[0]), leaf.shape, leaf.dtype)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(go, ad)
+
+
+def _fleet_trace(seed, tenants, waves):
+    """A deterministic churny fleet trace: per wave, a burst of submits
+    (random tenant / prompt / budget), a random number of engine ticks,
+    then adapter churn between waves (a version bump re-routing future
+    submits, plus a cache drop making one tenant cold again)."""
+    mcfg, *_ = _fleet_setup()
+    rng = np.random.default_rng(seed)
+    return [{"submits": [(rng.integers(0, mcfg.vocab_size,
+                                       int(rng.integers(3, 7)),
+                                       dtype=np.int32),
+                          int(rng.integers(2, 5)),
+                          int(rng.integers(tenants)))
+                         for _ in range(int(rng.integers(2, 5)))],
+             "ticks": int(rng.integers(1, 6)),
+             "bump": int(rng.integers(tenants)),
+             "drop": int(rng.integers(tenants))}
+            for _ in range(waves)]
+
+
+def _fleet_drive(trace, tenants, dynamic):
+    """Replay a trace through a fresh engine + cache. The fleet is
+    rebuilt from deterministic seeds, so the dynamic and static replays
+    see bit-identical adapters at every point in the trace."""
+    from repro.core import AdapterStateCache
+    from repro.launch.engine import DecodeEngine
+
+    mcfg, scfg, params, base = _fleet_setup()
+    cache = AdapterStateCache.for_serving(mcfg, scfg)
+    for t in range(tenants):
+        cache.register(f"t{t}", _perturb_b(base, 40 + t))
+    eng = DecodeEngine(mcfg, scfg, params, slots=_FLEET_SLOTS,
+                       max_len=_FLEET_ML, adapter_cache=cache,
+                       dynamic_grouping=dynamic)
+    submitted, streams = [], {}
+
+    def collect(results):
+        for r in results:
+            assert r.request_id not in streams, \
+                f"request {r.request_id} finished twice"
+            streams[r.request_id] = (tuple(int(t) for t in r.tokens),
+                                     r.finish_reason)
+
+    for w, wave in enumerate(trace):
+        for p, g, t in wave["submits"]:
+            submitted.append(
+                eng.submit(p, adapter=f"t{t}", max_new_tokens=g))
+        for _ in range(wave["ticks"]):
+            if eng.has_work():
+                eng.step()
+        collect(eng.pop_results())
+        # churn mid-flight: in-flight requests keep their pinned states;
+        # the bump re-routes only FUTURE submits of that tenant, and the
+        # drop makes one tenant cold (re-precomputed on next submit).
+        cache.update(f"t{wave['bump']}", _perturb_b(base, 90 + w))
+        cache.invalidate(f"t{wave['drop']}")
+        if dynamic:
+            counts = eng.compile_counts()
+            assert counts["decode"] == {"dynamic": 1}, (w, counts)
+            assert counts["adapter_insert"] <= 1, (w, counts)
+    collect(eng.run())
+    assert sorted(streams) == sorted(submitted), \
+        "requests lost or double-finished under churn"
+    assert not eng.has_work()
+    if dynamic:
+        counts = eng.compile_counts()
+        assert counts["decode"] == {"dynamic": 1}, counts
+        assert counts["adapter_insert"] == 1, counts
+        assert counts["prefill_into_slot"] == 1, counts
+        # fleet stack positions drain with the slot table
+        assert len(eng._dyn_free) == eng.slots and not eng._dyn_pos
+    return streams
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=_SEED,
+       tenants=st.sampled_from([3, 5]),
+       waves=st.integers(min_value=2, max_value=3))
+def test_fleet_churn_dynamic_matches_static(seed, tenants, waves):
+    """N adapters ≫ slots under a random churny trace: the dynamic
+    engine's streams (tokens AND finish reasons) are bitwise the static
+    engine's, with churn-invariant compile counts and exactly-once
+    completion on both sides."""
+    trace = _fleet_trace(seed, tenants, waves)
+    dyn = _fleet_drive(trace, tenants, dynamic=True)
+    sta = _fleet_drive(trace, tenants, dynamic=False)
+    assert dyn == sta, \
+        "dynamic-grouped streams diverged from the static engine"
