@@ -15,11 +15,11 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 import traceback
 
 from benchmarks import (compose_bench, dense_ba, model_level, norm_memory,
                         rank_scaling, roofline_run, stability)
+from repro.obs import monotonic
 
 SUITES = [
     ("norm_memory", norm_memory.main),
@@ -45,10 +45,10 @@ def main() -> None:
         if name in args.skip:
             continue
         print(f"\n=== {name} " + "=" * (60 - len(name)))
-        t0 = time.time()
+        t0 = monotonic()
         try:
             fn()
-            print(f"=== {name} done in {time.time() - t0:.1f}s")
+            print(f"=== {name} done in {monotonic() - t0:.1f}s")
         except Exception:  # noqa: BLE001 — benchmark isolation
             traceback.print_exc()
             failures.append(name)

@@ -14,7 +14,6 @@ handles, served in ONE grouped decode loop — and checked bitwise against
 serving each tenant alone.
 """
 import sys
-import time
 
 import numpy as np
 
@@ -26,6 +25,7 @@ from repro.launch.serve import (MultiTenantServer,        # noqa: E402
                                 Request, generate)
 from repro.launch.steps import StepConfig                 # noqa: E402
 from repro.launch.train import build_state                # noqa: E402
+from repro.obs import monotonic                     # noqa: E402
 
 
 def main() -> None:
@@ -39,11 +39,11 @@ def main() -> None:
     prompts = rng.integers(0, mcfg.vocab_size, (batch, prompt_len),
                            dtype=np.int32)
 
-    t0 = time.time()
+    t0 = monotonic()
     toks = generate(mcfg, params, adapters, scfg, prompts,
                     gen_len=gen_len, max_len=prompt_len + gen_len,
                     temperature=0.8, seed=42)
-    dt = time.time() - t0
+    dt = monotonic() - t0
     toks = np.asarray(toks)
     print(f"served {batch} requests x {gen_len} new tokens in {dt:.1f}s")
     for b in range(batch):
@@ -75,9 +75,9 @@ def main() -> None:
                 rng.integers(0, mcfg.vocab_size, P, dtype=np.int32),
                 f"tenant-{t}"))
     server = MultiTenantServer(mcfg, scfg, params, cache=cache)
-    t0 = time.time()
+    t0 = monotonic()
     mixed = np.asarray(server.serve(requests, gen_len=G, max_len=P + G))
-    dt = time.time() - t0
+    dt = monotonic() - t0
     st = cache.stats()
     print(f"multi-tenant: {len(requests)} requests / {n_tenants} adapters "
           f"in ONE decode loop, {dt:.1f}s; cache {st.misses} misses -> "

@@ -14,7 +14,6 @@ against serving it alone through ``generate()`` (the oracle contract
 ``tests/test_engine.py`` locks).
 """
 import sys
-import time
 
 import numpy as np
 
@@ -26,6 +25,7 @@ from repro.launch.engine import DecodeEngine              # noqa: E402
 from repro.launch.serve import generate                   # noqa: E402
 from repro.launch.steps import StepConfig                 # noqa: E402
 from repro.launch.train import build_state                # noqa: E402
+from repro.obs import monotonic                     # noqa: E402
 
 
 def main() -> None:
@@ -58,7 +58,7 @@ def main() -> None:
     def on_token(rid: int, tok: int) -> None:
         streamed.setdefault(rid, []).append(tok)
 
-    t0 = time.time()
+    t0 = monotonic()
     i, step = 0, 0
     while i < len(trace) or engine.has_work():
         while i < len(trace) and trace[i][0] <= step:
@@ -69,7 +69,7 @@ def main() -> None:
             print(f"  step {step:>2}: req{r.request_id} retired "
                   f"({r.finish_reason}) -> {r.tokens.tolist()}")
         step += 1
-    dt = time.time() - t0
+    dt = monotonic() - t0
 
     st = engine.stats()
     print(f"served {st.admitted} mixed-length requests through {slots} "

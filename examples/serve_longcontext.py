@@ -30,7 +30,6 @@ the geometry, not the absolute length, is what the assertions lock):
      equivalent (``slots * max_blocks``) and drains to zero.
 """
 import sys
-import time
 
 import numpy as np
 
@@ -42,6 +41,7 @@ from repro.launch.engine import DecodeEngine              # noqa: E402
 from repro.launch.serve import generate                   # noqa: E402
 from repro.launch.steps import StepConfig                 # noqa: E402
 from repro.launch.train import build_state                # noqa: E402
+from repro.obs import monotonic                     # noqa: E402
 
 
 def main() -> None:
@@ -77,7 +77,7 @@ def main() -> None:
     per_tick: dict[int, list[int]] = {}    # tick -> request ids that emitted
     budgets = {}
 
-    t0 = time.time()
+    t0 = monotonic()
     i, tick, long_rid = 0, 0, None
     while i < len(trace) or long_rid is None or engine.has_work():
         while i < len(trace) and trace[i][0] <= tick:
@@ -94,7 +94,7 @@ def main() -> None:
         engine.step(lambda rid, tok, _t=tick:
                     per_tick.setdefault(_t, []).append(rid))
         tick += 1
-    dt = time.time() - t0
+    dt = monotonic() - t0
     results = {r.request_id: r for r in engine.pop_results()}
 
     # 1. Chunked admission never stalled the batch: the long prompt took

@@ -15,7 +15,6 @@ streams anyway (``tests/test_engine.py`` locks this on single-device
 and a 2-device mesh).
 """
 import sys
-import time
 
 import numpy as np
 
@@ -28,6 +27,7 @@ from repro.core import AdapterStateCache, DoRAConfig      # noqa: E402
 from repro.launch.engine import DecodeEngine              # noqa: E402
 from repro.launch.steps import StepConfig                 # noqa: E402
 from repro.launch.train import build_state                # noqa: E402
+from repro.obs import monotonic                     # noqa: E402
 
 SPEC_K = 3
 
@@ -94,9 +94,9 @@ def main() -> None:
     plain = DecodeEngine(mcfg, scfg, params, slots=slots, max_len=max_len,
                          adapter_cache=cache)
 
-    t0 = time.time()
+    t0 = monotonic()
     spec_streams = drive(spec, trace)
-    dt = time.time() - t0
+    dt = monotonic() - t0
     plain_streams = drive(plain, trace)
 
     # The greedy oracle: speculative streams == plain streams,

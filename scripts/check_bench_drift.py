@@ -33,6 +33,11 @@ artifacts:
     pool allocation itself) must stay strictly under the rectangular
     ``slots * max_len`` reservation, and the chunked admission must not
     cost more ticks or decode steps than committed;
+  - ``BENCH_serve.json`` (``obs`` section): the per-request lifecycle
+    model re-simulated from the committed congested arrival trace —
+    queue-wait p50 (admission latency under load) must not grow,
+    occupancy must not shrink, and TTFT must keep coinciding with
+    queue wait (the first token comes from the admission prefill);
   - ``BENCH_serve.json`` (``fleet`` section): the dynamic-grouping
     signature model re-simulated from the committed churny multi-tenant
     trace — the dynamic engine must keep compiling exactly ONE decode
@@ -639,6 +644,96 @@ def check_degraded(artifact_path: str) -> int:
     return 0
 
 
+def check_obs(artifact_path: str) -> int:
+    """Gate the observability lifecycle model (PR 10): re-simulate the
+    committed congested arrival trace's per-request lifecycle ticks
+    (pure host arithmetic mirroring what a ``TraceRecorder`` journals —
+    ``benchmarks.serve_bench.simulate_obs``, asserted equal to a traced
+    REAL engine at artifact-regeneration time) and fail when
+
+      1. queue-wait p50 grows — admission latency on the canonical
+         congested trace is the headline scheduler-quality number;
+      2. queue-wait p90 / TTFT p50 grow or occupancy p50 shrinks;
+      3. TTFT stops coinciding with queue wait tick-for-tick — the
+         first token must keep coming from the admission prefill, not a
+         later decode step;
+      4. the committed trace stops exercising queueing (queue-wait max
+         of zero would make gate 1 vacuous)."""
+    from benchmarks.serve_bench import make_arrival_trace, simulate_obs
+
+    with open(artifact_path) as f:
+        committed = json.load(f)
+    section = committed.get("obs")
+    if not section:
+        print(f"ERROR: no obs section in {artifact_path} — "
+              f"regenerate: python -m benchmarks.serve_bench --smoke "
+              f"--artifact BENCH_serve.json")
+        return 1
+    tp = dict(section["trace"])
+    slots = tp.pop("slots")
+    tp.pop("max_len", None)
+    tp["gen_lens"] = tuple(tp["gen_lens"])
+    trace = make_arrival_trace(**tp)
+    sim = simulate_obs(trace, slots=slots)
+    want = section["lifecycle_model"]
+
+    failures = []
+    improvements = []
+    rows = [("queue_wait p50", sim["queue_wait_ticks"]["p50"],
+             want["queue_wait_ticks"]["p50"], False),
+            ("queue_wait p90", sim["queue_wait_ticks"]["p90"],
+             want["queue_wait_ticks"]["p90"], False),
+            ("ttft p50", sim["ttft_ticks"]["p50"],
+             want["ttft_ticks"]["p50"], False),
+            ("occupancy p50", sim["occupancy"]["p50"],
+             want["occupancy"]["p50"], True),
+            ("admit_to_retire p50", sim["admit_to_retire_ticks"]["p50"],
+             want["admit_to_retire_ticks"]["p50"], None)]
+    for name, now, want_v, higher_is_better in rows:
+        status = "ok"
+        if higher_is_better is None:
+            pass  # gen-length distribution, informational context row
+        elif higher_is_better and now < want_v * (1 - EPS):
+            status = "REGRESSION"
+            failures.append(f"{name}: {want_v:.4f} -> {now:.4f}")
+        elif higher_is_better is False and now > want_v * (1 + EPS):
+            status = "REGRESSION"
+            failures.append(f"{name}: {want_v:.4f} -> {now:.4f}")
+        elif (higher_is_better and now > want_v * (1 + EPS)) or \
+                (higher_is_better is False and now < want_v * (1 - EPS)):
+            status = "improved"
+            improvements.append(name)
+        print(f"  {name:>24}: {want_v:>10.4f} -> {now:>10.4f}  [{status}]")
+    if sim["ttft_ticks"] != sim["queue_wait_ticks"]:
+        failures.append(
+            f"TTFT {sim['ttft_ticks']} no longer coincides with queue "
+            f"wait {sim['queue_wait_ticks']} — the first token must come "
+            f"from the admission prefill itself, not a later decode tick")
+    if sim["queue_wait_ticks"]["max"] <= 0:
+        failures.append(
+            "the committed trace no longer exercises queueing (queue-wait "
+            "max is 0) — the queue-wait gate would be vacuous; tighten "
+            "mean_interarrival in run_obs")
+    if failures:
+        print("\nobs-drift FAIL:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        print("If intentional, regenerate and justify in the PR:\n"
+              "  python -m benchmarks.serve_bench --smoke --artifact "
+              "BENCH_serve.json")
+        return 1
+    if improvements:
+        print(f"\nobs-drift OK (improved: {', '.join(improvements)}) — "
+              f"regenerate BENCH_serve.json to record the better "
+              f"lifecycle numbers.")
+    else:
+        print("\nobs-drift OK: the re-simulated lifecycle percentiles "
+              "match the committed artifact; queue-wait p50 "
+              f"{want['queue_wait_ticks']['p50']:.0f} ticks holds on the "
+              "congested trace.")
+    return 0
+
+
 if __name__ == "__main__":
     if len(sys.argv) > 1:
         compose_path, serve_path = sys.argv[1], (
@@ -660,4 +755,6 @@ if __name__ == "__main__":
     rc = check_degraded(serve_path) or rc
     print()
     rc = check_fleet(serve_path) or rc
+    print()
+    rc = check_obs(serve_path) or rc
     sys.exit(rc)

@@ -38,10 +38,13 @@
 #            prefill: block pool, paged==rect bitwise, check_paged gate)
 #   post-PR9 443 passed / 0 failed / 2 skipped (fleet serving: traced
 #            dynamic grouping, tiered adapter cache, churn fuzzer)
+#   post-PR10 474 passed / 0 failed / 2 skipped (observability: lifecycle
+#            tracing, latency histograms, metrics export; tracing
+#            on == off bitwise)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-MIN_PASS="${REPRO_TIER1_MIN_PASS:-443}"
+MIN_PASS="${REPRO_TIER1_MIN_PASS:-474}"
 MAX_FAIL="${REPRO_TIER1_MAX_FAIL:-0}"
 if [ "${REPRO_TIER1_INSTALL_DEV:-0}" = "1" ]; then
     pip install -q -r requirements-dev.txt
@@ -121,8 +124,43 @@ python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \
     --prompt-len 16 --gen-len 4 --continuous --speculative 3
 echo
 echo "fault-injection serve smoke (tier ${TIER}): quarantine + deadlines"
+echo "  + obs: --trace-out/--metrics-out on the faulty run, then assert"
+obs_trace="$(mktemp --suffix=.jsonl)"
+obs_prom="$(mktemp --suffix=.prom)"
 python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \
-    --prompt-len 16 --gen-len 4 --continuous --inject nan@3 --deadline 8
+    --prompt-len 16 --gen-len 4 --continuous --inject nan@3 --deadline 8 \
+    --trace-out "$obs_trace" --metrics-out "$obs_prom"
+# The poisoned request's lifecycle must end quarantined ->
+# terminal(error_numeric), and the metrics snapshot must parse as
+# Prometheus text with the quarantine counter visible.
+python - "$obs_trace" "$obs_prom" <<'PY'
+import json, sys
+from repro.obs import parse_prometheus
+by_rid = {}
+with open(sys.argv[1]) as f:
+    for line in f:
+        e = json.loads(line)
+        if e.get("request_id") is not None:
+            by_rid.setdefault(e["request_id"], []).append(e)
+poisoned = [rid for rid, evs in by_rid.items()
+            if any(e["name"] == "quarantined" for e in evs)]
+assert poisoned, "nan@3 left no quarantined request in the trace"
+for rid in poisoned:
+    names = [e["name"] for e in by_rid[rid]]
+    assert names[-2:] == ["quarantined", "terminal"], \
+        f"rid {rid}: lifecycle tail {names[-2:]} != quarantined->terminal"
+    term = by_rid[rid][-1]
+    assert term["data"]["reason"] == "error_numeric", term
+parsed = parse_prometheus(open(sys.argv[2]).read())
+assert parsed["repro_engine_quarantined_total"] >= 1, \
+    "quarantine counter missing from the Prometheus snapshot"
+assert any(k.startswith('repro_requests_finished_total{reason="error_numeric"')
+           for k in parsed), sorted(parsed)[:5]
+print(f"obs smoke OK: {len(poisoned)} poisoned request(s) traced "
+      f"quarantined -> terminal(error_numeric); metrics parse as "
+      f"Prometheus ({len(parsed)} series, quarantine visible)")
+PY
+rm -f "$obs_trace" "$obs_prom"
 echo
 echo "paged serve smoke (tier ${TIER}): block pool + chunked prefill + oracle"
 python -m repro.launch.serve --arch qwen2-7b --smoke --batch 2 \

@@ -71,7 +71,14 @@ def _atomic_write_json(path: str, obj) -> None:
 
 
 class Heartbeat:
-    """Per-host liveness/progress file."""
+    """Per-host liveness/progress file.
+
+    Deliberately stamps EPOCH time (``time.time()``), not the monotonic
+    clock the rest of the repo uses (``repro.obs.monotonic``): the
+    heartbeat is read by OTHER processes (StragglerMonitor on the
+    launcher), and monotonic clocks are not comparable across process
+    boundaries. This is the one sanctioned wall-epoch timestamp.
+    """
 
     def __init__(self, directory: str, process_index: int):
         self.path = os.path.join(directory, f"host_{process_index:05d}.json")

@@ -209,6 +209,11 @@ class AdapterStateCache:
         self._spills = 0
         self._reloads = 0
         self._host_drops = 0
+        # Observability hook: ``on_event(kind, key)`` fires on tier
+        # traffic ("spill" / "reload"). The engine claims it when built
+        # with a trace recorder (repro.obs) — it must stay cheap and
+        # must never raise; None (the default) costs one attribute read.
+        self.on_event: Callable[[str, AdapterKey], None] | None = None
         # Sliding window over the last `thrash_window` lookups: True iff
         # the lookup was a miss whose insertion evicted someone. All-True
         # (with a full window) = the working set cannot fit — every
@@ -319,6 +324,8 @@ class AdapterStateCache:
             self._host_bytes -= nbytes
             state = _tree_to_device(host_tree, sh_tree)
             self._reloads += 1
+            if self.on_event is not None:
+                self.on_event("reload", key)
             self._lru[key] = (state, nbytes)
             self._current_bytes += nbytes
             self._evict_over_budget()
@@ -357,6 +364,8 @@ class AdapterStateCache:
                 self._host[key] = (host_tree, sh_tree, nbytes)
                 self._host_bytes += nbytes
                 self._spills += 1
+                if self.on_event is not None:
+                    self.on_event("spill", key)
                 self._shrink_host_tier()
 
     def _shrink_host_tier(self) -> None:

@@ -8,7 +8,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # ruff: noqa: E402
 import argparse
 import json
-import time
 import traceback
 
 import jax
@@ -17,6 +16,7 @@ from repro.compat import xla as cxla
 from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import StepConfig, cell_specs
+from repro.obs import monotonic
 from repro.roofline import HW, analyze_hlo_text, model_flops, roofline_terms
 
 
@@ -25,7 +25,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              verbose: bool = True, keep_hlo: bool = False) -> dict:
     """Lower + compile one cell on the production mesh; return the record
     (memory analysis, cost analysis, roofline terms)."""
-    t0 = time.time()
+    t0 = monotonic()
     mesh = make_production_mesh(multi_pod=multi_pod)
     scfg = scfg or StepConfig()
     cell = cell_specs(arch, shape_name, mesh, scfg=scfg)
@@ -36,7 +36,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                          donate_argnums=cell["donate"])
         lowered = jitted.lower(*cell["args"])
         compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = monotonic() - t0
 
     mem = compiled.memory_analysis()
     peak_bytes = cxla.peak_memory_bytes(compiled)

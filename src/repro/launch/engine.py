@@ -90,6 +90,7 @@ from repro.launch.steps import (StepConfig, make_decode_step,
                                 make_verify_step)
 from repro.models import init_cache
 from repro.models.config import ModelConfig
+from repro.obs.trace import TraceRecorder
 
 #: Every finish_reason a RequestResult can carry.
 #:   eos           the request's eos_id was sampled
@@ -317,6 +318,17 @@ class DecodeEngine:
     none of it adds executables: preempt/resume, quarantine and timeout
     reuse the same traced prefill/decode/verify steps
     (``compile_counts()`` is fault-invariant).
+
+    Observability (PR 10): ``trace=`` takes a
+    :class:`repro.obs.TraceRecorder`; the engine then emits one
+    structured lifecycle event per transition (``submitted → queued →
+    admitted → chunk_prefill* → first_token → token* → {preempted,
+    resumed}* → terminal``) plus fault/ladder/cache events, each stamped
+    with the engine tick and a monotonic wall time. The recorder reads
+    ONLY host mirrors the scheduler already maintains — tracing on vs.
+    off leaves streams bitwise identical, ``compile_counts()``
+    unchanged, and adds zero device fetches (tests/test_obs.py;
+    docs/observability.md).
     """
 
     def __init__(self, mcfg: ModelConfig, scfg: StepConfig, params, *,
@@ -335,7 +347,8 @@ class DecodeEngine:
                  paged: bool = False,
                  block_size: int | None = None,
                  n_blocks: int | None = None,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None,
+                 trace: TraceRecorder | None = None):
         kinds = mcfg.layer_kinds()
         if any(k != "attn" for k in kinds):
             raise NotImplementedError(
@@ -545,6 +558,29 @@ class DecodeEngine:
         self._stale_pending = False    # next admission gets a stale handle
         self._spec_rates: list[float] = []   # recent per-tick accept rates
         self._spec_cooldown = 0        # plain ticks left before re-enable
+        # -- observability (PR 10) -----------------------------------------
+        # The recorder only ever receives host scalars the scheduler
+        # already holds; a None trace makes every emit a single attribute
+        # check. The adapter cache's spill/reload hook is claimed only
+        # when tracing — an untraced engine leaves the cache untouched.
+        self.trace = trace
+        if trace is not None and adapter_cache is not None:
+            adapter_cache.on_event = self._cache_event
+
+    # -- observability -------------------------------------------------------
+
+    def _emit(self, name: str, *, rid: int | None = None,
+              slot: int | None = None, **data) -> None:
+        """Record one lifecycle event (no-op untraced). Every argument
+        must already be host state — this path adds zero device work."""
+        if self.trace is not None:
+            self.trace.emit(name, tick=self._steps, request_id=rid,
+                            slot=slot, **data)
+
+    def _cache_event(self, kind: str, key) -> None:
+        """AdapterStateCache tier-traffic hook: ``spill`` / ``reload``
+        events land on the engine's trace at the current tick."""
+        self._emit(kind, adapter=key.adapter_id, version=key.version)
 
     # -- submission ---------------------------------------------------------
 
@@ -600,6 +636,9 @@ class DecodeEngine:
                     cur = None
                 if cur == handle:
                     self._busy_rejections += 1
+                    self._emit("busy_rejected", adapter=handle.adapter_id,
+                               version=handle.version,
+                               retry_after=self.adapter_cache.thrash_window)
                     raise EngineBusy(
                         f"adapter-state cache is thrashing (last "
                         f"{self.adapter_cache.thrash_window} lookups were "
@@ -657,6 +696,12 @@ class DecodeEngine:
             priority=int(priority),
             deadline_step=(None if deadline_ticks is None
                            else self._steps + int(deadline_ticks))))
+        self._emit("submitted", rid=rid, prompt_len=int(prompt.shape[0]),
+                   max_new_tokens=int(max_new_tokens),
+                   adapter=(None if handle is None else handle.adapter_id),
+                   priority=int(priority),
+                   deadline_ticks=deadline_ticks)
+        self._emit("queued", rid=rid, depth=len(self._queue))
         return rid
 
     # -- scheduling ---------------------------------------------------------
@@ -844,6 +889,9 @@ class DecodeEngine:
             admitted_step=(slot.admitted_step if req.first_admitted is None
                            else req.first_admitted),
             finished_step=self._steps, preempted=req.preempted)
+        self._emit("terminal", rid=req.request_id, slot=slot.idx,
+                   reason=reason,
+                   n_tokens=len(prefix) + len(slot.generated))
         if reason == "timeout":
             self._timeouts += 1
         elif reason == "error_numeric":
@@ -866,6 +914,10 @@ class DecodeEngine:
         slot.budget -= 1
         slot.last_token = tok
         self._generated += 1
+        self._emit(("first_token"
+                    if slot.n_prior + len(slot.generated) == 1
+                    else "token"),
+                   rid=slot.req.request_id, slot=slot.idx, token=tok)
         if on_token is not None:
             on_token(slot.req.request_id, tok)
         if slot.req.eos_id is not None and tok == slot.req.eos_id:
@@ -888,6 +940,8 @@ class DecodeEngine:
             error_message=str(e), preempted=req.preempted)
         res._live_error = e
         self._results[req.request_id] = res
+        self._emit("terminal", rid=req.request_id, reason="error",
+                   error_type=type(e).__name__)
 
     def _timeout_queued(self, req: EngineRequest) -> None:
         """Retire a QUEUED request whose deadline expired: it never held
@@ -903,6 +957,8 @@ class DecodeEngine:
             admitted_step=(self._steps if req.first_admitted is None
                            else req.first_admitted),
             finished_step=self._steps, preempted=req.preempted)
+        self._emit("terminal", rid=req.request_id, reason="timeout",
+                   queued=True)
         self._timeouts += 1
 
     def _expire_deadlines(self) -> None:
@@ -936,15 +992,22 @@ class DecodeEngine:
         if d > 0:
             time.sleep(d)
             self._slow_ticks += 1
+            self._emit("fault", kind="slow", seconds=d)
         if plan.evict_at(self._steps) and self.adapter_cache is not None:
             # Pinned slot/request states are untouched (containment); the
             # NEXT cold lookup pays a re-precompute — or errors, under
             # warm-only routing.
             self.adapter_cache.invalidate()
             self._forced_evictions += 1
+            self._emit("fault", kind="evict")
         if plan.stale_at(self._steps):
             self._stale_pending = True
+            self._emit("fault", kind="stale")
         self._nan_tick = plan.nan_slots(self._steps)
+        if self._nan_tick:
+            self._emit("fault", kind="nan",
+                       slots=[(-1 if t is None else int(t))
+                              for t in self._nan_tick])
 
     def _nan_targets(self, rows: list[int]) -> list[int]:
         """Which of ``rows`` this tick's plan poisons (None = all)."""
@@ -1016,6 +1079,9 @@ class DecodeEngine:
         continuation to build — and returns its reserved blocks."""
         slot = self._slots[idx]
         req = slot.req
+        self._emit("preempted", rid=req.request_id, slot=idx,
+                   mid_admission=slot.prefilling,
+                   n_generated=len(slot.generated))
         if slot.prefilling:
             self._queue.append(dataclasses.replace(
                 req, preempted=req.preempted + 1))
@@ -1113,6 +1179,11 @@ class DecodeEngine:
             slot.prefilling = True
             slot.chunk_next = 0
             self._ensure_blocks(idx, P + 1)
+            self._emit("admitted", rid=req.request_id, slot=idx,
+                       prompt_len=P, paged=True)
+            if req.preempted:
+                self._emit("resumed", rid=req.request_id, slot=idx,
+                           attempt=req.preempted)
             return True
         if self._dynamic:
             # Claim the fleet-stack position BEFORE the prefill: a
@@ -1132,6 +1203,10 @@ class DecodeEngine:
         slot.handle = req.adapter
         slot.state = state
         slot.admitted_step = self._steps
+        self._emit("admitted", rid=req.request_id, slot=idx, prompt_len=P)
+        if req.preempted:
+            self._emit("resumed", rid=req.request_id, slot=idx,
+                       attempt=req.preempted)
         slot.pos = P    # first decode K/V write lands at P
         slot.n_prior = 0 if req.prefix is None else int(req.prefix.shape[0])
         # Token budget: the request's own cap, or the cache bound
@@ -1152,6 +1227,8 @@ class DecodeEngine:
         if not np.isfinite(row).all():
             # Quarantine at admission: the prefill produced non-finite
             # logits for THIS row — retire it before it ever decodes.
+            self._emit("quarantined", rid=req.request_id, slot=idx,
+                       at="admission")
             self._finish(slot, "error_numeric")
             return True
         tok = self._sample_rows([row], [(req.key_id, slot.n_prior)])[0]
@@ -1394,6 +1471,7 @@ class DecodeEngine:
             self._spec_cooldown -= 1
             if self._spec_cooldown == 0:
                 self._spec_reenables += 1
+                self._emit("spec_reenabled")
             return False
         k = self.speculative_k
         if not all(self._slots[i].pos + k + 1 <= self.max_len
@@ -1426,6 +1504,8 @@ class DecodeEngine:
         flat = logits_np.reshape(logits_np.shape[0], -1)
         bad = [i for i in rows if not np.isfinite(flat[i]).all()]
         for i in bad:
+            self._emit("quarantined", rid=self._slots[i].req.request_id,
+                       slot=i, at="decode")
             self._finish(self._slots[i], "error_numeric")
         if bad:
             rows = [i for i in rows if self._slots[i].active]
@@ -1465,6 +1545,8 @@ class DecodeEngine:
                 start, c_len = slot.chunk_next, C
             toks = np.zeros((1, C), np.int32)
             toks[0, :c_len] = req.prompt[start:start + c_len]
+            self._emit("chunk_prefill", rid=req.request_id, slot=idx,
+                       start=start, chunk_len=c_len, final=final)
             self._flush_pages()
             logits, self.cache = self._chunk_prefill(
                 self.params, slot.state, self.cache,
@@ -1492,6 +1574,8 @@ class DecodeEngine:
                 row = np.full_like(row, np.nan)
                 self._injected_nans += 1
             if not np.isfinite(row).all():
+                self._emit("quarantined", rid=req.request_id, slot=idx,
+                           at="admission")
                 self._finish(slot, "error_numeric")
                 continue
             tok = self._sample_rows([row], [(req.key_id, slot.n_prior)])[0]
@@ -1633,6 +1717,8 @@ class DecodeEngine:
                     < self.spec_accept_floor):
                 self._spec_cooldown = self.spec_reenable_after
                 self._spec_disables += 1
+                self._emit("spec_disabled",
+                           cooldown=self.spec_reenable_after)
                 self._spec_rates.clear()
 
     def step(self, on_token=None) -> list[RequestResult]:

@@ -29,7 +29,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import os
-import time
 from typing import Any, Sequence
 
 import jax
@@ -44,6 +43,10 @@ from repro.core.adapter_cache import (AdapterHandle, AdapterStateCache,
 from repro.launch.steps import StepConfig, make_decode_step, \
     make_precompute_step, make_prefill_step
 from repro.launch.train import build_state
+# monotonic (time.perf_counter) for every wall-clock delta: time.time()
+# can step backwards under NTP and is banned from latency math here
+# (the one sanctioned epoch-time user is the checkpoint heartbeat).
+from repro.obs import TraceRecorder, engine_metrics, monotonic
 
 
 def _check_cache_mesh(cache: AdapterStateCache, mesh) -> None:
@@ -220,13 +223,18 @@ class MultiTenantServer:
                  cache: AdapterStateCache, mesh=None,
                  max_cached_steps: int = 32, engine_slots: int = 8,
                  dynamic_grouping: bool = False,
-                 max_active_per_adapter: int | None = None):
+                 max_active_per_adapter: int | None = None,
+                 trace: TraceRecorder | None = None):
         _check_cache_mesh(cache, mesh)
         self.mcfg = mcfg
         self.scfg = scfg
         self.params = params
         self.cache = cache
         self.mesh = mesh
+        # Observability pass-through: every engine this server builds
+        # emits its lifecycle events into this one recorder (the static
+        # batch path has no per-request scheduling to trace).
+        self.trace = trace
         # Fleet knobs, threaded into every engine this server builds:
         # dynamic_grouping swaps the engine's static group signatures for
         # the traced fleet stack (one decode executable under churn);
@@ -291,7 +299,8 @@ class MultiTenantServer:
                                adapter_cache=self.cache, mesh=self.mesh,
                                dynamic_grouping=self.dynamic_grouping,
                                max_active_per_adapter=(
-                                   self.max_active_per_adapter))
+                                   self.max_active_per_adapter),
+                               trace=self.trace)
             self._engines[key] = eng
             while len(self._engines) > self.max_cached_engines:
                 self._engines.popitem(last=False)
@@ -487,7 +496,8 @@ class EngineServer:
                  n_blocks: int | None = None,
                  prefill_chunk: int | None = None,
                  dynamic_grouping: bool = False,
-                 max_active_per_adapter: int | None = None):
+                 max_active_per_adapter: int | None = None,
+                 trace: TraceRecorder | None = None):
         from repro.launch.engine import DecodeEngine
         _check_cache_mesh(cache, mesh)
         self.cache = cache
@@ -503,7 +513,8 @@ class EngineServer:
                                    prefill_chunk=prefill_chunk,
                                    dynamic_grouping=dynamic_grouping,
                                    max_active_per_adapter=(
-                                       max_active_per_adapter))
+                                       max_active_per_adapter),
+                                   trace=trace)
 
     def run(self, requests: Sequence[Request], *, gen_len: int,
             eos_id: int | None = None, on_token=None,
@@ -559,6 +570,27 @@ class EngineServer:
                 for i, (p, h) in enumerate(checked)]
         results = {res.request_id: res for res in self.engine.run(on_token)}
         return [results[rid] for rid in rids]
+
+
+def _dump_obs(trace: TraceRecorder, engine, args) -> None:
+    """Write the post-run observability artifacts requested on the CLI:
+    ``--trace-out`` (JSONL if the path ends .jsonl, else Chrome
+    trace_event) and ``--metrics-out`` (Prometheus text)."""
+    if args.trace_out:
+        if args.trace_out.endswith(".jsonl"):
+            trace.to_jsonl(args.trace_out)
+            kind = "jsonl"
+        else:
+            trace.to_chrome_trace(args.trace_out)
+            kind = "chrome-trace"
+        print(f"  obs: {len(trace)} events ({trace.dropped} dropped) -> "
+              f"{args.trace_out} ({kind})")
+    if args.metrics_out:
+        # engine_metrics folds the trace-derived latency histograms in
+        # when handed the recorder.
+        engine_metrics(engine, trace).to_prometheus(args.metrics_out)
+        print(f"  obs: metrics snapshot -> {args.metrics_out} "
+              f"(prometheus text)")
 
 
 def main() -> None:
@@ -620,6 +652,17 @@ def main() -> None:
                          "priority N — it admits ahead of the FIFO (and "
                          "would preempt a lower-priority active row if it "
                          "arrived mid-flight with every slot busy)")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="with --continuous/--fleet: record the request "
+                         "lifecycle and write it here — JSONL (one event "
+                         "per line) when PATH ends in .jsonl, else a "
+                         "Chrome trace_event timeline loadable in "
+                         "Perfetto / chrome://tracing")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="with --continuous/--fleet: write an engine "
+                         "metrics snapshot here — Prometheus text "
+                         "exposition format (counters, gauges, and "
+                         "tick/seconds latency histograms)")
     args = ap.parse_args()
 
     mcfg = get_config(args.arch, smoke=args.smoke)
@@ -641,13 +684,15 @@ def main() -> None:
             int(rng.integers(args.prompt_len // 2, args.prompt_len + 1)),
             dtype=np.int32), f"tenant-{int(rng.integers(args.fleet))}")
             for _ in range(n_req)]
+        trace = (TraceRecorder()
+                 if (args.trace_out or args.metrics_out) else None)
         dyn = EngineServer(mcfg, scfg, params, cache=cache,
                            slots=args.batch, max_len=max_len,
                            temperature=args.temperature, seed=args.seed,
-                           dynamic_grouping=True)
-        t0 = time.time()
+                           dynamic_grouping=True, trace=trace)
+        t0 = monotonic()
         results = dyn.run(requests, gen_len=args.gen_len)
-        dt = time.time() - t0
+        dt = monotonic() - t0
         st = dyn.engine.stats()
         counts = dyn.engine.compile_counts()
         assert counts["decode"] == {"dynamic": 1}, (
@@ -673,6 +718,8 @@ def main() -> None:
             n_sigs = len(static.engine.compile_counts()["decode"])
             print(f"  dynamic greedy streams == static engine (oracle "
                   f"OK; static needed {n_sigs} decode signatures)")
+        if trace is not None:
+            _dump_obs(trace, dyn.engine, args)
         for r in results[:2]:
             print(f"  req{r.request_id}: P={len(r.prompt)} "
                   f"-> {r.tokens.tolist()} ({r.finish_reason})")
@@ -691,19 +738,22 @@ def main() -> None:
             0, mcfg.vocab_size,
             int(rng.integers(args.prompt_len // 2, args.prompt_len + 1)),
             dtype=np.int32), "tenant-0") for _ in range(n_req)]
+        trace = (TraceRecorder()
+                 if (args.trace_out or args.metrics_out) else None)
         server = EngineServer(mcfg, scfg, params, cache=cache,
                               slots=args.batch, max_len=max_len,
                               temperature=args.temperature, seed=args.seed,
                               speculative_k=args.speculative,
                               fault_plan=plan, paged=args.paged,
-                              block_size=args.block_size or None)
-        t0 = time.time()
+                              block_size=args.block_size or None,
+                              trace=trace)
+        t0 = monotonic()
         results = server.run(
             requests, gen_len=args.gen_len,
             deadline_ticks=args.deadline if args.deadline > 0 else None,
             priority=([0] * (n_req - 1) + [args.priority]
                       if args.priority > 0 else 0))
-        dt = time.time() - t0
+        dt = monotonic() - t0
         st = server.engine.stats()
         print(f"continuous: {n_req} mixed-length requests through "
               f"{args.batch} slots in {dt:.2f}s "
@@ -770,6 +820,8 @@ def main() -> None:
                   f"{st.verify_steps} verify + {st.draft_steps} draft "
                   f"steps, {st.accepted_drafts} drafts accepted; greedy "
                   f"streams == plain engine (oracle OK)")
+        if trace is not None:
+            _dump_obs(trace, server.engine, args)
         for r in results[:2]:
             print(f"  req{r.request_id}: P={len(r.prompt)} "
                   f"-> {r.tokens.tolist()} ({r.finish_reason})")
@@ -786,12 +838,12 @@ def main() -> None:
                     rng.integers(0, mcfg.vocab_size, args.prompt_len,
                                  dtype=np.int32), f"tenant-{t}"))
         server = MultiTenantServer(mcfg, scfg, params, cache=cache)
-        t0 = time.time()
+        t0 = monotonic()
         toks = np.asarray(server.serve(requests, gen_len=args.gen_len,
                                        max_len=max_len,
                                        temperature=args.temperature,
                                        seed=args.seed))
-        dt = time.time() - t0
+        dt = monotonic() - t0
         st = cache.stats()
         print(f"served {len(requests)} requests x {args.tenants} tenants "
               f"in {dt:.2f}s ({len(requests) * args.gen_len / dt:.1f} "
@@ -803,13 +855,13 @@ def main() -> None:
 
     prompts = rng.integers(0, mcfg.vocab_size,
                            (args.batch, args.prompt_len), dtype=np.int32)
-    t0 = time.time()
+    t0 = monotonic()
     toks = generate(mcfg, params, adapters, scfg, prompts,
                     gen_len=args.gen_len, max_len=max_len,
                     temperature=args.temperature, seed=args.seed,
                     cache_adapters=not args.no_adapter_cache,
                     fold_gsb=args.fold_gsb)
-    dt = time.time() - t0
+    dt = monotonic() - t0
     toks = np.asarray(toks)
     print(f"generated [{toks.shape[0]}, {toks.shape[1]}] in {dt:.2f}s "
           f"({args.batch * args.gen_len / dt:.1f} tok/s)")

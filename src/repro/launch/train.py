@@ -17,7 +17,6 @@ from ``make_production_mesh``; per-host data sharding from
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +30,7 @@ from repro.core import DoRAConfig
 from repro.data import DataConfig, make_train_iterator, prefetch
 from repro.launch.steps import StepConfig, make_train_step
 from repro.models import init_adapters, init_params
+from repro.obs import monotonic
 from repro.optim import OptimizerConfig, adamw_init
 
 
@@ -80,7 +80,7 @@ def train(args) -> dict:
     hb = Heartbeat(args.heartbeat_dir, jax.process_index()) \
         if args.heartbeat_dir else None
     losses = []
-    t_start = time.time()
+    t_start = monotonic()
     with PreemptionHandler() as pre:
         for step in range(start_step, args.steps):
             batch = {k: jnp.asarray(v) for k, v in next(it).items()}
@@ -108,7 +108,7 @@ def train(args) -> dict:
                     mesh_meta={"model": 1})
             if pre.preempted:
                 break
-    dt = time.time() - t_start
+    dt = monotonic() - t_start
     steps_done = len(losses)
     print(f"done: {steps_done} steps in {dt:.1f}s "
           f"({dt / max(steps_done, 1):.2f} s/step); "

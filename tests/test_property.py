@@ -18,6 +18,13 @@ Invariant 7 — paged block-pool conservation under any interleaving.
 
 Invariant 8 — fleet churn: dynamic grouping serves any adapter churn
             through ONE decode executable, bitwise the static engine.
+
+Invariant 9 — trace event conservation: over ANY random fault plan and
+            preemption schedule, every submitted request's lifecycle
+            trace has exactly one submitted and one terminal event (the
+            terminal last, its reason a valid finish reason), ticks
+            monotone along the request's own sequence, preempt/resume
+            balanced, and token events conserved against the results.
 """
 import functools
 
@@ -581,3 +588,99 @@ def test_fleet_churn_dynamic_matches_static(seed, tenants, waves):
     sta = _fleet_drive(trace, tenants, dynamic=False)
     assert dyn == sta, \
         "dynamic-grouped streams diverged from the static engine"
+
+
+# ---------------------------------------------------------------------------
+# Invariant 9 — trace event conservation: observability is an append-only
+# journal of what the engine ALREADY did, so whatever faults or
+# preemptions a random schedule throws, the journal must balance —
+# exactly one terminal per submitted request, monotone ticks per
+# request, preempt/resume paired, token events equal to tokens returned.
+# ---------------------------------------------------------------------------
+
+def _obs_fault_drive(plan, deadline, priority):
+    from repro.launch.engine import DecodeEngine
+    from repro.obs import TraceRecorder
+
+    mcfg, scfg, params, cache, prompts = _fault_setup()
+    rec = TraceRecorder()
+    eng = DecodeEngine(mcfg, scfg, params, slots=2, max_len=_FAULT_ML,
+                       adapter_cache=cache, fault_plan=plan, trace=rec)
+    for i in range(3):
+        eng.submit(prompts[i], adapter="t0",
+                   max_new_tokens=_FAULT_REQS[i][1], key_id=i,
+                   deadline_ticks=deadline if i == 2 else None)
+    for _ in range(2):          # let the slot table fill and decode
+        if eng.has_work():
+            eng.step()
+    # the late arrival: priority>0 preempts a running row (slots full)
+    eng.submit(prompts[3], adapter="t0",
+               max_new_tokens=_FAULT_REQS[3][1], key_id=3,
+               priority=priority)
+    return eng.run(), eng, rec
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=_SEED,
+       n_nan=st.integers(min_value=0, max_value=1),
+       n_evict=st.integers(min_value=0, max_value=1),
+       n_slow=st.integers(min_value=0, max_value=1),
+       priority=st.sampled_from([0, 5]),
+       deadline=st.sampled_from([None, 3]))
+def test_trace_event_conservation(seed, n_nan, n_evict, n_slow,
+                                  priority, deadline):
+    from repro.launch.engine import FINISH_REASONS
+    from repro.launch.faults import FaultPlan
+
+    plan = FaultPlan.random(seed, steps=12, slots=2, n_nan=n_nan,
+                            n_evict=n_evict, n_slow=n_slow)
+    results, eng, rec = _obs_fault_drive(plan, deadline, priority)
+    assert rec.dropped == 0
+    by_rid = {r.request_id: r for r in results}
+
+    # (a) exactly-once lifecycle per submitted request
+    assert rec.request_ids() == sorted(by_rid) == [0, 1, 2, 3]
+    n_pre_total = 0
+    for rid, r in by_rid.items():
+        evs = rec.events(request_id=rid)
+        names = [e.name for e in evs]
+        assert names.count("submitted") == 1, (rid, names)
+        assert names.count("terminal") == 1, (rid, names)
+        assert names[0] == "submitted" and names[-1] == "terminal", \
+            (rid, names)
+        term = evs[-1]
+        assert term.data["reason"] in FINISH_REASONS
+        assert term.data["reason"] == r.finish_reason, (rid, plan)
+
+        # (b) ticks monotone along this request's own sequence
+        ticks = [e.tick for e in evs]
+        assert ticks == sorted(ticks), (rid, list(zip(names, ticks)))
+
+        # (c) preempt/resume balance: every resume follows a preempt;
+        # at most one preemption can end un-resumed (the victim timed
+        # out or was quarantined while queued)
+        n_pre = names.count("preempted")
+        n_res = names.count("resumed")
+        assert n_res <= n_pre <= n_res + 1, (rid, names)
+        assert n_pre == r.preempted, (rid, plan)
+        n_pre_total += n_pre
+        # every seating is an admitted event: initial + one per resume;
+        # a never-admitted request (queued timeout) has neither
+        n_adm = names.count("admitted")
+        if n_adm:
+            assert n_adm == n_res + 1, (rid, names)
+        else:
+            assert n_pre == 0 and n_res == 0, (rid, names)
+
+        # (d) token conservation: the journal saw every returned token
+        n_tok = names.count("first_token") + names.count("token")
+        assert n_tok == len(r.tokens), (rid, names, r.tokens)
+        if len(r.tokens):
+            assert names.count("first_token") == 1, (rid, names)
+
+    # (e) the journal's totals tally with the engine's own counters
+    st_ = eng.stats()
+    assert n_pre_total == st_.preemptions
+    assert len(rec.events("quarantined")) == st_.quarantined
+    assert sum(1 for r in results if r.finish_reason == "timeout") \
+        == st_.timeouts
